@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing + CSV rows (name,us_per_call,derived)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_us(fn: Callable, iters: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def falcon3_config(member: str):
+    """ModelConfig for a Falcon3 family member (paper Tables I/II)."""
+    from repro.configs.base import BitNetConfig, ModelConfig
+    from repro.configs.falcon3_1b import FALCON3_FAMILY
+
+    dims = FALCON3_FAMILY[member]
+    return ModelConfig(
+        name=member, family="dense",
+        bitnet=BitNetConfig(lora_rank=16, lora_bits=6),
+        **dims,
+    )
+
+
+def lora_dims_for(cfg, targets) -> list:
+    """(d_in, d_out) pairs of the adapted projections, all layers."""
+    d, f = cfg.d_model, cfg.d_ff
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    per_layer = {
+        "q": (d, h * hd),
+        "k": (d, g * hd),
+        "v": (d, g * hd),
+        "o": (h * hd, d),
+        "g": (d, f),
+        "u": (d, f),
+        "down": (f, d),
+    }
+    return [per_layer[t] for t in targets] * cfg.n_layers

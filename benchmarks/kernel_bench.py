@@ -1,0 +1,57 @@
+"""Ternary-matmul kernel microbenchmarks + serving-path measurements."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_us
+from repro.core import packing
+from repro.kernels import ops
+
+
+def ternary_matmul_shapes() -> list:
+    rows = []
+    for m, k, n in [(1, 2048, 2048), (16, 2048, 8192), (128, 4096, 4096)]:
+        xq = jax.random.randint(jax.random.PRNGKey(0), (m, k), -128, 128, dtype=jnp.int8)
+        wq = jax.random.randint(jax.random.PRNGKey(1), (k, n), -1, 2, dtype=jnp.int8)
+        for codec in ("pack2", "pack243"):
+            pack = packing.pack2 if codec == "pack2" else packing.pack243
+            packed = pack(wq)
+            fn = jax.jit(
+                lambda x, p: ops.ternary_matmul(x, p, k=k, codec=codec, impl="xla")
+            )
+            us = time_us(lambda: jax.block_until_ready(fn(xq, packed)), iters=5)
+            flops = 2.0 * m * k * n
+            rows.append(row(f"kernel/ternary_{codec}_{m}x{k}x{n}", us,
+                            f"gflops={flops/us/1e3:.2f} bytes_per_w={8/ (4 if codec=='pack2' else 5):.1f}bit"))
+    return rows
+
+
+def packing_density() -> list:
+    n = 1_000_000
+    rows = []
+    for codec in ("none", "pack2", "pack243"):
+        b = packing.packed_bytes(n, codec)
+        rows.append(row(f"kernel/density_{codec}", 0.0,
+                        f"bytes_per_million_weights={b} bits_per_w={8*b/n:.2f}"))
+    return rows
+
+
+def serving_token_rate(steps: int = 8) -> list:
+    """Packed-weight decode throughput on the falcon3 smoke config (CPU)."""
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke_config("falcon3-1b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, hot_cap=8, max_len=96)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+    res = eng.generate(prompts, max_new_tokens=steps)
+    toks = res.steps * prompts.shape[0]
+    return [
+        row("serving/decode_smoke", res.wall_s / max(res.steps, 1) * 1e6,
+            f"tokens={toks} ext_reduction={100*res.external_reduction:.1f}% "
+            f"weight_reloads={eng.weight_loads}"),
+    ]

@@ -1,0 +1,161 @@
+"""Reproductions of the paper's tables/figures (analytic + measured).
+
+  table1  — Falcon3 1/3/7/10B LoRA parameter %   (paper: 0.30/0.25/0.22/0.23)
+  table2  — SQuAD adapter-placement ablation %   (paper: 0.37/0.16/0.19/0.22/0.59)
+  table3  — BitROM hardware comparison column    (20.8/5.2 TOPS/W, 4967 kb/mm², -43.6%)
+  fig1a   — CiROM full-model area estimates
+  fig5b   — DR eDRAM external-access reduction sweep
+  fig6a   — LoRA quantization-bit ablation (synthetic-task loss recovery)
+
+Quality metrics (EM/F1/ROUGE) need the trained Falcon3 checkpoints +
+datasets (offline-gated, see DESIGN.md §7); every architectural column is
+reproduced exactly.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import falcon3_config, lora_dims_for, row
+from repro.core import dr_edram
+from repro.core.lora import adapter_param_fraction
+from repro.hwmodel import model as hw
+
+PAPER_TABLE1 = {"falcon3-1b": 0.30, "falcon3-3b": 0.25, "falcon3-7b": 0.22,
+                "falcon3-10b": 0.23}
+
+TABLE2_COMBOS = [
+    (("q", "k", "g", "u"), 0.37),
+    (("down",), 0.16),
+    (("o", "down"), 0.19),
+    (("v", "o", "down"), 0.22),  # the paper's configuration
+    (("q", "k", "v", "o", "g", "u", "down"), 0.59),
+]
+
+
+def table1() -> list:
+    rows = []
+    for member, paper_pct in PAPER_TABLE1.items():
+        cfg = falcon3_config(member)
+        pct = 100 * adapter_param_fraction(
+            lora_dims_for(cfg, ("v", "o", "down")), cfg.param_count()
+        )
+        ok = abs(pct - paper_pct) <= 0.02
+        rows.append(row(f"table1/{member}", 0.0,
+                        f"lora_pct={pct:.3f} paper={paper_pct} match={ok}"))
+        assert ok, (member, pct, paper_pct)
+    return rows
+
+
+def table2() -> list:
+    cfg = falcon3_config("falcon3-7b")
+    rows = []
+    for targets, paper_pct in TABLE2_COMBOS:
+        pct = 100 * adapter_param_fraction(
+            lora_dims_for(cfg, targets), cfg.param_count()
+        )
+        ok = abs(pct - paper_pct) <= 0.02
+        rows.append(row(f"table2/{'+'.join(targets)}", 0.0,
+                        f"lora_pct={pct:.3f} paper={paper_pct} match={ok}"))
+        assert ok, (targets, pct, paper_pct)
+    return rows
+
+
+def table3() -> list:
+    from repro.configs import get_config
+
+    dep = hw.falcon3_deployment(get_config("falcon3-1b"))
+    rows = [
+        row("table3/tops_per_w_a4", 0.0, f"{hw.TOPS_PER_W_A4}"),
+        row("table3/tops_per_w_a8", 0.0, f"{hw.TOPS_PER_W_A8}"),
+        row("table3/bit_density_kb_mm2", 0.0, f"{hw.BIT_DENSITY_KB_MM2}"),
+        row("table3/density_x_dcirom", 0.0, f"{hw.density_ratio_vs_dcirom():.2f}"),
+        row("table3/kv_optimization_pct", 0.0, f"{-100*dep['kv_reduction']:.1f}"),
+        row("table3/update_free", 0.0, "true_weights_resident"),
+        row("table3/edram_mib", 0.0, f"{dep['edram_mib']:.2f}"),
+    ]
+    return rows
+
+
+def fig1a() -> list:
+    d = hw.DCIROM_TASK_DENSITY_KB_MM2
+    cases = [
+        ("resnet56_8b", 0.85e6, 8.0, d),
+        ("llama7b_8b", 7e9, 8.0, d),
+        ("bitnet1b_1.58b", 1e9, 1.58, d),
+        ("bitnet1b_bitrom", 1e9, 1.58, hw.BIT_DENSITY_KB_MM2),
+    ]
+    rows = []
+    for name, n, bits, dens in cases:
+        rows.append(row(f"fig1a/{name}", 0.0,
+                        f"area_cm2={hw.model_area_estimate_cm2(n, bits, dens):.2f}"))
+    return rows
+
+
+def fig5b() -> list:
+    rows = []
+    for s, cols in dr_edram.fig5b_sweep().items():
+        vals = " ".join(f"B{b}={100*r:.1f}%" for b, r in cols.items())
+        rows.append(row(f"fig5b/seq{s}", 0.0, vals))
+    # headline
+    rows.append(row("fig5b/headline_s128_b32", 0.0,
+                    f"{100*dr_edram.closed_form_reduction(128,32):.1f}% (paper 43.6%)"))
+    return rows
+
+
+def fig6a(steps: int = 40) -> list:
+    """LoRA weight-bit ablation (paper Fig 6a protocol: quantize a *trained*
+    adapter, measure the impact).
+
+    Claim reproduced: 6-bit adapter weights are ~lossless vs 8-bit, with
+    monotone degradation at lower widths. We train one rank-4 adapter on a
+    frozen ternary base, then evaluate the SAME adapter under 2/4/6/8-bit
+    weight quantization — isolating quantization error from training noise:
+      * delta error = ||Δy(bits) − Δy(fp)|| / ||Δy(fp)||  (deterministic)
+      * eval CE at each width (informational)
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core import lora as lora_lib
+    from repro.data.pipeline import DataConfig, batch_at_step
+    from repro.training import loop as train_loop
+    from repro.training import train_lib
+
+    base = get_smoke_config("falcon3-1b")
+    cfg = dataclasses.replace(
+        base, bitnet=dataclasses.replace(base.bitnet, lora_rank=4, lora_bits=8)
+    )
+    r = train_loop.train(cfg, steps=steps, global_batch=8, seq_len=32,
+                         lora_only=True, verbose=False, seed=1)
+    params = r["params"]
+
+    # deterministic adapter-delta quantization error on one trained adapter
+    # (layer 0 of the stacked attention lora_v)
+    blk = params["blocks"]["attn"]["lora_v"]
+    one = {"a": blk["a"][0], "b": blk["b"][0]}
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, one["a"].shape[0]))
+    ref_delta = lora_lib.apply(one, x, weight_bits=16)
+    rows = []
+    errs = {}
+    for bits in (2, 4, 6, 8):
+        d = lora_lib.apply(one, x, weight_bits=bits)
+        err = float(jnp.linalg.norm(d - ref_delta) / (jnp.linalg.norm(ref_delta) + 1e-9))
+        errs[bits] = err
+        rows.append(row(f"fig6a/delta_err_{bits}bit", 0.0, f"{err:.4f}"))
+
+    # eval CE under each quantization width
+    batch = batch_at_step(cfg, DataConfig(seed=1), steps + 1, 8, 32)
+    for bits in (2, 6, 8):
+        cb = dataclasses.replace(
+            cfg, bitnet=dataclasses.replace(cfg.bitnet, lora_rank=4, lora_bits=bits)
+        )
+        loss, _ = train_lib.loss_fn(params, cb, batch)
+        rows.append(row(f"fig6a/eval_ce_{bits}bit", 0.0, f"{float(loss):.4f}"))
+        jax.clear_caches()
+
+    ok = errs[6] < 0.05 and errs[2] > errs[4] > errs[6] > errs[8]
+    rows.append(row("fig6a/6bit_lossless_and_monotone", 0.0, f"{ok}"))
+    assert ok, errs
+    return rows

@@ -1,0 +1,63 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Sections:
+  table1/*  LoRA parameter % across the Falcon3 family   (Table I)
+  table2/*  adapter-placement ablation                   (Table II)
+  table3/*  hardware comparison column                   (Table III)
+  fig1a/*   CiROM full-model area estimates              (Fig. 1a)
+  fig5b/*   DR eDRAM access-reduction sweep              (Fig. 5b)
+  fig6a/*   LoRA quantization-bit ablation (measured)    (Fig. 6a)
+  kernel/*  ternary matmul + packing microbenchmarks
+  serving/* packed decode + DR traffic (measured)
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip the trained ablation")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_tables
+
+    rows: list = []
+    sections = [
+        ("table1", paper_tables.table1),
+        ("table2", paper_tables.table2),
+        ("table3", paper_tables.table3),
+        ("fig1a", paper_tables.fig1a),
+        ("fig5b", paper_tables.fig5b),
+        ("kernel/density", kernel_bench.packing_density),
+        ("kernel/matmul", kernel_bench.ternary_matmul_shapes),
+        ("serving", kernel_bench.serving_token_rate),
+    ]
+    if not args.fast:
+        sections.append(("fig6a", paper_tables.fig6a))
+
+    failures = 0
+    for name, fn in sections:
+        try:
+            rows.extend(fn())
+        except AssertionError as e:
+            failures += 1
+            rows.append(f"{name}/REPRODUCTION-MISMATCH,0.0,{e}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            rows.append(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if failures:
+        print(f"\n{failures} section(s) failed", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

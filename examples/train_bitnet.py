@@ -1,0 +1,63 @@
+"""End-to-end training driver: QAT-train a BitNet LM with checkpoint/resume.
+
+Presets:
+  tiny — ~3M params, 300 steps, runs in minutes on CPU (default)
+  100m — ~100M-param mamba2-family config, a few hundred steps (the spec's
+         "train ~100M model" driver; give it a real machine or be patient)
+
+Features exercised: ternary QAT (STE), AdamW (+optional 8-bit states),
+grad accumulation, atomic checkpointing + auto-resume, straggler monitor.
+
+Run:  PYTHONPATH=src python examples/train_bitnet.py [--preset tiny]
+      [--steps N] [--resume-dir DIR] [--opt-8bit]
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config, get_smoke_config, shrink
+from repro.training import loop as train_loop
+from repro.training.optimizer import AdamWConfig
+
+
+def build_preset(name: str):
+    if name == "tiny":
+        cfg = get_smoke_config("falcon3-1b")
+        return cfg, dict(global_batch=8, seq_len=64, n_micro=2)
+    if name == "100m":
+        # mamba2-130m is the assigned ~100M-class architecture
+        cfg = get_config("mamba2-130m")
+        return cfg, dict(global_batch=8, seq_len=256, n_micro=2)
+    raise SystemExit(f"unknown preset {name}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--resume-dir", default="/tmp/bitnet_ckpt")
+    ap.add_argument("--opt-8bit", action="store_true")
+    args = ap.parse_args()
+
+    cfg, kw = build_preset(args.preset)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                      quantized_state=args.opt_8bit)
+    print(f"== training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps, ckpt -> {args.resume_dir} ==")
+    r = train_loop.train(
+        cfg,
+        steps=args.steps,
+        opt_cfg=opt,
+        ckpt_dir=args.resume_dir,
+        ckpt_every=50,
+        log_every=20,
+        **kw,
+    )
+    first, last = r["losses"][0], sum(r["losses"][-10:]) / 10
+    print(f"loss: {first:.3f} -> {last:.3f} over {r['step']} steps "
+          f"({len(r['stragglers'])} straggler events)")
+    assert last < first, "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md tables from the dry-run record JSONs."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis import roofline
+from repro.configs import SHAPES, get_config, get_overrides
+
+ROOT = Path(__file__).resolve().parents[3] / "results"
+
+
+def _fmt_b(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(d: Path, mesh: str) -> str:
+    rows = ["| arch | shape | compile_s | args GiB/dev | temp GiB/dev | HLO flops/dev | collective GiB |",
+            "|---|---|---|---|---|---|---|"]
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r["mesh"] != mesh or "__pack" in p.stem or "__emb8" in p.stem or "__kvfp8" in p.stem:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
+            f"{_fmt_b(r['memory']['argument_bytes'])} | {_fmt_b(r['memory']['temp_bytes'])} | "
+            f"{r['flops_total']:.2e} | {_fmt_b(r['collectives']['total_bytes'])} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(d: Path, mesh: str = "single") -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | bottleneck | useful | roofline% |",
+            "|---|---|---|---|---|---|---|---|"]
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r["mesh"] != mesh or "__pack" in p.stem or "__emb8" in p.stem or "__kvfp8" in p.stem:
+            continue
+        cfg = get_config(r["arch"])
+        nm = get_overrides(r["arch"], r["shape"]).get("microbatches", 1)
+        t = roofline.roofline_terms(r, cfg, SHAPES[r["shape"]], n_micro=nm)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4g} | {t['memory_s']:.4g} | "
+            f"{t['collective_s']:.4g} | {t['bottleneck']} | {t['useful_ratio']:.2f} | "
+            f"{100*t.get('roofline_fraction', 0):.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def compare_table() -> str:
+    rows = ["| arch | shape | baseline coll GiB | optimized coll GiB | Δ | baseline bound s | optimized bound s | speedup |",
+            "|---|---|---|---|---|---|---|---|"]
+    base_d, opt_d = ROOT / "dryrun", ROOT / "dryrun_opt"
+    for p in sorted(base_d.glob("*__single.json")):
+        r0 = json.loads(p.read_text())
+        po = opt_d / p.name
+        if not po.exists():
+            continue
+        r1 = json.loads(po.read_text())
+        cfg = get_config(r0["arch"])
+        nm = get_overrides(r0["arch"], r0["shape"]).get("microbatches", 1)
+        t0 = roofline.roofline_terms(r0, cfg, SHAPES[r0["shape"]], n_micro=nm)
+        t1 = roofline.roofline_terms(r1, cfg, SHAPES[r1["shape"]], n_micro=nm)
+        b0 = max(t0["compute_s"], t0["memory_s"], t0["collective_s"])
+        b1 = max(t1["compute_s"], t1["memory_s"], t1["collective_s"])
+        c0 = r0["collectives"]["total_bytes"]
+        c1 = r1["collectives"]["total_bytes"]
+        rows.append(
+            f"| {r0['arch']} | {r0['shape']} | {_fmt_b(c0)} | {_fmt_b(c1)} | "
+            f"{100*(c1-c0)/max(c0,1):+.1f}% | {b0:.4g} | {b1:.4g} | {b0/max(b1,1e-12):.2f}x |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    out = ROOT / "tables.md"
+    parts = [
+        "## Dry-run, single pod (16x16)", dryrun_table(ROOT / "dryrun", "single"),
+        "\n## Dry-run, multi-pod (2x16x16)", dryrun_table(ROOT / "dryrun", "multi"),
+        "\n## Roofline (single pod, baseline)", roofline_table(ROOT / "dryrun"),
+        "\n## Roofline (single pod, optimized)", roofline_table(ROOT / "dryrun_opt"),
+        "\n## Baseline vs optimized (single pod)", compare_table(),
+    ]
+    out.write_text("\n".join(parts))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Architecture configs: the 10 assigned archs + the paper's falcon3-1b.
+
+Use ``get_config(name)`` / ``get_smoke_config(name)`` / ``list_configs()``.
+"""
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    BitNetConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    applicable_shapes,
+    get_config,
+    get_overrides,
+    get_smoke_config,
+    list_configs,
+    shrink,
+)

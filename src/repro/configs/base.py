@@ -1,0 +1,326 @@
+"""Config system: model/shape dataclasses + registry.
+
+Every assigned architecture registers a ``ModelConfig`` (exact public
+numbers) plus a reduced ``smoke`` variant of the same family for CPU
+tests. Shapes are the four assigned (seq_len, global_batch) cells; each
+config declares which cells apply (encoder-only archs have no decode,
+full-attention archs skip long_500k — see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def kv_cache_dim(self) -> int:  # latent + rope key per token
+        return self.kv_lora_rank + self.qk_rope_head_dim
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    d_ff_dense: int = 0  # FFN width of the leading dense layers (0 -> d_ff)
+    n_dense_layers: int = 0  # leading dense layers (DeepSeek-V3: 3)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 64
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class BitNetConfig:
+    """The paper's quantization recipe (BitNet b1.58 / a4.8 + LoRA §III-C)."""
+
+    enabled: bool = True
+    act_bits: int = 8  # 8 = b1.58, 4 = a4.8 (TriMLA-native)
+    codec: str = "pack2"  # "pack2" (BiROMA 2b/trit) | "pack243" (1.6b, beyond-paper)
+    lora_rank: int = 0  # 0 disables adapters
+    lora_targets: Tuple[str, ...] = ("v", "o", "down")
+    lora_bits: int = 6
+    embed_int8: bool = False  # beyond-paper: int8 embedding/lm_head at inference
+    kv_fp8: bool = False  # beyond-paper: fp8(e4m3) KV-cache tiers at inference
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    activation: str = "swiglu"  # swiglu | geglu | gelu (non-gated)
+    qk_norm: bool = False
+    attn_type: str = "full"  # full | swa | mla | none
+    swa_window: int = 4096
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    scale_embed: bool = False  # Gemma: embeddings scaled by sqrt(d_model)
+    is_encoder: bool = False  # bidirectional attention, no decode
+    hybrid_attn_every: int = 0  # Zamba2: shared attn block every k layers
+    frontend: str = "none"  # none | audio | vision
+    frontend_dim: int = 0
+    n_patches: int = 0  # VLM: image patches per sample
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    bitnet: BitNetConfig = field(default_factory=BitNetConfig)
+    source: str = ""  # provenance note [arXiv/hf; tier]
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (SSM / hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decode(self) -> bool:
+        return not self.is_encoder
+
+    def param_count(self) -> int:
+        """Exact parameter count of the backbone (embeddings included)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        h, g, hd = self.n_heads, self.n_kv_heads, self.resolved_head_dim
+        total = v * d  # embedding
+        if not self.tie_embeddings and not self.is_encoder:
+            total += d * v  # lm head
+        if self.is_encoder:
+            total += d * v  # output projection
+        if self.frontend == "audio":
+            total += self.frontend_dim * d
+        if self.frontend == "vision":
+            total += self.frontend_dim * d + d * d  # 2-layer projector
+
+        def attn_params() -> int:
+            if self.attn_type == "mla":
+                m = self.mla
+                qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+                return (
+                    d * m.q_lora_rank
+                    + m.q_lora_rank * h * qk_head
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)
+                    + h * m.v_head_dim * d
+                )
+            return d * h * hd + 2 * d * g * hd + h * hd * d
+
+        def mlp_params(ff: int) -> int:
+            n_in = 1 if self.activation == "gelu" else 2
+            return d * ff * n_in + ff * d
+
+        def moe_layer_params() -> int:
+            mo = self.moe
+            ff = mo.d_ff_expert or f
+            p = d * mo.n_experts  # router
+            p += mo.n_experts * mlp_params(ff)
+            p += mo.n_shared * mlp_params(f)
+            return p
+
+        def ssm_layer_params() -> int:
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            conv_ch = di + 2 * s.n_groups * s.d_state
+            p = d * (2 * di + 2 * s.n_groups * s.d_state + nh)  # in_proj [z,x,B,C,dt]
+            p += conv_ch * s.d_conv  # depthwise conv
+            p += nh * 2  # A_log, D
+            p += nh  # dt bias
+            p += di  # gated norm
+            p += di * d  # out_proj
+            return p
+
+        norms = 2 * d  # per layer (attn ln + mlp ln), approx for all families
+        for layer in range(self.n_layers):
+            if self.family == "ssm":
+                total += ssm_layer_params() + d
+            elif self.family == "hybrid":
+                total += ssm_layer_params() + d
+            elif self.family == "moe" and layer >= self.moe.n_dense_layers:
+                total += attn_params() + moe_layer_params() + norms
+            elif self.family == "moe":
+                total += attn_params() + mlp_params(self.moe.d_ff_dense or f) + norms
+            else:
+                total += attn_params() + mlp_params(f) + norms
+        if self.family == "hybrid" and self.hybrid_attn_every:
+            # one shared attention+MLP block (parameters counted once)
+            total += attn_params() + mlp_params(f) + norms
+        total += d  # final norm
+        return total
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Which of the four cells run for this arch (DESIGN.md §4 rules)."""
+    out = ["train_4k", "prefill_32k"]
+    if cfg.has_decode:
+        out.append("decode_32k")
+        if cfg.sub_quadratic:
+            out.append("long_500k")
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+_SMOKE: Dict[str, ModelConfig] = {}
+_OVERRIDES: Dict[str, Dict[str, dict]] = {}  # arch -> shape -> dryrun overrides
+
+
+def register(cfg: ModelConfig, smoke: ModelConfig, dryrun_overrides: dict | None = None):
+    _REGISTRY[cfg.name] = cfg
+    _SMOKE[cfg.name] = smoke
+    _OVERRIDES[cfg.name] = dryrun_overrides or {}
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _SMOKE[name]
+
+
+def get_overrides(name: str, shape: str) -> dict:
+    _ensure_loaded()
+    return _OVERRIDES.get(name, {}).get(shape, {})
+
+
+def list_configs() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+def replace(cfg: ModelConfig, **kw) -> ModelConfig:
+    return dataclasses.replace(cfg, **kw)
+
+
+def shrink(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests.
+
+    Preserves every structural flag (family, attention variant, activation,
+    qk-norm, tying, frontend kind, MoE/MLA/SSM presence) while shrinking
+    width/depth/tables to run a forward+train step in seconds on CPU.
+    """
+    kw: dict = dict(
+        name=cfg.name + "-smoke",
+        n_layers=min(cfg.n_layers, 2),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4 if cfg.n_kv_heads == cfg.n_heads else 2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        swa_window=8 if cfg.attn_type == "swa" else cfg.swa_window,
+    )
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(
+            q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+            qk_rope_head_dim=8, v_head_dim=16,
+        )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe,
+            n_experts=4,
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=64,
+            d_ff_dense=128 if cfg.moe.d_ff_dense else 0,
+            n_dense_layers=1 if cfg.moe.n_dense_layers else 0,
+            capacity_factor=4.0,  # no token drops in smoke (determinism tests)
+        )
+        kw["n_layers"] = 2
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=8, chunk=8
+        )
+    if cfg.family == "hybrid":
+        kw["hybrid_attn_every"] = 2
+        kw["n_layers"] = 5  # 2 groups of 2 + tail of 1
+    if cfg.frontend == "audio":
+        kw["frontend_dim"] = 32
+    if cfg.frontend == "vision":
+        kw["frontend_dim"] = 32
+        kw["n_patches"] = 8
+    if cfg.bitnet.lora_rank:
+        kw["bitnet"] = dataclasses.replace(cfg.bitnet, lora_rank=4)
+    kw.update(overrides)
+    return dataclasses.replace(cfg, **kw)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    # import all config modules for registration side effects
+    from repro.configs import (  # noqa: F401
+        deepseek_coder_33b,
+        deepseek_v3_671b,
+        falcon3_1b,
+        gemma_7b,
+        hubert_xlarge,
+        llava_next_34b,
+        mamba2_130m,
+        mixtral_8x22b,
+        qwen3_8b,
+        qwen3_32b,
+        zamba2_7b,
+    )

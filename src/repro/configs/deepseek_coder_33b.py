@@ -1,0 +1,30 @@
+"""deepseek-coder-33b [dense] — llama arch [arXiv:2401.14196; hf].
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256, head_dim=128.
+"""
+
+from repro.configs.base import ModelConfig, register, shrink
+
+CFG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=19200,
+    vocab_size=32256,
+    rope_theta=100_000.0,
+    source="arXiv:2401.14196; hf",
+)
+
+register(
+    CFG,
+    shrink(CFG),
+    dryrun_overrides={
+        "train_4k": {"microbatches": 8},
+        "prefill_32k": {},
+        "decode_32k": {},
+    },
+)

@@ -1,0 +1,51 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8 [arXiv:2412.19437; hf].
+
+61L d_model=7168 128H d_ff=2048 (per expert) vocab=129280; 3 leading dense
+layers (FFN 18432); MLA latent cache = 512+64 per token. The MTP head is
+omitted (orthogonal to the paper's technique — DESIGN.md §4).
+
+This is the flagship cell for the paper's headline property: ternary-packed
+(pack2) the 671B fits in ~168 GB — one TPU pod's HBM, zero weight reload.
+"""
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, register, shrink
+
+CFG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=2048,
+    vocab_size=129280,
+    attn_type="mla",
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        n_experts=256,
+        top_k=8,
+        n_shared=1,
+        d_ff_expert=2048,
+        d_ff_dense=18432,
+        n_dense_layers=3,
+    ),
+    rope_theta=10_000.0,
+    source="arXiv:2412.19437; hf",
+)
+
+register(
+    CFG,
+    shrink(CFG),
+    dryrun_overrides={
+        "train_4k": {"microbatches": 16, "opt_8bit": True},
+        "prefill_32k": {},
+        "decode_32k": {},
+    },
+)

@@ -1,0 +1,42 @@
+"""falcon3-1b — the paper's own deployment target (§V-B) [hf:tiiuae/Falcon3-1B].
+
+18 Transformer layers, GQA with 4 KV heads, head_dim 256 (8 Q heads),
+d_model 2048, FFN 8192. The paper maps it as 6 macro partitions × 3 layers
+with a 6-stage batch pipeline and 13.5 MB DR eDRAM (S=128, 32 hot tokens,
+6 batches). LoRA rank 16 on V/O/Down, 6-bit weights — the Falcon3 BitNet
+convention the paper adopts.
+
+Not part of the assigned 10-arch pool; used by the paper-reproduction
+benchmarks, the pipeline example and hwmodel calibration.
+"""
+
+from repro.configs.base import BitNetConfig, ModelConfig, register, shrink
+
+CFG = ModelConfig(
+    name="falcon3-1b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=8192,
+    vocab_size=131072,
+    rope_theta=1_000_042.0,
+    bitnet=BitNetConfig(lora_rank=16, lora_targets=("v", "o", "down"), lora_bits=6),
+    source="hf:tiiuae/Falcon3-1B-Instruct; hf",
+)
+
+register(CFG, shrink(CFG))
+
+# The paper's sibling models (Table I) — parameter-count reproduction only.
+FALCON3_FAMILY = {
+    "falcon3-1b": dict(n_layers=18, d_model=2048, n_heads=8, n_kv_heads=4,
+                       head_dim=256, d_ff=8192, vocab_size=131072),
+    "falcon3-3b": dict(n_layers=22, d_model=3072, n_heads=12, n_kv_heads=4,
+                       head_dim=256, d_ff=9216, vocab_size=131072),
+    "falcon3-7b": dict(n_layers=28, d_model=3072, n_heads=12, n_kv_heads=4,
+                       head_dim=256, d_ff=23040, vocab_size=131072),
+    "falcon3-10b": dict(n_layers=40, d_model=3072, n_heads=12, n_kv_heads=4,
+                        head_dim=256, d_ff=23040, vocab_size=131072),
+}

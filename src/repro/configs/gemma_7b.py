@@ -1,0 +1,34 @@
+"""gemma-7b [dense] — GeGLU, head_dim=256 [arXiv:2403.08295; hf].
+
+28L d_model=3072 16H (kv=16: MHA on 7b; MQA on 2b) d_ff=24576 vocab=256000.
+Tied embeddings, embeddings scaled by sqrt(d_model).
+"""
+
+from repro.configs.base import ModelConfig, register, shrink
+
+CFG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    activation="geglu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    scale_embed=True,
+    source="arXiv:2403.08295; hf",
+)
+
+register(
+    CFG,
+    shrink(CFG),
+    dryrun_overrides={
+        "train_4k": {"microbatches": 4},
+        "prefill_32k": {},
+        "decode_32k": {},
+    },
+)

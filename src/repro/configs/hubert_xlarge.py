@@ -1,0 +1,39 @@
+"""hubert-xlarge [audio] — encoder-only, w2v2 arch [arXiv:2106.07447; unverified].
+
+48L d_model=1280 16H (kv=16, i.e. MHA) d_ff=5120 vocab=504 (cluster targets).
+Modality frontend is a STUB per assignment: input_specs() provides
+precomputed frame embeddings (B, T, 512) — the conv feature extractor is
+replaced by a projection. Encoder-only => no decode shapes (DESIGN.md §4).
+Deviations: RoPE instead of conv positional embeddings; RMSNorm for
+LayerNorm (uniform substrate) — value-level only, shapes exact.
+"""
+
+from repro.configs.base import ModelConfig, register, shrink
+
+CFG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    activation="gelu",  # non-gated transformer-encoder MLP
+    attn_type="full",
+    is_encoder=True,
+    frontend="audio",
+    frontend_dim=512,
+    rope_theta=10_000.0,
+    source="arXiv:2106.07447; unverified",
+)
+
+register(
+    CFG,
+    shrink(CFG),
+    dryrun_overrides={
+        "train_4k": {"microbatches": 8},
+        "prefill_32k": {},
+    },
+)

@@ -1,0 +1,38 @@
+"""llava-next-34b [vlm] — anyres tiling [hf:llava-hf/llava-v1.6; unverified].
+
+Backbone only per assignment: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 (Yi-34B-like). The vision tower is a STUB — input_specs()
+provides precomputed patch embeddings (B, 576, 1024) = one 336px CLIP tile;
+anyres multi-tile reduces to more patches, same code path. Image patches
+are the sequence *prefix* => they are the paper's "early tokens": DR
+tiering is maximally effective here (read at every decode step).
+"""
+
+from repro.configs.base import ModelConfig, register, shrink
+
+CFG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    frontend="vision",
+    frontend_dim=1024,
+    n_patches=576,
+    rope_theta=5_000_000.0,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+)
+
+register(
+    CFG,
+    shrink(CFG),
+    dryrun_overrides={
+        "train_4k": {"microbatches": 8},
+        "prefill_32k": {},
+        "decode_32k": {},
+    },
+)

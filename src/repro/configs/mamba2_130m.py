@@ -1,0 +1,37 @@
+"""mamba2-130m [ssm] — SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+24L d_model=768, attention-free, vocab=50280, ssm_state=128, head_dim=64,
+expand=2 (d_inner 1536, 24 SSM heads). O(1) decode state => owns the
+long_500k cell; the paper's DR KV tiering is N/A (no growing cache) —
+recorded in DESIGN.md §Arch-applicability; ternary quantization still
+applies to all projections.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig, register, shrink
+
+CFG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=1,  # attention-free; SSM heads derive from ssm config
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=0,
+    vocab_size=50280,
+    attn_type="none",
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1, chunk=64),
+    source="arXiv:2405.21060; unverified",
+)
+
+register(
+    CFG,
+    shrink(CFG),
+    dryrun_overrides={
+        "train_4k": {},
+        "prefill_32k": {},
+        "decode_32k": {},
+        "long_500k": {},
+    },
+)

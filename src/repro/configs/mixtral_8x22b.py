@@ -1,0 +1,35 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, SWA [arXiv:2401.04088; hf].
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768. Sliding-window
+attention (window 4096) caps the decode KV cache at the window (ring
+buffer) — DR tiering is N/A under SWA eviction (DESIGN.md §4).
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig, register, shrink
+
+CFG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    attn_type="swa",
+    swa_window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16384),
+    rope_theta=1_000_000.0,
+    source="arXiv:2401.04088; hf",
+)
+
+register(
+    CFG,
+    shrink(CFG),
+    dryrun_overrides={
+        "train_4k": {"microbatches": 8, "opt_8bit": True},
+        "prefill_32k": {},
+        "decode_32k": {},
+    },
+)

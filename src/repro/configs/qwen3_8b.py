@@ -1,0 +1,31 @@
+"""qwen3-8b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B; hf].
+
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936, head_dim=128.
+"""
+
+from repro.configs.base import ModelConfig, register, shrink
+
+CFG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen3-8B; hf",
+)
+
+register(
+    CFG,
+    shrink(CFG, qk_norm=True),
+    dryrun_overrides={
+        "train_4k": {"microbatches": 4},
+        "prefill_32k": {},
+        "decode_32k": {},
+    },
+)

@@ -1,0 +1,39 @@
+"""zamba2-7b [hybrid] — Mamba2 + shared attention blocks [arXiv:2411.15242; unverified].
+
+81L d_model=3584 32H (kv=32) d_ff=14336 vocab=32000, ssm_state=64.
+Structure: groups of 6 Mamba2 blocks, each followed by ONE shared
+attention+MLP block (single parameter set) with per-invocation LoRA —
+Zamba2's own trick, realized with the paper's §III-C LoRA machinery.
+Hybrid => sub-quadratic decode => owns the long_500k cell (attention KV
+exists only at the 13 shared-block invocations).
+"""
+
+from repro.configs.base import BitNetConfig, ModelConfig, SSMConfig, register, shrink
+
+CFG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    hybrid_attn_every=6,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, n_groups=2, chunk=64),
+    bitnet=BitNetConfig(lora_rank=16),  # shared-block per-invocation adapters
+    rope_theta=10_000.0,
+    source="arXiv:2411.15242; unverified",
+)
+
+register(
+    CFG,
+    shrink(CFG),
+    dryrun_overrides={
+        "train_4k": {"microbatches": 4},
+        "prefill_32k": {},
+        "decode_32k": {},
+        "long_500k": {},
+    },
+)

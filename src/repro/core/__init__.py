@@ -1,0 +1,11 @@
+"""Core: the paper's contribution as composable JAX modules.
+
+  ternary    — BitNet b1.58 quantization (absmean ternary weights, A8/A4 acts)
+  packing    — BiROMA-analogue trit packing codecs (pack2 / pack243)
+  bitlinear  — the ternary projection layer (QAT + packed-inference modes)
+  lora       — 6-bit quantized LoRA adapters (V/O/Down, rank 16)
+  kv_cache   — two-tier DR KV cache (hot early-token buffer + cold tail)
+  dr_edram   — decode-refresh eDRAM access model (43.6% reduction, Fig. 5)
+"""
+
+from repro.core import bitlinear, dr_edram, kv_cache, lora, packing, ternary  # noqa: F401

@@ -1,0 +1,126 @@
+"""BitLinear: the ternary projection layer (paper §III-B) in two modes.
+
+QAT mode (training / train_4k cells)
+    Master weights are float; the forward fake-quantizes weights (absmean
+    ternary) and activations (A8/A4) with straight-through gradients —
+    BitNet's training rule. This is what ``train_step`` lowers.
+
+Packed mode (inference / prefill, decode cells)
+    Weights are stored as packed trits (uint8, 2.0 or 1.6 bits/weight — the
+    BiROMA density analogue) plus one f32 absmean scale. The forward
+    quantizes activations to int8, runs the ternary matmul (Pallas kernel
+    on TPU, XLA unpack+dot path for sharded lowering), and rescales:
+
+        y = (xq @ trits) * w_scale / x_scale
+
+    Packed weights never exist in bf16 in HBM — dequantization happens in
+    VMEM/registers (the "weights never move" property).
+
+Optionally carries a quantized LoRA adapter (paper §III-C) whose delta is
+added to the projection output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lora as lora_lib
+from repro.core import packing
+from repro.core.ternary import (
+    act_quant,
+    fake_quant_linear,
+    weight_quant_absmean,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedLinear:
+    """Inference-form ternary weight: packed trits + scale (+ true K)."""
+
+    packed: jax.Array  # uint8 (ceil(K/g), N)
+    scale: jax.Array  # () f32 absmean
+    k: int = dataclasses.field(metadata=dict(static=True))
+    codec: str = dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Int8Linear:
+    """int8 weight + per-axis absmax scale — the beyond-paper codec for the
+    high-precision residue (embedding / lm_head), which dominates the
+    unpacked HBM bytes of memory-bound decode once the ternary projections
+    are packed (e.g. gemma-7b: 1.57 GB of 256k-vocab embeddings)."""
+
+    q: jax.Array  # int8, same shape as the source weight
+    scale: jax.Array  # f32, keepdims absmax/127 along the quantized axis
+
+
+def quantize_int8(w: jax.Array, axis: int) -> Int8Linear:
+    w32 = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(w32), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return Int8Linear(q=q, scale=scale)
+
+
+def dequant_int8(t: Int8Linear, dtype=jnp.bfloat16) -> jax.Array:
+    return (t.q.astype(jnp.float32) * t.scale).astype(dtype)
+
+
+def init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32) -> dict:
+    w = jax.random.normal(key, (d_in, d_out), dtype) * (d_in**-0.5)
+    return {"w": w}
+
+
+def apply_qat(params: dict, x: jax.Array, act_bits: int = 8,
+              lora_params: Optional[dict] = None) -> jax.Array:
+    """Training forward: STE fake-quantized ternary linear."""
+    y = fake_quant_linear(x, params["w"], bits=act_bits)
+    if lora_params is not None:
+        y = y + lora_lib.apply(lora_params, x)
+    return y.astype(x.dtype)
+
+
+def quantize_pack(params: dict, codec: str = "pack2") -> PackedLinear:
+    """Freeze a trained master weight into ROM form (packed trits)."""
+    q = weight_quant_absmean(params["w"])
+    pack = packing.pack2 if codec == "pack2" else packing.pack243
+    return PackedLinear(packed=pack(q.wq), scale=q.scale, k=params["w"].shape[0], codec=codec)
+
+
+def apply_packed(
+    pw: PackedLinear,
+    x: jax.Array,
+    act_bits: int = 8,
+    impl: str = "xla",
+    lora_params: Optional[dict] = None,
+) -> jax.Array:
+    """Inference forward on packed ternary weights."""
+    from repro.kernels import ops  # lazy: kernels depend on core.packing
+
+    xq = act_quant(x, bits=act_bits)
+    acc = ops.ternary_matmul(
+        xq.xq, pw.packed, k=pw.k, codec=pw.codec, impl=impl
+    )  # (..., N) int32
+    y = acc.astype(jnp.float32) * (pw.scale / xq.scale)
+    if lora_params is not None:
+        y = y + lora_lib.apply(lora_params, x)
+    return y.astype(x.dtype)
+
+
+def apply(
+    params_or_packed,
+    x: jax.Array,
+    act_bits: int = 8,
+    impl: str = "xla",
+    lora_params: Optional[dict] = None,
+) -> jax.Array:
+    """Mode-dispatching forward (dict => QAT, PackedLinear => packed)."""
+    if isinstance(params_or_packed, PackedLinear):
+        return apply_packed(params_or_packed, x, act_bits, impl, lora_params)
+    return apply_qat(params_or_packed, x, act_bits, lora_params)

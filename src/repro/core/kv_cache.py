@@ -1,0 +1,297 @@
+"""Two-tier (DR eDRAM-style) KV cache (paper §IV).
+
+BitROM buffers the first ``hot_cap`` tokens of a sequence on-die (DR eDRAM)
+and leaves the tail in external DRAM. The TPU adaptation keeps the same
+*structure* — a small pinned "hot" buffer for early tokens plus a large
+"cold" buffer — because the structure is what produces the access-traffic
+win (early tokens are read at every decode step; see ``dr_edram.py``).
+
+The cache is a pytree of fixed-shape arrays (jit/scan friendly):
+
+  hot_k/hot_v   : (batch, hot_cap, ...)      early tokens
+  cold_k/cold_v : (batch, cold_cap, ...)     the rest
+  length        : ()  int32                  tokens written so far
+
+``...`` is whatever a layer caches per token: (n_kv_heads, head_dim) for
+GQA/MQA, (d_latent,) for MLA latents. Appends route on position; attention
+runs per-tier and combines with a numerically-stable streaming softmax, so
+no concat of the two tiers is ever materialized.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class TieredKVCache(NamedTuple):
+    hot_k: jax.Array
+    hot_v: jax.Array
+    cold_k: jax.Array
+    cold_v: jax.Array
+    length: jax.Array  # scalar int32: number of tokens currently cached
+
+    @property
+    def hot_cap(self) -> int:
+        return self.hot_k.shape[1]
+
+    @property
+    def cold_cap(self) -> int:
+        return self.cold_k.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.hot_cap + self.cold_cap
+
+
+def init_cache(
+    batch: int,
+    hot_cap: int,
+    cold_cap: int,
+    kv_shape: Sequence[int],
+    dtype=jnp.bfloat16,
+) -> TieredKVCache:
+    shape_hot = (batch, hot_cap) + tuple(kv_shape)
+    shape_cold = (batch, cold_cap) + tuple(kv_shape)
+    return TieredKVCache(
+        hot_k=jnp.zeros(shape_hot, dtype),
+        hot_v=jnp.zeros(shape_hot, dtype),
+        cold_k=jnp.zeros(shape_cold, dtype),
+        cold_v=jnp.zeros(shape_cold, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def append(cache: TieredKVCache, k_new: jax.Array, v_new: jax.Array) -> TieredKVCache:
+    """Append ``t_new`` tokens (batch, t_new, ...). Early positions land hot.
+
+    Routing is data-independent given ``cache.length`` (a traced scalar), so
+    we write both tiers with masked dynamic_update_slice semantics: each new
+    token goes to the hot tier if its absolute position < hot_cap, else cold.
+    """
+    b, t_new = k_new.shape[0], k_new.shape[1]
+    start = cache.length
+    pos = start + jnp.arange(t_new, dtype=jnp.int32)  # absolute positions
+
+    def scatter(tier_k, tier_v, tier_pos, in_tier):
+        # tier_pos: position within the tier (clipped); in_tier: bool mask
+        cap = tier_k.shape[1]
+        idx = jnp.clip(tier_pos, 0, cap - 1)
+        onehot = (
+            jax.nn.one_hot(idx, cap, dtype=tier_k.dtype)
+            * in_tier.astype(tier_k.dtype)[:, None]
+        )  # (t_new, cap)
+        # (b, t, ...) -> (b, cap, ...): accumulate-overwrite via where
+        upd_k = jnp.einsum("tc,bt...->bc...", onehot, k_new.astype(tier_k.dtype))
+        upd_v = jnp.einsum("tc,bt...->bc...", onehot, v_new.astype(tier_v.dtype))
+        written = jnp.einsum("tc->c", onehot) > 0
+        mask = written.reshape((1, cap) + (1,) * (tier_k.ndim - 2))
+        return jnp.where(mask, upd_k, tier_k), jnp.where(mask, upd_v, tier_v)
+
+    in_hot = pos < cache.hot_cap
+    hot_k, hot_v = scatter(cache.hot_k, cache.hot_v, pos, in_hot)
+    cold_k, cold_v = scatter(cache.cold_k, cache.cold_v, pos - cache.hot_cap, ~in_hot)
+    return TieredKVCache(hot_k, hot_v, cold_k, cold_v, start + t_new)
+
+
+def append_decode(cache: TieredKVCache, k_new: jax.Array, v_new: jax.Array) -> TieredKVCache:
+    """Fast path for decode: append exactly one token (batch, ...)."""
+    pos = cache.length
+    in_hot = pos < cache.hot_cap
+
+    def upd(tier, new, tier_pos, write):
+        cap = tier.shape[1]
+        if cap == 0:  # zero-size tier (e.g. SWA: hot_cap=0) — nothing to write
+            return tier
+        idx = jnp.clip(tier_pos, 0, cap - 1)
+        new = new.astype(tier.dtype)[:, None]  # (b, 1, ...)
+        updated = jax.lax.dynamic_update_slice_in_dim(tier, new, idx, axis=1)
+        return jnp.where(write, updated, tier)
+
+    hot_k = upd(cache.hot_k, k_new, pos, in_hot)
+    hot_v = upd(cache.hot_v, v_new, pos, in_hot)
+    cold_k = upd(cache.cold_k, k_new, pos - cache.hot_cap, ~in_hot)
+    cold_v = upd(cache.cold_v, v_new, pos - cache.hot_cap, ~in_hot)
+    return TieredKVCache(hot_k, hot_v, cold_k, cold_v, pos + 1)
+
+
+def append_decode_ring(cache: TieredKVCache, k_new: jax.Array, v_new: jax.Array) -> TieredKVCache:
+    """Decode append with a *ring-buffer* cold tier (sliding-window archs).
+
+    Position p ≥ hot_cap lands at cold slot (p - hot_cap) % cold_cap, so the
+    cold tier holds exactly the last ``cold_cap`` tokens (SWA window) and
+    early tokens are evicted — DR tiering uses hot_cap=0 here (DESIGN.md §4).
+    """
+    pos = cache.length
+    in_hot = pos < cache.hot_cap
+
+    def upd(tier, new, tier_pos, write):
+        cap = tier.shape[1]
+        if cap == 0:  # zero-size tier — nothing to write
+            return tier
+        idx = jnp.clip(tier_pos % cap, 0, cap - 1)
+        new = new.astype(tier.dtype)[:, None]
+        updated = jax.lax.dynamic_update_slice_in_dim(tier, new, idx, axis=1)
+        return jnp.where(write, updated, tier)
+
+    hot_k = upd(cache.hot_k, k_new, pos, in_hot)
+    hot_v = upd(cache.hot_v, v_new, pos, in_hot)
+    cold_k = upd(cache.cold_k, k_new, pos - cache.hot_cap, ~in_hot)
+    cold_v = upd(cache.cold_v, v_new, pos - cache.hot_cap, ~in_hot)
+    return TieredKVCache(hot_k, hot_v, cold_k, cold_v, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# Tiered attention read: per-tier partial attention + streaming-softmax merge
+# (never concatenates the tiers — the "hot" tier stays a separate buffer).
+# ---------------------------------------------------------------------------
+
+
+def _upcast(x):
+    """fp8 tiers compute in bf16 (avoids materializing a 4x f32 copy of the
+    whole cache — observed as multi-GiB temp on the decode dry-run);
+    everything else upcasts to f32 for exactness."""
+    if x.dtype == jnp.float8_e4m3fn:
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def _tier_partial(q, k, v, valid, scale):
+    """Partial attention over one tier.
+
+    q: (b, h, d); k/v: (b, s, g, d) with g = kv heads (h = g * rep);
+    valid: (b, s) bool. Returns (numerator (b,h,d), denom (b,h), max (b,h)).
+    """
+    b, s, g, d = k.shape
+    h = q.shape[1]
+    if s == 0:  # zero-capacity tier: neutral element of the streaming merge
+        dv = v.shape[-1]
+        return (
+            jnp.zeros((b, h, dv), jnp.float32),
+            jnp.zeros((b, h), jnp.float32),
+            jnp.full((b, h), jnp.finfo(jnp.float32).min),
+        )
+    rep = h // g
+    qg = q.reshape(b, g, rep, d).astype(jnp.float32)
+    kf = _upcast(k)
+    vf = _upcast(v)
+    logits = jnp.einsum(
+        "bgrd,bsgd->bgrs", qg.astype(kf.dtype), kf, preferred_element_type=jnp.float32
+    ) * scale
+    neg = jnp.finfo(jnp.float32).min
+    logits = jnp.where(valid[:, None, None, :], logits, neg)
+    m = jnp.max(logits, axis=-1)  # (b,g,r)
+    # guard fully-invalid tiers: exp(neg - neg) would be 1; zero them via mask
+    p = jnp.exp(logits - m[..., None]) * valid[:, None, None, :]
+    denom = jnp.sum(p, axis=-1)  # (b,g,r)
+    num = jnp.einsum("bgrs,bsgd->bgrd", p.astype(vf.dtype), vf,
+                     preferred_element_type=jnp.float32)  # (b,g,r,d)
+    return num.reshape(b, h, d), denom.reshape(b, h), m.reshape(b, h)
+
+
+def tiered_decode_attention(
+    q: jax.Array,
+    cache: TieredKVCache,
+    scale: float | None = None,
+    ring: bool = False,
+) -> jax.Array:
+    """One-token attention over both tiers. q: (b, h, d) -> (b, h, d).
+
+    ``ring`` marks a ring-buffer cold tier (SWA): validity clamps at
+    cold_cap (every slot valid once the window has wrapped). The clamped
+    formula is also correct for the non-ring case, so it is always used;
+    the flag is kept for call-site clarity.
+    """
+    del ring  # validity formula below covers both layouts
+    d = q.shape[-1]
+    scale = scale if scale is not None else d**-0.5
+    length = cache.length
+    hot_valid = jnp.arange(cache.hot_cap) < length
+    n_cold = jnp.clip(length - cache.hot_cap, 0, cache.cold_cap)
+    cold_valid = jnp.arange(cache.cold_cap) < n_cold
+    b = q.shape[0]
+    hot_valid = jnp.broadcast_to(hot_valid[None], (b, cache.hot_cap))
+    cold_valid = jnp.broadcast_to(cold_valid[None], (b, cache.cold_cap))
+
+    n1, d1, m1 = _tier_partial(q, cache.hot_k, cache.hot_v, hot_valid, scale)
+    n2, d2, m2 = _tier_partial(q, cache.cold_k, cache.cold_v, cold_valid, scale)
+
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m) * (d1 > 0)
+    a2 = jnp.exp(m2 - m) * (d2 > 0)
+    num = n1 * a1[..., None] + n2 * a2[..., None]
+    den = d1 * a1 + d2 * a2
+    return (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
+
+
+def tiered_decode_attention_latent(
+    q: jax.Array,  # (b, h, D) — D = latent + rope dims
+    cache: TieredKVCache,
+    value_dim: int,
+    scale: float,
+) -> jax.Array:
+    """MLA absorbed-form attention over a tiered *latent* cache.
+
+    The cache k-slot holds (c_kv ‖ k_rope) per token, shape (b, s, D); the
+    v-slot is empty (0-dim) — values are the first ``value_dim`` dims of the
+    k-slot (the latent), so the latent is stored exactly once. Returns the
+    per-head latent context (b, h, value_dim).
+    """
+    length = cache.length
+    b = q.shape[0]
+    hot_valid = jnp.broadcast_to(
+        (jnp.arange(cache.hot_cap) < length)[None], (b, cache.hot_cap)
+    )
+    n_cold = jnp.clip(length - cache.hot_cap, 0, cache.cold_cap)
+    cold_valid = jnp.broadcast_to(
+        (jnp.arange(cache.cold_cap) < n_cold)[None], (b, cache.cold_cap)
+    )
+
+    def partial(kbuf, valid):
+        if kbuf.shape[1] == 0:  # zero-capacity tier: neutral merge element
+            h = q.shape[1]
+            return (
+                jnp.zeros((b, h, value_dim), jnp.float32),
+                jnp.zeros((b, h), jnp.float32),
+                jnp.full((b, h), jnp.finfo(jnp.float32).min),
+            )
+        kf = kbuf.astype(jnp.float32)  # (b, s, D)
+        logits = jnp.einsum("bhd,bsd->bhs", q.astype(jnp.float32), kf) * scale
+        neg = jnp.finfo(jnp.float32).min
+        logits = jnp.where(valid[:, None, :], logits, neg)
+        m = jnp.max(logits, axis=-1)  # (b, h)
+        p = jnp.exp(logits - m[..., None]) * valid[:, None, :]
+        denom = jnp.sum(p, axis=-1)
+        num = jnp.einsum("bhs,bsv->bhv", p, kf[..., :value_dim])
+        return num, denom, m
+
+    n1, d1, m1 = partial(cache.hot_k, hot_valid)
+    n2, d2, m2 = partial(cache.cold_k, cold_valid)
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m) * (d1 > 0)
+    a2 = jnp.exp(m2 - m) * (d2 > 0)
+    num = n1 * a1[..., None] + n2 * a2[..., None]
+    den = d1 * a1 + d2 * a2
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Traffic accounting hooks (ties the functional cache to hwmodel/dr_edram)
+# ---------------------------------------------------------------------------
+
+
+def step_traffic_bytes(
+    length: int, hot_cap: int, token_bytes: int
+) -> dict:
+    """External vs on-die bytes moved by one decode step at cache length L."""
+    hot_tokens = min(length, hot_cap)
+    cold_tokens = max(length - hot_cap, 0)
+    write_ext = 0 if length < hot_cap else token_bytes
+    return {
+        "ondie_read": hot_tokens * token_bytes,
+        "ext_read": cold_tokens * token_bytes,
+        "ondie_write": token_bytes - write_ext,
+        "ext_write": write_ext,
+    }

@@ -1,0 +1,86 @@
+"""Quantized LoRA domain adapters (paper §III-C, Tables I/II, Fig. 6).
+
+BitROM's ROM weights are fused at fabrication; task flexibility comes from
+small SRAM-backed LoRA adapters. The paper's configuration (which we adopt
+as defaults and reproduce in benchmarks):
+
+  * rank 16
+  * adapters ONLY on Value + Output projections (attention) and the Down
+    projection (MLP) — Table II shows this matches full adaptation at
+    0.22% extra parameters
+  * LoRA weights quantized to 6 bits, activations 8 bits (Falcon3 BitNet
+    convention; Fig. 6(a) shows 6b is lossless for task metrics)
+  * extra ops ~0.7% of the host projection layer
+
+The base (ROM) weights are frozen during adaptation — training updates only
+LoRA parameters, mirroring the hardware exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import act_quant_ste
+
+DEFAULT_RANK = 16
+DEFAULT_LORA_BITS = 6
+DEFAULT_ACT_BITS = 8
+# Paper's Table II row 4 ("our configuration"): V, O, Down.
+DEFAULT_TARGETS: tuple = ("v", "o", "down")
+
+
+def init(key: jax.Array, d_in: int, d_out: int, rank: int = DEFAULT_RANK, dtype=jnp.float32):
+    """LoRA factors: A ~ N(0, 1/r) (d_in, r); B = 0 (r, d_out)."""
+    a = jax.random.normal(key, (d_in, rank), dtype) * (1.0 / rank) ** 0.5
+    b = jnp.zeros((rank, d_out), dtype)
+    return {"a": a, "b": b}
+
+
+def _quant_sym_ste(w: jax.Array, bits: int) -> jax.Array:
+    """Per-output-column symmetric fake quantization with STE."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    w32 = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(w32), axis=0, keepdims=True)
+    scale = qmax / jnp.maximum(absmax, 1e-8)
+    wq = jnp.clip(jnp.round(w32 * scale), -qmax - 1.0, qmax) / scale
+    return (w32 + jax.lax.stop_gradient(wq - w32)).astype(w.dtype)
+
+
+def apply(
+    params: dict,
+    x: jax.Array,
+    alpha: float = 2.0 * DEFAULT_RANK,
+    weight_bits: int = DEFAULT_LORA_BITS,
+    act_bits: int = DEFAULT_ACT_BITS,
+) -> jax.Array:
+    """Quantized LoRA delta: (x_q @ A_q) @ B_q * (alpha / r)."""
+    rank = params["a"].shape[-1]
+    aq = _quant_sym_ste(params["a"], weight_bits)
+    bq = _quant_sym_ste(params["b"], weight_bits)
+    xq = act_quant_ste(x, bits=act_bits)
+    return ((xq @ aq) @ bq) * (alpha / rank)
+
+
+# ---------------------------------------------------------------------------
+# Accounting (reproduces Table I/II parameter-% columns and the 0.7%-ops claim)
+# ---------------------------------------------------------------------------
+
+
+def lora_params_count(d_in: int, d_out: int, rank: int = DEFAULT_RANK) -> int:
+    return rank * (d_in + d_out)
+
+
+def lora_ops_fraction(d_in: int, d_out: int, rank: int = DEFAULT_RANK) -> float:
+    """Extra MACs relative to the host projection (paper: ~0.7%)."""
+    return rank * (d_in + d_out) / (d_in * d_out)
+
+
+def adapter_param_fraction(
+    layer_dims: Sequence[tuple], total_base_params: int, rank: int = DEFAULT_RANK
+) -> float:
+    """Σ LoRA params over adapted layers / base model params (Table I col 2)."""
+    extra = sum(lora_params_count(di, do, rank) for di, do in layer_dims)
+    return extra / total_base_params

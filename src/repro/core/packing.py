@@ -1,0 +1,151 @@
+"""Ternary weight packing codecs — the BiROMA density analogue (paper §III-B).
+
+BiROMA stores two ternary weights per transistor, doubling bit density to
+4,967 kb/mm². On TPU the scarce resource is HBM capacity/bandwidth, so the
+analogue is packing trits densely in HBM:
+
+  * ``pack2`` — 2 bits/trit, 4 trits per uint8 (fast shift/mask decode).
+      encoding: 0b00 = 0, 0b01 = +1, 0b10 = -1 (matches the TriMLA
+      comparator truth table: MSB = "is negative", LSB = "is positive";
+      MSB|LSB == 0 means skip).
+  * ``pack243`` — base-3^5, 5 trits per uint8 = 1.6 bits/trit, within
+      1.3% of the 1.58-bit entropy limit. This is the "two weights per
+      cell" trick pushed to its arithmetic conclusion (beyond-paper).
+
+Both codecs pack along the *contraction* (K) axis of a (K, N) weight so a
+matmul kernel can decode K-tiles locally in VMEM. K must be padded to a
+multiple of the group size (4 or 5); ``pad_k`` handles that with zeros
+(zero trits are skip-ops, so padding is computation-neutral).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PACK2_GROUP = 4
+PACK243_GROUP = 5
+
+# 2-bit trit codes (TriMLA comparator truth table).
+_CODE_ZERO = 0b00
+_CODE_POS = 0b01
+_CODE_NEG = 0b10
+
+
+def padded_k(k: int, group: int) -> int:
+    return (k + group - 1) // group * group
+
+
+def pad_k(wq: jax.Array, group: int) -> jax.Array:
+    """Zero-pad the K (first) axis of an int8 trit array to a group multiple."""
+    k = wq.shape[0]
+    pk = padded_k(k, group)
+    if pk == k:
+        return wq
+    pad = [(0, pk - k)] + [(0, 0)] * (wq.ndim - 1)
+    return jnp.pad(wq, pad)
+
+
+# ---------------------------------------------------------------------------
+# pack2: 4 trits / byte, 2 bits each
+# ---------------------------------------------------------------------------
+
+
+def _trit_to_code2(t: jax.Array) -> jax.Array:
+    """{-1,0,+1} int8 -> 2-bit code (uint8)."""
+    return jnp.where(t == 1, _CODE_POS, jnp.where(t == -1, _CODE_NEG, _CODE_ZERO)).astype(
+        jnp.uint8
+    )
+
+
+def _code2_to_trit(c: jax.Array) -> jax.Array:
+    """2-bit code -> {-1,0,+1} int8. trit = LSB - MSB."""
+    lsb = (c & 1).astype(jnp.int8)
+    msb = ((c >> 1) & 1).astype(jnp.int8)
+    return lsb - msb
+
+
+def pack2(wq: jax.Array) -> jax.Array:
+    """(K, ...) int8 trits -> (K/4, ...) uint8. K padded with zeros."""
+    wq = pad_k(wq, PACK2_GROUP)
+    k = wq.shape[0]
+    codes = _trit_to_code2(wq).reshape((k // PACK2_GROUP, PACK2_GROUP) + wq.shape[1:])
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8).reshape(
+        (1, PACK2_GROUP) + (1,) * (wq.ndim - 1)
+    )
+    return jnp.sum(
+        codes.astype(jnp.uint8) << shifts, axis=1, dtype=jnp.uint8
+    )
+
+
+def unpack2(packed: jax.Array, k: int | None = None) -> jax.Array:
+    """(K/4, ...) uint8 -> (K, ...) int8 trits; trims padding to ``k``."""
+    parts = []
+    for i in range(PACK2_GROUP):
+        parts.append(_code2_to_trit((packed >> (2 * i)) & 0b11))
+    out = jnp.stack(parts, axis=1).reshape((-1,) + packed.shape[1:])
+    if k is not None:
+        out = out[:k]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pack243: 5 trits / byte, base-3 (beyond-paper density: 1.6 b/trit)
+# ---------------------------------------------------------------------------
+
+
+def pack243(wq: jax.Array) -> jax.Array:
+    """(K, ...) int8 trits -> (K/5, ...) uint8 with value sum (t_i+1)*3^i."""
+    wq = pad_k(wq, PACK243_GROUP)
+    k = wq.shape[0]
+    digits = (wq.astype(jnp.int32) + 1).reshape(
+        (k // PACK243_GROUP, PACK243_GROUP) + wq.shape[1:]
+    )
+    weights = jnp.array([1, 3, 9, 27, 81], dtype=jnp.int32).reshape(
+        (1, PACK243_GROUP) + (1,) * (wq.ndim - 1)
+    )
+    return jnp.sum(digits * weights, axis=1).astype(jnp.uint8)
+
+
+def unpack243(packed: jax.Array, k: int | None = None) -> jax.Array:
+    """(K/5, ...) uint8 -> (K, ...) int8 trits via repeated divmod 3."""
+    v = packed.astype(jnp.int32)
+    parts = []
+    for _ in range(PACK243_GROUP):
+        parts.append((v % 3 - 1).astype(jnp.int8))
+        v = v // 3
+    out = jnp.stack(parts, axis=1).reshape((-1,) + packed.shape[1:])
+    if k is not None:
+        out = out[:k]
+    return out
+
+
+# numpy lookup table (243, 5) used by the Pallas kernel for decode-by-gather.
+def decode_table_243() -> np.ndarray:
+    tbl = np.zeros((243, PACK243_GROUP), dtype=np.int8)
+    for v in range(243):
+        x = v
+        for i in range(PACK243_GROUP):
+            tbl[v, i] = x % 3 - 1
+            x //= 3
+    return tbl
+
+
+# ---------------------------------------------------------------------------
+# Density accounting (DESIGN.md §2 / hwmodel)
+# ---------------------------------------------------------------------------
+
+BITS_PER_TRIT = {"none": 8.0, "pack2": 2.0, "pack243": 8.0 / 5.0}
+TRIT_ENTROPY_BITS = 1.5849625007211563  # log2(3)
+
+
+def packed_bytes(n_weights: int, codec: str) -> int:
+    """HBM bytes needed to store ``n_weights`` ternary weights under a codec."""
+    if codec == "none":
+        return n_weights  # int8 unpacked
+    if codec == "pack2":
+        return (n_weights + PACK2_GROUP - 1) // PACK2_GROUP
+    if codec == "pack243":
+        return (n_weights + PACK243_GROUP - 1) // PACK243_GROUP
+    raise ValueError(f"unknown codec {codec!r}")

@@ -1,0 +1,128 @@
+"""BitNet b1.58 ternary quantization (paper §II-A, §III-B).
+
+Weight quantization follows BitNet b1.58 [Ma et al., 2402.17764]:
+    scale = mean(|W|)                      (absmean, per tensor)
+    W_q   = round_clip(W / scale, -1, +1)  in {-1, 0, +1}
+so the dequantized weight is ``W_q * scale``.
+
+Activation quantization follows the paper's two modes:
+  * A8 — BitNet b1.58: per-token absmax int8 in [-128, 127]
+  * A4 — BitNet a4.8:  per-token absmax int4 in [-8, 7]
+(BitROM's TriMLA takes 4-bit activations natively and runs 8-bit
+bit-serially in two cycles; on TPU both execute as one int8 MXU pass —
+see DESIGN.md §2.1.)
+
+All functions are pure and jit-safe. Straight-through-estimator (STE)
+variants are provided for quantization-aware training.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+class QuantizedWeight(NamedTuple):
+    """Ternary weight in unpacked form: values in {-1, 0, +1} (int8)."""
+
+    wq: jax.Array  # int8, same shape as the source weight
+    scale: jax.Array  # f32 scalar (absmean of the source weight)
+
+
+class QuantizedActivation(NamedTuple):
+    """Integer activation with a per-token (row) dequantization scale."""
+
+    xq: jax.Array  # int8 (A8 uses full range, A4 stays in [-8, 7])
+    scale: jax.Array  # f32, shape x.shape[:-1] + (1,); dequant: xq / scale
+
+
+def weight_quant_absmean(w: jax.Array) -> QuantizedWeight:
+    """BitNet b1.58 absmean ternary quantization. Returns int8 trits + scale."""
+    scale = jnp.mean(jnp.abs(w.astype(jnp.float32)))
+    scale = jnp.maximum(scale, EPS)
+    wq = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -1.0, 1.0)
+    return QuantizedWeight(wq.astype(jnp.int8), scale)
+
+
+def weight_dequant(q: QuantizedWeight, dtype=jnp.float32) -> jax.Array:
+    return (q.wq.astype(jnp.float32) * q.scale).astype(dtype)
+
+
+def act_quant(x: jax.Array, bits: int = 8) -> QuantizedActivation:
+    """Per-token absmax symmetric quantization to ``bits`` (8 or 4)."""
+    if bits == 8:
+        qmax, qmin = 127.0, -128.0
+    elif bits == 4:
+        qmax, qmin = 7.0, -8.0
+    else:  # pragma: no cover - guarded by config validation
+        raise ValueError(f"unsupported activation bits: {bits}")
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = qmax / jnp.maximum(absmax, EPS)
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * scale), qmin, qmax)
+    return QuantizedActivation(xq.astype(jnp.int8), scale)
+
+
+def act_dequant(q: QuantizedActivation, dtype=jnp.float32) -> jax.Array:
+    return (q.xq.astype(jnp.float32) / q.scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators for QAT (train_step forward).
+# ---------------------------------------------------------------------------
+
+
+def weight_quant_ste(w: jax.Array) -> jax.Array:
+    """Fake-quantized weight with identity gradient (BitNet training rule)."""
+    q = weight_quant_absmean(w)
+    wdq = weight_dequant(q, dtype=jnp.float32)
+    w32 = w.astype(jnp.float32)
+    return (w32 + jax.lax.stop_gradient(wdq - w32)).astype(w.dtype)
+
+
+def act_quant_ste(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Fake-quantized activation with identity gradient."""
+    q = act_quant(x, bits=bits)
+    xdq = act_dequant(q, dtype=jnp.float32)
+    x32 = x.astype(jnp.float32)
+    return (x32 + jax.lax.stop_gradient(xdq - x32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference integer matmul semantics (TriMLA truth table).
+#
+#   weight  mode      contribution
+#   ------  --------  ------------
+#     0     skip      0            (EN=0: accumulator disabled)
+#    +1     add       +activation
+#    -1     subtract  -activation
+#
+# A ternary MAC is therefore a signed add, never a multiply.
+# ---------------------------------------------------------------------------
+
+
+def ternary_mac_reference(xq: jax.Array, wq: jax.Array) -> jax.Array:
+    """int32 accumulation of int8 activations against {-1,0,+1} trits.
+
+    xq: (..., K) int8; wq: (K, N) int8 trits. Returns (..., N) int32.
+    Implemented as select(add/sub/skip) to mirror TriMLA exactly.
+    """
+    x32 = xq.astype(jnp.int32)
+    contrib_pos = jnp.einsum("...k,kn->...n", x32, (wq == 1).astype(jnp.int32))
+    contrib_neg = jnp.einsum("...k,kn->...n", x32, (wq == -1).astype(jnp.int32))
+    return contrib_pos - contrib_neg
+
+
+def ternary_sparsity(wq: jax.Array) -> jax.Array:
+    """Fraction of zero weights (the TriMLA skip rate)."""
+    return jnp.mean((wq == 0).astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def fake_quant_linear(x: jax.Array, w: jax.Array, bits: int = 8) -> jax.Array:
+    """QAT forward: y = act_q(x) @ weight_q(w), computed in float with STE."""
+    return act_quant_ste(x, bits=bits) @ weight_quant_ste(w)

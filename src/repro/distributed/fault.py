@@ -1,0 +1,101 @@
+"""Fault tolerance: crash recovery, straggler detection, preemption handling.
+
+Designed for the 1000+-node posture (DESIGN.md §5):
+  * ``run_with_recovery`` — supervises a training loop; on failure it
+    restarts from the latest atomic checkpoint (tested: an injected crash
+    at step N resumes and reproduces the uninterrupted run bit-for-bit,
+    because the data pipeline state rides in the checkpoint);
+  * ``StragglerMonitor`` — sliding-window step-time watchdog; flags steps
+    slower than ``factor`` × the window median (on a real cluster the
+    callback triggers re-slicing / hot-spare swap; here it records);
+  * ``PreemptionGuard`` — SIGTERM-style flag that converts preemption into
+    a clean checkpoint-and-exit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import statistics
+import time
+from typing import Callable, Optional
+
+
+class InjectedFault(RuntimeError):
+    """Deterministic fault for recovery tests."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    fail_at_step: int = -1
+    fired: bool = False
+
+    def check(self, step: int) -> None:
+        if step == self.fail_at_step and not self.fired:
+            self.fired = True
+            raise InjectedFault(f"injected node failure at step {step}")
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 20, factor: float = 3.0,
+                 on_straggler: Optional[Callable] = None):
+        self.window = window
+        self.factor = factor
+        self.on_straggler = on_straggler
+        self.times: list = []
+        self.flagged: list = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        self.times.append(seconds)
+        hist = self.times[-self.window :]
+        if len(hist) >= 5:
+            med = statistics.median(hist)
+            if seconds > self.factor * med:
+                self.flagged.append((step, seconds, med))
+                if self.on_straggler:
+                    self.on_straggler(step, seconds, med)
+                return True
+        return False
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+
+class PreemptionGuard:
+    """Converts SIGTERM/SIGINT into a cooperative 'checkpoint now' flag."""
+
+    def __init__(self, install_handlers: bool = False):
+        self.requested = False
+        if install_handlers:  # not in tests — pytest owns signals
+            signal.signal(signal.SIGTERM, self._handler)
+
+    def _handler(self, signum, frame):  # pragma: no cover
+        self.requested = True
+
+    def request(self) -> None:  # manual trigger (tests / external agent)
+        self.requested = True
+
+
+def run_with_recovery(
+    loop_fn: Callable[[Optional[int]], dict],
+    max_restarts: int = 3,
+    on_restart: Optional[Callable] = None,
+) -> dict:
+    """Supervise ``loop_fn(resume_step)``; restart from checkpoints on crash.
+
+    ``loop_fn`` must accept ``resume_step`` (None = fresh or auto-detect)
+    and return its result dict. Exceptions trigger a restart with
+    resume_step=None, letting the loop auto-detect the latest checkpoint.
+    """
+    attempts = 0
+    while True:
+        try:
+            return loop_fn(None)
+        except Exception as e:  # noqa: BLE001
+            attempts += 1
+            if attempts > max_restarts:
+                raise
+            if on_restart:
+                on_restart(attempts, e)
+            time.sleep(0.01)

@@ -1,0 +1,174 @@
+"""Analytical hardware model — reproduces BitROM's evaluation axes.
+
+Calibration constants come from the paper itself (Table III, §V-B) and its
+cited references; every derived claim is asserted in tests/benchmarks:
+
+  * 20.8 / 5.2 TOPS/W (A4 / A8 activations, 65 nm, 0.6/1.2 V)
+  * bit density 4,967 kb/mm² (BiROMA: 1.58 x 2 bits per 1-T cell)
+  * 10x density over digital DCiROM (487 kb/mm², ASPDAC'25 [1])
+  * TriMLA + periphery + adder tree = 4.8% of macro area
+  * DR eDRAM 13.5 MB for Falcon3-1B (S=128, 32 hot tokens, 6 batches)
+  * 43.6% external-DRAM reduction (via core/dr_edram.py)
+  * Fig. 1(a): LLaMA-7B > 1,000 cm² at DCiROM-class density; BitNet-1B
+    "tens of cm²" — reproduced holding density at the 65 nm measured value
+    (ROM arrays are wire/periphery-limited; the paper's node-scaled figure
+    is not derivable from its own densities, noted as a deviation).
+
+System-level energy compares BitROM (zero weight reload) against a
+weight-reloading accelerator baseline (the paper's "Update-Free" row):
+DRAM access energy uses LPDDR-class 20 pJ/bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import dr_edram
+
+# ---- paper calibration constants (65 nm unless noted) ----
+TOPS_PER_W_A4 = 20.8  # 1.58b weights, 4b activations
+TOPS_PER_W_A8 = 5.2  # 8b activations (2-cycle bit-serial + tree toggling)
+BIT_DENSITY_KB_MM2 = 4967.0  # BiROMA
+DCIROM_DENSITY_KB_MM2 = 487.0  # ASPDAC'25 [1] digital CiROM baseline (macro)
+# Task-level density implied by [1]'s full ResNet-56 mapping: 0.85M params
+# x 4b in 12 mm^2 (incl. all periphery/trees) — the basis of Fig. 1(a)
+DCIROM_TASK_DENSITY_KB_MM2 = 0.85e6 * 4 / 1e3 / 12.0
+DCIROM_TOPS_PER_W = (38.0, 9.0)
+PERIPHERY_FRACTION = 0.048  # TriMLA + peripheral logic + adder tree
+BITS_PER_WEIGHT = 1.58
+
+# DR eDRAM density calibrated from the paper's 14 nm deployment:
+# 13.5 MiB <-> 10.24 cm^2
+EDRAM_MB_PER_CM2_14NM = 13.5 / 10.24
+
+# energy constants (documented assumptions)
+DRAM_PJ_PER_BIT = 20.0  # LPDDR-class external DRAM
+EDRAM_PJ_PER_BIT = 0.6  # on-die eDRAM access
+SRAM_PJ_PER_BIT = 0.2  # LoRA SRAM
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroSpec:
+    """One BiROMA + TriMLA macro (paper §III-B)."""
+
+    rows: int = 2048
+    cols: int = 1024
+    trits_per_cell: int = 2  # bidirectional: two ternary weights / transistor
+    cols_per_trimla: int = 8
+
+    @property
+    def trits(self) -> int:
+        return self.rows * self.cols * self.trits_per_cell
+
+    @property
+    def capacity_bits(self) -> float:
+        return self.trits * BITS_PER_WEIGHT
+
+    @property
+    def n_trimla(self) -> int:
+        return self.cols // self.cols_per_trimla
+
+
+def energy_per_op_pj(act_bits: int = 4) -> float:
+    tops_w = TOPS_PER_W_A4 if act_bits == 4 else TOPS_PER_W_A8
+    return 1e12 / (tops_w * 1e12)  # pJ per OP
+
+
+def macro_area_mm2(n_weights: int) -> float:
+    """Silicon area for n ternary weights incl. periphery (65 nm)."""
+    bits_kb = n_weights * BITS_PER_WEIGHT / 1e3
+    array = bits_kb / BIT_DENSITY_KB_MM2
+    return array / (1.0 - PERIPHERY_FRACTION)
+
+
+def edram_area_cm2(nbytes: int) -> float:
+    return nbytes / 2**20 / EDRAM_MB_PER_CM2_14NM
+
+
+def density_ratio_vs_dcirom() -> float:
+    return BIT_DENSITY_KB_MM2 / DCIROM_DENSITY_KB_MM2
+
+
+def model_area_estimate_cm2(n_params: int, bits_per_weight: float,
+                            density_kb_mm2: float = DCIROM_DENSITY_KB_MM2) -> float:
+    """Fig. 1(a)-style full-model CiROM area at a given cell density."""
+    kb = n_params * bits_per_weight / 1e3
+    return kb / density_kb_mm2 / 100.0  # mm^2 -> cm^2
+
+
+# ---------------------------------------------------------------------------
+# System-level per-token energy (the "Update-Free" comparison)
+# ---------------------------------------------------------------------------
+
+
+def token_energy_uj(
+    n_active_params: int,
+    seq_len: int,
+    kv_bytes_per_token: int,
+    hot_tokens: int = 32,
+    act_bits: int = 4,
+    weight_reload: bool = False,
+    weight_bits: float = BITS_PER_WEIGHT,
+) -> dict:
+    """Energy breakdown (uJ) for ONE decode step at context length seq_len."""
+    macs = 2.0 * n_active_params  # ops per token
+    e_mac = macs * energy_per_op_pj(act_bits)
+
+    e_weights = 0.0
+    if weight_reload:  # baseline: stream all weights from DRAM each token
+        e_weights = n_active_params * weight_bits * DRAM_PJ_PER_BIT
+
+    hot = min(hot_tokens, seq_len)
+    cold = seq_len - hot
+    e_kv_ext = cold * kv_bytes_per_token * 8 * DRAM_PJ_PER_BIT
+    e_kv_die = hot * kv_bytes_per_token * 8 * EDRAM_PJ_PER_BIT
+
+    total = e_mac + e_weights + e_kv_ext + e_kv_die
+    return {
+        "mac_uj": e_mac / 1e6,
+        "weight_reload_uj": e_weights / 1e6,
+        "kv_external_uj": e_kv_ext / 1e6,
+        "kv_ondie_uj": e_kv_die / 1e6,
+        "total_uj": total / 1e6,
+    }
+
+
+def system_efficiency_gain(n_active_params: int, seq_len: int,
+                           kv_bytes_per_token: int, act_bits: int = 4) -> float:
+    """BitROM vs weight-reloading accelerator: total-energy ratio (>1)."""
+    reload = token_energy_uj(
+        n_active_params, seq_len, kv_bytes_per_token,
+        hot_tokens=0, act_bits=act_bits, weight_reload=True,
+    )["total_uj"]
+    bitrom = token_energy_uj(
+        n_active_params, seq_len, kv_bytes_per_token,
+        hot_tokens=32, act_bits=act_bits, weight_reload=False,
+    )["total_uj"]
+    return reload / bitrom
+
+
+# ---------------------------------------------------------------------------
+# Falcon3-1B deployment (paper §V-B)
+# ---------------------------------------------------------------------------
+
+
+def falcon3_deployment(cfg, seq_len: int = 128, hot_tokens: int = 32,
+                       n_batches: int = 6, n_partitions: int = 6) -> dict:
+    """The paper's reference deployment, all numbers derived."""
+    kv_token = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2  # bytes / layer
+    edram = dr_edram.edram_bytes(
+        hot_tokens, cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim, n_batches
+    )
+    n = cfg.param_count()
+    return {
+        "n_params": n,
+        "macro_partitions": n_partitions,
+        "layers_per_partition": cfg.n_layers // n_partitions,
+        "pipeline_batches": n_batches,
+        "edram_bytes": edram,
+        "edram_mib": edram / 2**20,
+        "macro_area_mm2_65nm": macro_area_mm2(n),
+        "edram_area_cm2_14nm": edram_area_cm2(edram),
+        "kv_reduction": dr_edram.closed_form_reduction(seq_len, hot_tokens),
+        "kv_bytes_per_token_per_layer": kv_token,
+    }

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical ternary compute path.
+
+  ternary_matmul — packed-trit decode + local-then-global accumulation
+  ops            — jit'd dispatch (pallas | xla) with padding/batching
+  ref            — pure-jnp oracles
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,101 @@
+"""Jit'd dispatch wrappers around the ternary kernels.
+
+``impl`` selects the execution path:
+  * "pallas" — the Pallas TPU kernel (interpret=True automatically on CPU,
+    executing the kernel body in Python for correctness validation);
+  * "xla"    — unpack-then-dot in plain XLA. Used for the sharded
+    multi-pod lowering (dry-run) where a hand-written kernel would block
+    GSPMD propagation; keeps the same packed HBM layout so the memory
+    roofline term is identical.
+
+Handles arbitrary leading batch dims and non-aligned M/N/K by zero padding
+(zero trits are TriMLA skip-ops; zero activations contribute nothing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels.ternary_matmul import ternary_matmul_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _xla_path(xq: jax.Array, packed: jax.Array, k: int, codec: str) -> jax.Array:
+    unpack = packing.unpack2 if codec == "pack2" else packing.unpack243
+    wq = unpack(packed, k=k)  # (K, N) int8
+    return jax.lax.dot_general(
+        xq.astype(jnp.int8),
+        wq,
+        dimension_numbers=(((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "codec", "impl", "block_m", "block_n", "block_k")
+)
+def ternary_matmul(
+    xq: jax.Array,
+    packed: jax.Array,
+    *,
+    k: int,
+    codec: str = "pack2",
+    impl: str = "xla",
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+) -> jax.Array:
+    """int8 activations (..., K) x packed trits -> int32 (..., N)."""
+    if impl == "xla":
+        return _xla_path(xq, packed, k, codec)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    lead = xq.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = xq.reshape(m, xq.shape[-1])
+
+    # pad to block multiples (and codec group)
+    n = packed.shape[1]
+    kp_logical = packed.shape[0] * group  # K padded to group already
+    block_k = max(group, block_k // group * group)  # align block to codec group
+    block_k = min(block_k, kp_logical)  # don't exceed (padded) K
+    mp = _round_up(max(m, 1), block_m)
+    np_ = _round_up(n, block_n)
+    kpp = _round_up(kp_logical, block_k)
+    x2 = jnp.pad(
+        x2, ((0, mp - m), (0, kpp - xq.shape[-1]))
+    )  # pad K with zero activations
+    wp = jnp.pad(packed, ((0, kpp // group - packed.shape[0]), (0, np_ - n)))
+    # pack243 zero-pad decodes byte 0 -> trits (-1,...): must use the code of
+    # all-zero trits instead. all-zero trits = sum(0+1)*3^i = 121 for pack243,
+    # 0x00 for pack2.
+    if codec == "pack243" and kpp // group > packed.shape[0] or np_ > n:
+        zero_code = 0 if codec == "pack2" else 121
+        if zero_code:
+            mask_r = jnp.arange(kpp // group) >= packed.shape[0]
+            mask_c = jnp.arange(np_) >= n
+            mask = mask_r[:, None] | mask_c[None, :]
+            wp = jnp.where(mask, jnp.uint8(zero_code), wp)
+
+    interpret = jax.default_backend() == "cpu"
+    out = ternary_matmul_pallas(
+        x2,
+        wp,
+        codec=codec,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:m, :n].reshape(lead + (n,))

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the ternary kernels (ground truth for allclose tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.ternary import ternary_mac_reference
+
+
+def ternary_matmul_ref(xq: jax.Array, packed: jax.Array, k: int, codec: str) -> jax.Array:
+    """int8 activations (..., K) x packed trits (K/g, N) -> int32 (..., N).
+
+    Decodes the packed weight to {-1,0,+1} trits and applies the exact
+    TriMLA add/sub/skip semantics (no multiplies).
+    """
+    unpack = packing.unpack2 if codec == "pack2" else packing.unpack243
+    wq = unpack(packed, k=k)  # (K, N) int8
+    return ternary_mac_reference(xq, wq)
+
+
+def ternary_matmul_dense_ref(xq: jax.Array, wq: jax.Array) -> jax.Array:
+    """Same but from unpacked trits (K, N)."""
+    return ternary_mac_reference(xq, wq)
+
+
+def bitlinear_ref(x: jax.Array, w: jax.Array, act_bits: int = 8) -> jax.Array:
+    """Full float-in/float-out reference of the packed BitLinear forward."""
+    from repro.core.ternary import act_quant, weight_quant_absmean
+
+    q = weight_quant_absmean(w)
+    a = act_quant(x, bits=act_bits)
+    acc = ternary_mac_reference(a.xq, q.wq).astype(jnp.float32)
+    return acc * (q.scale / a.scale)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: packed-ternary matmul (the TriMLA/BiROMA analogue).
+
+Structure mirrors the paper's local-then-global accumulation (§III-B):
+
+  * the grid's K dimension streams packed trit tiles HBM -> VMEM;
+  * each (bm, bn) output block keeps an int32 *local accumulator* in VMEM
+    that is updated once per K tile (the TriMLA), never per input bit;
+  * the final K step leaves the completed sum — one "global" result per
+    block, the one-shot adder-tree pass.
+
+Trits arrive packed (2 bits or base-243, see core/packing.py) and are
+decoded *inside* VMEM, so HBM traffic is 0.25 (pack2) or 0.2 (pack243)
+bytes per weight — the kernel-level expression of "weights never move".
+The ternary MAC itself ({-1,0,+1} weights) rides the MXU int8 datapath:
+values -1/0/+1 in int8 make the dot product exactly the add/sub/skip of
+the TriMLA truth table (verified bit-exactly against ref.py).
+
+Block shapes default to MXU-aligned (multiples of 128 on M/N, K tiles
+sized so the packed rows stay lane-aligned). VMEM footprint per step:
+  x tile (bm, bk) int8 + packed tile (bk/g, bn) uint8
+  + decoded (bk, bn) int8 + acc (bm, bn) int32
+e.g. bm=bn=256, bk=512 (pack2): 128K + 32K + 128K + 256K = 544 KiB << 16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import packing
+
+
+def _decode2_block(wp: jax.Array) -> jax.Array:
+    """(bk/4, bn) uint8 -> (bk, bn) int8 trits (2-bit codes, LSB=+, MSB=-)."""
+    parts = []
+    for i in range(packing.PACK2_GROUP):
+        c = (wp >> (2 * i)) & 0b11
+        parts.append(((c & 1).astype(jnp.int8) - ((c >> 1) & 1).astype(jnp.int8)))
+    stacked = jnp.stack(parts, axis=1)  # (bk/4, 4, bn)
+    return stacked.reshape(stacked.shape[0] * packing.PACK2_GROUP, stacked.shape[2])
+
+
+def _decode243_block(wp: jax.Array) -> jax.Array:
+    """(bk/5, bn) uint8 -> (bk, bn) int8 trits via repeated divmod-3."""
+    v = wp.astype(jnp.int16)
+    parts = []
+    for _ in range(packing.PACK243_GROUP):
+        parts.append((v % 3 - 1).astype(jnp.int8))
+        v = v // 3
+    stacked = jnp.stack(parts, axis=1)  # (bk/5, 5, bn)
+    return stacked.reshape(stacked.shape[0] * packing.PACK243_GROUP, stacked.shape[2])
+
+
+def _kernel(x_ref, w_ref, o_ref, *, codec: str, k_steps: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    decode = _decode2_block if codec == "pack2" else _decode243_block
+    trits = decode(w_ref[...])  # (bk, bn) int8 in {-1,0,+1}
+    x = x_ref[...]  # (bm, bk) int8
+    # TriMLA: {-1,0,+1} weights => signed add / skip; on MXU this is an
+    # int8 x int8 -> int32 dot with trit operands.
+    acc = jax.lax.dot_general(
+        x,
+        trits,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codec", "block_m", "block_n", "block_k", "interpret"),
+)
+def ternary_matmul_pallas(
+    xq: jax.Array,
+    packed: jax.Array,
+    *,
+    codec: str = "pack2",
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, K) int8 x packed (K/g, N) uint8 -> (M, N) int32.
+
+    M, N, K must already be padded to block multiples (ops.py handles
+    padding); block_k must be a multiple of the codec group (4 or 5).
+    """
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    assert block_k % group == 0, (block_k, group)
+    m, k = xq.shape
+    kp, n = packed.shape
+    assert kp * group == k, (kp, group, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (m, n, k)
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, codec=codec, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k // group, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(xq, packed)

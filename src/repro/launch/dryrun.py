@@ -1,0 +1,220 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This proves the distribution config is coherent without hardware: the
+production mesh is built from 512 placeholder CPU devices (the XLA_FLAGS
+line above MUST precede every other import — jax locks the device count on
+first init), each cell's step function is jit-lowered with explicit
+in/out shardings and compiled, and the compiled artifact's
+memory_analysis / cost_analysis plus the HLO collective schedule are
+recorded to JSON for the roofline analysis (EXPERIMENTS.md §Dry-run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis import roofline  # noqa: E402
+from repro.configs import SHAPES, applicable_shapes, get_config, list_configs  # noqa: E402
+from repro.launch import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_bundle  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+OPT_RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun_opt"
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+                strategy: str = "baseline", codec: str = "", embed_int8: bool = False,
+                kv_fp8: bool = False) -> dict:
+    """Lower+compile one cell; return the recorded analysis dict.
+
+    strategy: "baseline" (naive column-parallel TP + FSDP) or "megatron"
+    (row/column pairing + sequence parallelism — the beyond-paper
+    optimization pass, recorded separately in EXPERIMENTS.md §Perf).
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if codec or embed_int8 or kv_fp8:
+        bn = cfg.bitnet
+        bn = _dc.replace(bn, codec=codec or bn.codec, embed_int8=embed_int8,
+                         kv_fp8=kv_fp8)
+        cfg = _dc.replace(cfg, bitnet=bn)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = make_bundle(cfg, shape, mesh=mesh)
+
+    mode = "train" if bundle.kind == "train" else "infer"
+    in_shardings = []
+    for i, arg in enumerate(bundle.args):
+        if bundle.kind == "train" and i in (0, 1):  # params / opt state
+            in_shardings.append(shd.param_shardings(arg, cfg, mesh, mode, strategy))
+        elif bundle.kind != "train" and i == 0:  # packed params
+            in_shardings.append(shd.param_shardings(arg, cfg, mesh, mode, strategy))
+        elif bundle.kind == "decode" and i == 1:  # cache
+            in_shardings.append(shd.cache_shardings(arg, cfg, mesh))
+        else:  # batch / tokens
+            in_shardings.append(shd.batch_shardings(arg, mesh))
+
+    out_shardings = shd.out_shardings_for(bundle, in_shardings, cfg, mesh, shape)
+
+    # MoE expert-parallel hints (see models/shard_ctx.py)
+    from repro.launch.mesh import axis_size, batch_axes
+    from repro.models import shard_ctx
+
+    expert_axes = None
+    moe_groups = 1
+    if cfg.moe is not None:
+        dn, mn = axis_size(mesh, "data"), axis_size(mesh, "model")
+        if strategy.startswith("megatron") and bundle.kind == "train":
+            # grouped dispatch: routing local to each data shard; experts
+            # sharded over model only (FSDP-K over data carries memory)
+            expert_axes = ("model",) if cfg.moe.n_experts % mn == 0 else None
+            moe_groups = axis_size(mesh, *batch_axes(mesh))
+        elif cfg.moe.n_experts % (dn * mn) == 0:
+            expert_axes = ("data", "model")
+        elif cfg.moe.n_experts % mn == 0:
+            expert_axes = ("model",)
+
+    seq_axis = "model" if strategy == "megatron_sp" and bundle.kind != "decode" else None
+
+    t0 = time.time()
+    with mesh, shard_ctx.sharding_hints(
+        mesh, expert_axes=expert_axes, batch_axes=batch_axes(mesh),
+        seq_axis=seq_axis, moe_groups=moe_groups,
+    ):
+        jitted = jax.jit(
+            bundle.fn,
+            in_shardings=tuple(in_shardings),
+            out_shardings=out_shardings,
+            donate_argnums=bundle.donate,
+        )
+        lowered = jitted.lower(*bundle.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = roofline.collective_bytes_from_hlo(compiled.as_text())
+
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "strategy": strategy,
+        "codec": cfg.bitnet.codec,
+        "embed_int8": embed_int8,
+        "kv_fp8": kv_fp8,
+        "n_devices": int(n_dev),
+        "kind": bundle.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_total": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "collectives": coll,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}  "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis (per device): args={rec['memory']['argument_bytes']/2**30:.2f}GiB "
+              f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"out={rec['memory']['output_bytes']/2**30:.2f}GiB")
+        print(f"  cost_analysis: flops={rec['flops_total']:.3e} "
+              f"bytes={rec['bytes_accessed']:.3e}")
+        print(f"  collectives: {coll['total_bytes']/2**30:.3f} GiB over "
+              f"{coll['op_count']} ops {dict(list(coll['by_kind'].items()))}")
+    return rec
+
+
+def save_record(rec: dict) -> Path:
+    d = RESULTS_DIR if rec.get("strategy", "baseline") == "baseline" else OPT_RESULTS_DIR
+    d.mkdir(parents=True, exist_ok=True)
+    suffix = ""
+    if rec.get("codec") and rec["codec"] != "pack2":
+        suffix += f"__{rec['codec']}"
+    if rec.get("embed_int8"):
+        suffix += "__emb8"
+    if rec.get("kv_fp8"):
+        suffix += "__kvfp8"
+    out = d / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json"
+    out.write_text(json.dumps(rec, indent=2))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="megatron row/column pairing (results/dryrun_opt)")
+    ap.add_argument("--opt-sp", action="store_true",
+                    help="megatron pairing + sequence parallelism")
+    ap.add_argument("--codec", default="", choices=["", "pack2", "pack243"])
+    ap.add_argument("--embed-int8", action="store_true")
+    ap.add_argument("--kv-fp8", action="store_true")
+    args = ap.parse_args()
+    strategy = "megatron_sp" if args.opt_sp else ("megatron" if args.opt else "baseline")
+
+    if args.all:
+        cells = [
+            (a, s)
+            for a in list_configs()
+            if a != "falcon3-1b"  # paper-target arch, not an assigned cell
+            for s in applicable_shapes(get_config(a))
+        ]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    res_dir = RESULTS_DIR if strategy == "baseline" else OPT_RESULTS_DIR
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            name = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            if args.skip_existing and (res_dir / f"{name}.json").exists():
+                print(f"[skip] {name}")
+                continue
+            try:
+                rec = dryrun_cell(arch, shape, mp, strategy=strategy, codec=args.codec, embed_int8=args.embed_int8, kv_fp8=args.kv_fp8)
+                save_record(rec)
+            except Exception as e:  # noqa: BLE001
+                failures.append((name, repr(e)))
+                print(f"[FAIL] {name}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for n, e in failures:
+            print(" ", n, e)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Entry points lowered by the dry-run / launchers, + input_specs().
+
+One builder per shape kind (DESIGN.md §6):
+  train_4k     -> train_step(params, opt_state, batch)
+  prefill_32k  -> prefill_step(packed_params, batch) -> (logits, cache)
+  decode_32k / long_500k -> serve_step(packed_params, cache, tokens)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every input — no
+device allocation ever happens in the dry-run (params/caches come from
+jax.eval_shape over the real initializers, so the specs can never drift
+from the code).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, get_overrides
+from repro.models import pack as pack_lib
+from repro.models import transformer as T
+from repro.training import optimizer as opt_lib
+from repro.training import train_lib
+
+PARAM_DTYPE = jnp.bfloat16
+HOT_CAP = T.DEFAULT_HOT_CAP
+
+
+class StepBundle(NamedTuple):
+    fn: Any  # callable to jit
+    args: tuple  # ShapeDtypeStruct pytrees, in order
+    donate: tuple  # donated arg indices
+    kind: str
+
+
+def _batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    f = functools.partial(jax.ShapeDtypeStruct, dtype=PARAM_DTYPE)
+    if cfg.family == "audio":
+        return {"frames": f((batch, seq, cfg.frontend_dim)), "labels": i32((batch, seq))}
+    if cfg.family == "vlm":
+        st = seq - cfg.n_patches
+        return {
+            "tokens": i32((batch, st)),
+            "patches": f((batch, cfg.n_patches, cfg.frontend_dim)),
+            "labels": i32((batch, st)),
+        }
+    return {"tokens": i32((batch, seq)), "labels": i32((batch, seq))}
+
+
+def param_specs(cfg: ModelConfig, packed: bool):
+    def build(key):
+        p = T.init_params(key, cfg, dtype=PARAM_DTYPE)
+        return pack_lib.pack_params(p, cfg) if packed else p
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, hot_cap: int = HOT_CAP):
+    return jax.eval_shape(
+        lambda: T.init_decode_cache(cfg, batch, max_len, hot_cap, dtype=PARAM_DTYPE)
+    )
+
+
+def decode_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Cold capacity stays model-axis divisible: hot 32 + cold seq_len."""
+    return HOT_CAP + seq_len
+
+
+def make_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> StepBundle:
+    ov = get_overrides(cfg.name, shape.name)
+    n_micro = ov.get("microbatches", 1)
+    opt_cfg = opt_lib.AdamWConfig(quantized_state=ov.get("opt_8bit", False))
+    params = param_specs(cfg, packed=False)
+    batch = _batch_specs(cfg, shape.global_batch, shape.seq_len)
+    grad_sh, micro_sh = None, None
+    if mesh is not None:
+        from repro.launch import sharding as shd
+
+        grad_sh = shd.param_shardings(params, cfg, mesh, "train")
+        micro = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                (x.shape[0] // n_micro,) + x.shape[1:], x.dtype
+            ),
+            batch,
+        )
+        micro_sh = shd.micro_batch_shardings(micro, mesh)
+    step = train_lib.make_train_step(
+        cfg, opt_cfg, n_micro=n_micro, grad_shardings=grad_sh, micro_shardings=micro_sh
+    )
+    opt_state = jax.eval_shape(lambda p: opt_lib.init(p, opt_cfg), params)
+    return StepBundle(fn=step, args=(params, opt_state, batch), donate=(0, 1), kind="train")
+
+
+def make_prefill_bundle(cfg: ModelConfig, shape: ShapeConfig) -> StepBundle:
+    max_len = decode_cache_len(cfg, shape.seq_len)
+
+    if cfg.is_encoder:
+        # encoder-only (hubert): "prefill" = one full inference forward
+        def prefill_step(params, batch):
+            logits, _ = T.forward(params, cfg, batch, mode="packed", remat=False)
+            return logits
+
+        params = param_specs(cfg, packed=True)
+        batch = _batch_specs(cfg, shape.global_batch, shape.seq_len)
+        batch.pop("labels", None)
+        return StepBundle(fn=prefill_step, args=(params, batch), donate=(), kind="prefill")
+
+    def prefill_step(params, batch):
+        return T.prefill(
+            params, cfg, batch, hot_cap=HOT_CAP, max_len=max_len, mode="packed"
+        )
+
+    params = param_specs(cfg, packed=True)
+    batch = _batch_specs(cfg, shape.global_batch, shape.seq_len)
+    batch.pop("labels", None)
+    return StepBundle(fn=prefill_step, args=(params, batch), donate=(), kind="prefill")
+
+
+def make_decode_bundle(cfg: ModelConfig, shape: ShapeConfig) -> StepBundle:
+    max_len = decode_cache_len(cfg, shape.seq_len)
+
+    def serve_step(params, cache, tokens):
+        return T.decode_step(params, cfg, tokens, cache, mode="packed")
+
+    params = param_specs(cfg, packed=True)
+    cache = cache_specs(cfg, shape.global_batch, max_len)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    return StepBundle(fn=serve_step, args=(params, cache, tokens), donate=(1,), kind="decode")
+
+
+def make_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_bundle(cfg, shape, mesh=mesh)
+    if shape.kind == "prefill":
+        return make_prefill_bundle(cfg, shape)
+    if shape.kind == "decode":
+        return make_decode_bundle(cfg, shape)
+    raise ValueError(shape.kind)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    return make_bundle(cfg, shape).args

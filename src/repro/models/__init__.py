@@ -1,0 +1,4 @@
+"""Model zoo: attention/MoE/SSM/hybrid/encoder/VLM building blocks and the
+family-dispatching top-level transformer (init / forward / prefill / decode)."""
+
+from repro.models import attention, layers, moe, qops, ssm, transformer  # noqa: F401

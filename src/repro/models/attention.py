@@ -1,0 +1,349 @@
+"""Attention variants: GQA/MQA (full + sliding-window), MLA, encoder.
+
+Full-sequence attention (train / prefill) uses a blockwise streaming-softmax
+formulation (flash-attention structure in pure JAX): lax.scan over query
+chunks with an inner scan over KV chunks carrying (max, denom, acc). Memory
+is O(chunk²) instead of O(S²), which is what makes the 32k prefill and the
+4k train cells lower at scale.
+
+Decode uses the two-tier DR KV cache (core/kv_cache.py) — hot early-token
+buffer + cold tail — or a ring buffer for sliding-window archs (SWA evicts
+early tokens, so DR tiering is N/A there; see DESIGN.md §4).
+
+MLA (DeepSeek-V3) caches the compressed latent (c_kv ‖ k_rope, 576 B/token)
+and decodes in *absorbed* form (W_uk folded into the query, W_uv folded out
+of the context) so the per-step cost scales with the latent, not the heads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kv_cache as kvc
+from repro.models import qops
+from repro.models.layers import apply_rope, init_rms_norm, rms_norm
+
+NEG_INF = jnp.finfo(jnp.float32).min
+DEFAULT_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention over full sequences
+# ---------------------------------------------------------------------------
+
+
+def _chunk(seq: int, target: int = DEFAULT_CHUNK) -> int:
+    if seq <= target:
+        return seq
+    c = target
+    while seq % c:
+        c //= 2
+    return max(c, 1)
+
+
+def blockwise_attention(
+    q: jax.Array,  # (b, g, r, sq, dk)
+    k: jax.Array,  # (b, g, sk, dk)
+    v: jax.Array,  # (b, g, sk, dv)
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = unbounded; else SWA: q_pos - kv_pos < window
+    q_offset: int = 0,  # absolute position of q[0] (prefill continuation)
+    scale: float | None = None,
+    q_chunk: int | None = None,
+    kv_chunk: int | None = None,
+) -> jax.Array:  # (b, g, r, sq, dv)
+    b, g, r, sq, dk = q.shape
+    sk, dv = k.shape[2], v.shape[3]
+    scale = scale if scale is not None else dk**-0.5
+    cq = q_chunk or _chunk(sq)
+    ck = kv_chunk or _chunk(sk)
+    nq, nk = sq // cq, sk // ck
+    assert nq * cq == sq and nk * ck == sk, (sq, cq, sk, ck)
+
+    qs = jnp.moveaxis(q.reshape(b, g, r, nq, cq, dk), 3, 0)  # (nq, b,g,r,cq,dk)
+    ks = jnp.moveaxis(k.reshape(b, g, nk, ck, dk), 2, 0)  # (nk, b,g,ck,dk)
+    vs = jnp.moveaxis(v.reshape(b, g, nk, ck, dv), 2, 0)
+
+    q_pos_base = jnp.arange(cq, dtype=jnp.int32)
+    k_pos_base = jnp.arange(ck, dtype=jnp.int32)
+
+    @jax.checkpoint
+    def q_step(_, qi_qc):
+        # rematerialized per q-chunk: the backward pass recomputes one
+        # chunk's inner kv scan at a time instead of stashing the full
+        # (nq x nk x cq x ck) attention matrix (observed to dominate temp
+        # memory on the train_4k dry-run).
+        qi, qc = qi_qc
+        q_pos = q_offset + qi * cq + q_pos_base  # (cq,)
+
+        def kv_step(carry, ki_kc):
+            ki, kc, vc = ki_kc
+            m, l, acc = carry
+            k_pos = ki * ck + k_pos_base  # (ck,)
+            logits = jnp.einsum(
+                "bgrqd,bgkd->bgrqk", qc.astype(jnp.float32), kc.astype(jnp.float32)
+            ) * scale
+            mask = jnp.ones((cq, ck), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            logits = jnp.where(mask, logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            p = jnp.where(mask, p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p, vc.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, g, r, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, r, cq), jnp.float32)
+        a0 = jnp.zeros((b, g, r, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))  # (nq, b,g,r,cq,dv)
+    return jnp.moveaxis(outs, 0, 3).reshape(b, g, r, sq, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA / SWA attention block
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln": init_rms_norm(d, dtype),
+        "wq": qops.init_linear(ks[0], d, h * hd, dtype),
+        "wk": qops.init_linear(ks[1], d, g * hd, dtype),
+        "wv": qops.init_linear(ks[2], d, g * hd, dtype),
+        "wo": qops.init_linear(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, dtype)
+        p["k_norm"] = init_rms_norm(hd, dtype)
+    if cfg.bitnet.lora_rank:
+        from repro.core import lora as lora_lib
+
+        if "v" in cfg.bitnet.lora_targets:
+            p["lora_v"] = lora_lib.init(ks[4], d, g * hd, cfg.bitnet.lora_rank, dtype)
+        if "o" in cfg.bitnet.lora_targets:
+            p["lora_o"] = lora_lib.init(ks[5], h * hd, d, cfg.bitnet.lora_rank, dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, mode: str):
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    hidden = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = qops.linear(p["wq"], hidden, cfg, mode, out_shape=(h, hd))
+    k = qops.linear(p["wk"], hidden, cfg, mode, out_shape=(g, hd))
+    v = qops.linear(p["wv"], hidden, cfg, mode, out_shape=(g, hd), lora_leaf=p.get("lora_v"))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attention_full(
+    p: dict,
+    x: jax.Array,  # (b, s, d_model)
+    cfg: ModelConfig,
+    mode: str,
+    positions: jax.Array,  # (s,)
+    *,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill). Causal unless encoder."""
+    b, s, _ = x.shape
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x, cfg, mode)  # (b,s,h,hd) / (b,s,g,hd)
+    q = apply_rope(q, positions[None], cfg.rope_theta)
+    k = apply_rope(k, positions[None], cfg.rope_theta)
+    rep = h // g
+    qg = jnp.moveaxis(q.reshape(b, s, g, rep, hd), 1, 3)  # (b,g,rep,s,hd)
+    kg = jnp.moveaxis(k, 1, 2)  # (b,g,s,hd)
+    vg = jnp.moveaxis(v, 1, 2)
+    o = blockwise_attention(
+        qg,
+        kg,
+        vg,
+        causal=not cfg.is_encoder,
+        window=cfg.swa_window if cfg.attn_type == "swa" else 0,
+    )  # (b,g,rep,s,hd)
+    o = jnp.moveaxis(o, 3, 1).reshape(b, s, h * hd)
+    y = qops.linear(p["wo"], o, cfg, mode, lora_leaf=p.get("lora_o"))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(
+    p: dict,
+    x: jax.Array,  # (b, d_model) — one token
+    cfg: ModelConfig,
+    mode: str,
+    cache: kvc.TieredKVCache,
+):
+    """One decode step against the tiered cache. Returns (y, new_cache)."""
+    b, _ = x.shape
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x[:, None, :], cfg, mode)  # (b,1,h,hd)
+    pos = cache.length[None]
+    q = apply_rope(q, pos[None], cfg.rope_theta)[:, 0]  # (b,h,hd)
+    k = apply_rope(k, pos[None], cfg.rope_theta)[:, 0]  # (b,g,hd)
+    v = v[:, 0]
+    if cfg.attn_type == "swa":
+        cache = kvc.append_decode_ring(cache, k, v)
+        o = kvc.tiered_decode_attention(q, cache, ring=True)
+    else:
+        cache = kvc.append_decode(cache, k, v)
+        o = kvc.tiered_decode_attention(q, cache)
+    y = qops.linear(
+        p["wo"], o.reshape(b, h * hd), cfg, mode, lora_leaf=p.get("lora_o")
+    )
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): compressed-latent attention
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln": init_rms_norm(d, dtype),
+        "w_dq": qops.init_linear(ks[0], d, m.q_lora_rank, dtype),
+        "q_ln": init_rms_norm(m.q_lora_rank, dtype),
+        "w_uq": qops.init_linear(ks[1], m.q_lora_rank, h * qk_head, dtype),
+        "w_dkv": qops.init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_ln": init_rms_norm(m.kv_lora_rank, dtype),
+        # factor matrices stay dict-leaves (fake-quant ternary) — DESIGN.md §2
+        "w_uk": qops.init_linear(ks[3], m.kv_lora_rank, h * m.qk_nope_head_dim, dtype),
+        "w_uv": qops.init_linear(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wo": qops.init_linear(ks[5], h * m.v_head_dim, d, dtype),
+    }
+    if cfg.bitnet.lora_rank:
+        from repro.core import lora as lora_lib
+
+        if "v" in cfg.bitnet.lora_targets:
+            p["lora_v"] = lora_lib.init(
+                ks[6], m.kv_lora_rank, h * m.v_head_dim, cfg.bitnet.lora_rank, dtype
+            )
+        if "o" in cfg.bitnet.lora_targets:
+            p["lora_o"] = lora_lib.init(
+                ks[7], h * m.v_head_dim, d, cfg.bitnet.lora_rank, dtype
+            )
+    return p
+
+
+def _mla_queries(p, hidden, cfg: ModelConfig, mode, positions):
+    """-> q_nope (b,t,h,dn), q_rope (b,t,h,dr) with RoPE applied."""
+    m, h = cfg.mla, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = rms_norm(qops.linear(p["w_dq"], hidden, cfg, mode), p["q_ln"], cfg.norm_eps)
+    q = qops.linear(p["w_uq"], cq, cfg, mode, out_shape=(h, qk_head))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions[None], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, hidden, cfg: ModelConfig, mode, positions):
+    """-> latent c_kv (b,t,dl) [normed], k_rope (b,t,dr) with RoPE."""
+    m = cfg.mla
+    dkv = qops.linear(p["w_dkv"], hidden, cfg, mode)
+    c_kv = rms_norm(dkv[..., : m.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = apply_rope(
+        dkv[..., m.kv_lora_rank :][:, :, None, :], positions[None], cfg.rope_theta
+    )[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_full(p, x, cfg: ModelConfig, mode, positions, *, return_kv: bool = False):
+    """Full-sequence MLA (non-absorbed): expand K/V per position once."""
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    hidden = rms_norm(x, p["ln"], cfg.norm_eps)
+    q_nope, q_rope = _mla_queries(p, hidden, cfg, mode, positions)
+    c_kv, k_rope = _mla_latent(p, hidden, cfg, mode, positions)
+    k_nope = qops.linear(p["w_uk"], c_kv, cfg, mode, out_shape=(h, m.qk_nope_head_dim))
+    v = qops.linear(
+        p["w_uv"], c_kv, cfg, mode, out_shape=(h, m.v_head_dim), lora_leaf=p.get("lora_v")
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)  # (b,s,h,dn+dr)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    qg = jnp.moveaxis(q, 1, 2)[:, :, None]  # (b,h,1,s,d) g=h, rep=1
+    kg = jnp.moveaxis(k, 1, 2)
+    vg = jnp.moveaxis(v, 1, 2)
+    o = blockwise_attention(qg, kg, vg, causal=not cfg.is_encoder)[:, :, 0]
+    o = jnp.moveaxis(o, 1, 2).reshape(b, s, h * m.v_head_dim)
+    y = qops.linear(p["wo"], o, cfg, mode, lora_leaf=p.get("lora_o"))
+    if return_kv:
+        # cache the latent: k-slot = (c_kv ‖ k_rope), v-slot is empty (0-dim)
+        lat = jnp.concatenate([c_kv, k_rope], axis=-1)
+        return y, (lat, jnp.zeros(lat.shape[:-1] + (0,), lat.dtype))
+    return y
+
+
+def mla_decode(p, x, cfg: ModelConfig, mode, cache: kvc.TieredKVCache):
+    """Absorbed-form MLA decode over the tiered latent cache."""
+    m, h = cfg.mla, cfg.n_heads
+    b, _ = x.shape
+    hidden = rms_norm(x[:, None, :], p["ln"], cfg.norm_eps)
+    pos = cache.length[None]
+    q_nope, q_rope = _mla_queries(p, hidden, cfg, mode, pos)  # (b,1,h,·)
+    c_kv, k_rope = _mla_latent(p, hidden, cfg, mode, pos)
+    lat_new = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0]  # (b, dl+dr)
+    cache = kvc.append_decode(cache, lat_new, jnp.zeros((b, 0), lat_new.dtype))
+
+    # absorb W_uk into the query: q_abs = q_nope @ W_uk^T  (per head)
+    w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    from repro.core.ternary import act_quant_ste, weight_quant_ste
+
+    quant = cfg.bitnet.enabled and mode != "none"
+    w_uk_q = weight_quant_ste(w_uk) if quant else w_uk
+    q_abs = jnp.einsum("bhn,lhn->bhl", q_nope[:, 0], w_uk_q)  # (b,h,dl)
+    q_full = jnp.concatenate([q_abs, q_rope[:, 0]], axis=-1)  # (b,h,dl+dr)
+
+    # fake-quantize the cached latent exactly as the non-absorbed path does
+    # when it feeds c_kv through the W_uk/W_uv BitLinears (keeps absorbed ==
+    # non-absorbed numerics; rope dims are never act-quantized).
+    if quant:
+
+        def _q(buf):
+            if buf.shape[1] == 0:
+                return buf
+            ckv = act_quant_ste(buf[..., : m.kv_lora_rank], bits=cfg.bitnet.act_bits)
+            return jnp.concatenate([ckv, buf[..., m.kv_lora_rank :]], axis=-1)
+
+        att_cache = cache._replace(hot_k=_q(cache.hot_k), cold_k=_q(cache.cold_k))
+    else:
+        att_cache = cache
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    ctx = kvc.tiered_decode_attention_latent(
+        q_full, att_cache, value_dim=m.kv_lora_rank, scale=scale
+    )  # (b,h,dl)
+
+    w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    w_uv_q = weight_quant_ste(w_uv) if cfg.bitnet.enabled and mode != "none" else w_uv
+    o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv_q).reshape(b, h * m.v_head_dim)
+    y = qops.linear(p["wo"], o.astype(x.dtype), cfg, mode, lora_leaf=p.get("lora_o"))
+    return y, cache

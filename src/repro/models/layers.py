@@ -1,0 +1,75 @@
+"""Shared neural layers: RMSNorm, RoPE, gated MLPs (all BitLinear-backed)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import qops
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, D); positions: (..., T) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : d // 2], x32[..., d // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs (swiglu / geglu gated, gelu non-gated) — all projections ternary
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None, dtype=jnp.float32) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"ln": init_rms_norm(d, dtype)}
+    if cfg.activation == "gelu":
+        p["up"] = qops.init_linear(ks[0], d, f, dtype)
+    else:
+        p["gate"] = qops.init_linear(ks[0], d, f, dtype)
+        p["up"] = qops.init_linear(ks[1], d, f, dtype)
+    p["down"] = qops.init_linear(ks[2], f, d, dtype)
+    if cfg.bitnet.lora_rank and "down" in cfg.bitnet.lora_targets:
+        from repro.core import lora as lora_lib
+
+        p["lora_down"] = lora_lib.init(ks[2], f, d, cfg.bitnet.lora_rank, dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig, mode: str) -> jax.Array:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if cfg.activation == "gelu":
+        a = jax.nn.gelu(qops.linear(p["up"], h, cfg, mode))
+    else:
+        g = qops.linear(p["gate"], h, cfg, mode)
+        u = qops.linear(p["up"], h, cfg, mode)
+        act = jax.nn.gelu(g, approximate=True) if cfg.activation == "geglu" else jax.nn.silu(g)
+        a = act * u
+    return qops.linear(p["down"], a, cfg, mode, lora_leaf=p.get("lora_down"))

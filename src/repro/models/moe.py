@@ -1,0 +1,147 @@
+"""Mixture-of-Experts layer (Mixtral top-2/8, DeepSeek-V3 shared+routed top-8/256).
+
+Expert-parallel formulation: router scores -> per-expert top-C token
+selection (capacity-based, MaxText-style) -> gather to (E, C, d) -> batched
+expert GEMMs (sharded over the mesh = EP) -> weighted scatter-add back.
+All expert projections are ternary BitLinears (the paper's technique
+applies to expert weights identically — they dominate the 671B's footprint).
+
+Two dispatch modes (selected via models/shard_ctx.py hints):
+  * global routing — one top-C selection over all tokens (baseline);
+  * grouped routing — tokens are split into ``moe_groups`` groups aligned
+    with the data shards and routed with per-group capacity, so the
+    dispatch gather and combine scatter stay shard-local. This removed the
+    two dominant collectives of the mixtral train cell (global-token
+    gathers, multi-TB at 256 devices — EXPERIMENTS.md §Perf H3).
+
+Dropped tokens (beyond capacity) pass through the residual only, standard
+for capacity-based routing. A load-balance auxiliary loss (Switch-style)
+is returned for training.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import qops, shard_ctx
+from repro.models.layers import init_rms_norm, rms_norm
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    mo = cfg.moe
+    d = cfg.d_model
+    ff = mo.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln": init_rms_norm(d, dtype),
+        "router": {"w": jax.random.normal(ks[0], (d, mo.n_experts), dtype) * d**-0.5},
+        "w_gate": qops.init_expert_linear(ks[1], mo.n_experts, d, ff, dtype),
+        "w_up": qops.init_expert_linear(ks[2], mo.n_experts, d, ff, dtype),
+        "w_down": qops.init_expert_linear(ks[3], mo.n_experts, ff, d, dtype),
+    }
+    if mo.n_shared:
+        p["shared_gate"] = qops.init_linear(ks[4], d, cfg.d_ff * mo.n_shared, dtype)
+        p["shared_up"] = qops.init_linear(ks[5], d, cfg.d_ff * mo.n_shared, dtype)
+        p["shared_down"] = qops.init_linear(ks[6], cfg.d_ff * mo.n_shared, d, dtype)
+    if cfg.bitnet.lora_rank and "down" in cfg.bitnet.lora_targets:
+        from repro.core import lora as lora_lib
+
+        # one rank-16 adapter on the shared/aggregate down path (paper's Down target)
+        p["lora_down"] = lora_lib.init(ks[7], d, d, cfg.bitnet.lora_rank, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    mo = cfg.moe
+    c = int(n_tokens * mo.top_k / mo.n_experts * mo.capacity_factor) + 1
+    return max(min(c, n_tokens), 1)
+
+
+def _route_tokens(p: dict, h: jax.Array, cfg: ModelConfig, mode: str, cap: int):
+    """Dispatch+compute+combine for one token group. h: (T, d).
+
+    Returns (y (T, d) f32, probs (T, E) f32, top1 one-hot (T, E)).
+    """
+    mo = cfg.moe
+    n_tok, d = h.shape
+    logits = h.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, mo.top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)  # renorm
+
+    assign = jnp.zeros((n_tok, mo.n_experts), jnp.float32)
+    assign = assign.at[jnp.arange(n_tok)[:, None], gate_idx].set(gate_vals)
+
+    sel_w, sel_idx = jax.lax.top_k(assign.T, cap)  # (E, C)
+    xe = jnp.take(h, sel_idx.reshape(-1), axis=0).reshape(mo.n_experts, cap, d)
+    if shard_ctx.has_expert_axes():
+        xe = shard_ctx.constrain(xe, "EXPERT", None, None)
+
+    g = qops.expert_linear(p["w_gate"], xe, cfg, mode)
+    u = qops.expert_linear(p["w_up"], xe, cfg, mode)
+    a = jax.nn.silu(g) * u
+    ye = qops.expert_linear(p["w_down"], a, cfg, mode)  # (E, C, d)
+    if shard_ctx.has_expert_axes():
+        ye = shard_ctx.constrain(ye, "EXPERT", None, None)
+
+    # combine: f32 accumulation for training; bf16 in inference halves the
+    # cross-shard combine traffic (top-k expert sums tolerate bf16)
+    acc_dtype = jnp.float32 if mode == "qat" else jnp.bfloat16
+    ye = ye.astype(acc_dtype) * sel_w[..., None].astype(acc_dtype)
+    y = jnp.zeros((n_tok, d), acc_dtype)
+    y = y.at[sel_idx.reshape(-1)].add(ye.reshape(-1, d))
+    y = y.astype(jnp.float32)
+
+    top1 = jax.nn.one_hot(gate_idx[:, 0], mo.n_experts)
+    return y, probs, top1
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig, mode: str):
+    """x: (b, t, d) -> (y, aux_loss)."""
+    mo = cfg.moe
+    b, t, d = x.shape
+    h3 = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    groups = shard_ctx.moe_groups()
+    if groups > 1 and b % groups == 0:
+        # grouped dispatch: routing, gather and combine stay local to each
+        # data shard (per-group capacity, production-standard semantics)
+        hg = h3.reshape(groups, (b // groups) * t, d)
+        hg = shard_ctx.constrain(hg, "BATCH", None, None)
+        cap = _capacity(hg.shape[1], cfg)
+        yg, probs, top1 = jax.vmap(
+            lambda hh: _route_tokens(p, hh, cfg, mode, cap)
+        )(hg)
+        yg = shard_ctx.constrain(yg, "BATCH", None, None)
+        y = yg.reshape(b * t, d)
+        probs = probs.reshape(-1, mo.n_experts)
+        top1 = top1.reshape(-1, mo.n_experts)
+    else:
+        h = h3.reshape(b * t, d)
+        cap = _capacity(b * t, cfg)
+        y, probs, top1 = _route_tokens(p, h, cfg, mode, cap)
+        y = shard_ctx.constrain(y, "TOKENS", None)
+
+    # --- shared experts (DeepSeek-V3: always-on) ---
+    if mo.n_shared:
+        sg = qops.linear(p["shared_gate"], h3, cfg, mode)
+        su = qops.linear(p["shared_up"], h3, cfg, mode)
+        shared = qops.linear(p["shared_down"], jax.nn.silu(sg) * su, cfg, mode)
+        y = y + shared.astype(jnp.float32).reshape(b * t, d)
+
+    if "lora_down" in p and cfg.bitnet.lora_rank:
+        from repro.core import lora as lora_lib
+
+        y = y + lora_lib.apply(
+            p["lora_down"], h3.reshape(b * t, d),
+            alpha=2.0 * cfg.bitnet.lora_rank, weight_bits=cfg.bitnet.lora_bits,
+        ).astype(jnp.float32)
+
+    # --- Switch-style load-balance aux loss ---
+    me = jnp.mean(probs, axis=0)
+    fe = jnp.mean(top1, axis=0)
+    aux = mo.n_experts * jnp.sum(me * fe) * mo.router_aux_weight
+
+    return y.reshape(b, t, d).astype(x.dtype), aux

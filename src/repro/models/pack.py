@@ -1,0 +1,96 @@
+"""Freeze trained (or initialized) params into ROM form: packed ternary.
+
+``pack_params`` walks the parameter tree and converts every quantizable
+projection leaf {"w": float (…, K, N)} into a ``PackedLinear`` (uint8 trits
++ per-tensor absmean scale). Leading stack dims (layer scan, experts) are
+vmapped through the codec. This is the moment the paper fabricates the ROM:
+after it, inference never touches a float weight for these projections.
+
+Not packed (and why):
+  * embed / lm_head / frontend — BitNet keeps them high-precision;
+  * router — routing accuracy is precision-sensitive and it is tiny;
+  * MLA factor matrices (w_uk/w_uv) — consumed in absorbed per-head form,
+    kept fake-quant ternary (same numerics, bf16 storage; ~0.3% of weights);
+  * norms / conv / SSM scalars / LoRA (LoRA is SRAM, 6-bit, by design).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import packing
+from repro.core.bitlinear import PackedLinear
+from repro.core.ternary import EPS
+
+PACK_KEYS = {
+    "wq", "wk", "wv", "wo",  # attention
+    "gate", "up", "down",  # mlp
+    "w_gate", "w_up", "w_down",  # experts
+    "shared_gate", "shared_up", "shared_down",  # shared experts
+    "in_proj", "out_proj",  # mamba
+    "w_dq", "w_uq", "w_dkv",  # MLA down/up projections (2-D use)
+}
+SKIP_KEYS = {"embed", "lm_head", "frontend", "router", "w_uk", "w_uv"}
+
+
+def _pack_weight(w: jax.Array, codec: str) -> PackedLinear:
+    """w: (..., K, N) float -> PackedLinear with leading dims vmapped."""
+    lead = w.ndim - 2
+    k = w.shape[-2]
+
+    def pack_one(w2):
+        scale = jnp.maximum(jnp.mean(jnp.abs(w2.astype(jnp.float32))), EPS)
+        trits = jnp.clip(jnp.round(w2.astype(jnp.float32) / scale), -1, 1).astype(jnp.int8)
+        pack = packing.pack2 if codec == "pack2" else packing.pack243
+        return pack(trits), scale
+
+    fn = pack_one
+    for _ in range(lead):
+        fn = jax.vmap(fn)
+    packed, scale = fn(w)
+    return PackedLinear(packed=packed, scale=scale, k=k, codec=codec)
+
+
+def pack_params(params, cfg: ModelConfig, codec: str | None = None):
+    """Convert a QAT parameter tree to the packed-inference tree."""
+    from repro.core.bitlinear import quantize_int8
+
+    codec = codec or cfg.bitnet.codec
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            if set(tree.keys()) == {"w"} and path and str(path[-1]) in PACK_KEYS:
+                if not cfg.bitnet.enabled:
+                    return tree
+                return _pack_weight(tree["w"], codec)
+            if (
+                cfg.bitnet.embed_int8
+                and set(tree.keys()) == {"w"}
+                and path
+                and str(path[-1]) in ("embed", "lm_head")
+            ):
+                # embed (V, d): per-row scale; lm_head (d, V): per-column
+                axis = 1 if str(path[-1]) == "embed" else 0
+                return quantize_int8(tree["w"], axis=axis)
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return tree
+
+    return walk(params)
+
+
+def packed_param_bytes(packed_tree) -> dict:
+    """HBM ledger: packed trit bytes vs residual float bytes."""
+    packed_b, float_b = 0, 0
+    for leaf in jax.tree.leaves(
+        packed_tree, is_leaf=lambda x: isinstance(x, PackedLinear)
+    ):
+        if isinstance(leaf, PackedLinear):
+            packed_b += leaf.packed.size + 4 * leaf.scale.size
+        else:
+            packed_b += 0
+    for leaf in jax.tree.leaves(packed_tree):
+        if leaf.dtype != jnp.uint8:
+            float_b += leaf.size * leaf.dtype.itemsize
+    return {"packed_bytes": packed_b, "other_bytes": float_b}

@@ -1,0 +1,132 @@
+"""Quantized linear primitives shared by all architectures.
+
+Every projection in every model funnels through ``linear`` so the paper's
+technique (ternary weights, A8/A4 activations, packed storage, LoRA) is
+applied uniformly:
+
+  * QAT mode ("qat")    — BitNet STE fake quantization (training forward)
+  * packed mode         — leaf already converted to ``PackedLinear``:
+                          integer ternary matmul on packed trits
+  * float mode ("none") — plain matmul (ablation baseline)
+
+Weights are always stored contraction-first (K, N) — inputs with multiple
+contracted dims are flattened to (..., K) — so the packed codecs and the
+Pallas kernel apply everywhere. Expert-batched weights (E, K, N) vmap the
+same primitive per expert (per-expert absmean scale, as the paper's
+per-macro scaling suggests).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lora as lora_lib
+from repro.core.bitlinear import PackedLinear
+from repro.core.ternary import act_quant, act_quant_ste, weight_quant_ste
+from repro.configs.base import ModelConfig
+
+
+def _flatten_x(x: jax.Array, k: int):
+    """Reshape (..., a, b, ...) so contracted dims collapse into last = k."""
+    lead_elems = 1
+    shape = x.shape
+    cut = len(shape)
+    prod = 1
+    while prod < k:
+        cut -= 1
+        prod *= shape[cut]
+    assert prod == k, (shape, k)
+    return x.reshape(shape[:cut] + (k,)), shape[:cut]
+
+
+def linear(
+    leaf,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mode: str = "qat",
+    out_shape: tuple | None = None,
+    lora_leaf: Optional[dict] = None,
+    quantize: bool = True,
+) -> jax.Array:
+    """y = x @ W with the BitNet recipe. ``leaf`` is {"w": (K, N)} or PackedLinear.
+
+    ``out_shape``: optional trailing shape to unflatten N into (e.g. (H, hd)).
+    ``quantize=False`` exempts a projection from ternarization (embeddings,
+    lm_head — BitNet convention).
+    """
+    act_bits = cfg.bitnet.act_bits
+
+    if isinstance(leaf, PackedLinear):
+        from repro.kernels import ops
+
+        x2, lead = _flatten_x(x, leaf.k)
+        xq = act_quant(x2, bits=act_bits)
+        acc = ops.ternary_matmul(xq.xq, leaf.packed, k=leaf.k, codec=leaf.codec, impl="xla")
+        y = acc.astype(jnp.float32) * (leaf.scale / xq.scale)
+        y = y.astype(x.dtype)
+        n = leaf.packed.shape[-1]
+    else:
+        w = leaf["w"]
+        k = w.shape[0] if w.ndim == 2 else w.shape[-2]
+        x2, lead = _flatten_x(x, k)
+        if not quantize or not cfg.bitnet.enabled or mode == "none":
+            y = x2 @ w
+        elif mode in ("qat", "packed"):
+            # ("packed" with a dict leaf = projection kept unpacked, e.g. MLA
+            # factors — same ternary numerics via fake-quant, see DESIGN.md)
+            y = act_quant_ste(x2, bits=act_bits) @ weight_quant_ste(w)
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        y = y.astype(x.dtype)
+        n = w.shape[-1]
+
+    if lora_leaf is not None and cfg.bitnet.lora_rank > 0:
+        x2l, _ = _flatten_x(x, lora_leaf["a"].shape[0])
+        y = y + lora_lib.apply(
+            lora_leaf,
+            x2l,
+            alpha=2.0 * cfg.bitnet.lora_rank,
+            weight_bits=cfg.bitnet.lora_bits,
+            act_bits=8,
+        ).astype(y.dtype)
+
+    if out_shape is not None:
+        y = y.reshape(lead + tuple(out_shape))
+    else:
+        y = y.reshape(lead + (n,))
+    return y
+
+
+def expert_linear(leaf, x: jax.Array, cfg: ModelConfig, mode: str = "qat") -> jax.Array:
+    """Per-expert linear: x (E, C, K) @ W (E, K, N) -> (E, C, N)."""
+    if isinstance(leaf, PackedLinear):
+        fn = lambda px, xx: linear(  # noqa: E731
+            PackedLinear(packed=px[0], scale=px[1], k=leaf.k, codec=leaf.codec),
+            xx,
+            cfg,
+            mode,
+        )
+        return jax.vmap(fn)((leaf.packed, leaf.scale), x)
+    w = leaf["w"]
+    if mode == "qat":
+        from repro.models import shard_ctx
+
+        # declare the weight gathered-at-use over the FSDP axis: contracting
+        # against the K-sharded stored form makes GSPMD emit partial-sum
+        # all-reduces of ACTIVATION size (TBs at 256 devices) instead of a
+        # weight-sized all-gather (EXPERIMENTS.md §Perf H3 iteration 2)
+        if shard_ctx.has_expert_axes() and w.ndim == 3:
+            w = shard_ctx.constrain(w, "EXPERT", None, None)
+    return jax.vmap(lambda ww, xx: linear({"w": ww}, xx, cfg, mode))(w, x)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    s = scale if scale is not None else d_in**-0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * s}
+
+
+def init_expert_linear(key, n_e: int, d_in: int, d_out: int, dtype=jnp.float32):
+    return {"w": jax.random.normal(key, (n_e, d_in, d_out), dtype) * d_in**-0.5}

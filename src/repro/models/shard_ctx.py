@@ -1,0 +1,96 @@
+"""Sharding context: lets model code place with_sharding_constraint hints
+without threading mesh objects through every layer.
+
+The launcher/dry-run sets the context before tracing; on bare CPU (unit
+tests, examples) the context is empty and every constraint is a no-op.
+GSPMD propagation handles most tensors — the explicit constraints exist
+for the few places where propagation is known to go wrong at 256+ devices:
+the MoE dispatch/combine path (observed: involuntary full rematerialization
+of 45 GB expert tensors) and the microbatch gradient accumulator.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _get() -> dict:
+    return getattr(_STATE, "ctx", None) or {}
+
+
+@contextlib.contextmanager
+def sharding_hints(
+    mesh,
+    expert_axes: Optional[Tuple[str, ...]] = None,
+    batch_axes: Tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+    seq_axis: Optional[str] = None,  # sequence parallelism (Megatron-SP)
+    moe_groups: int = 1,  # grouped (per-data-shard) MoE dispatch
+):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = {
+        "mesh": mesh,
+        "expert_axes": expert_axes,
+        "batch_axes": batch_axes,
+        "model_axis": model_axis,
+        "seq_axis": seq_axis,
+        "moe_groups": moe_groups,
+    }
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def moe_groups() -> int:
+    return _get().get("moe_groups", 1) or 1
+
+
+def has_expert_axes() -> bool:
+    return _get().get("expert_axes") is not None
+
+
+def active() -> bool:
+    return _get().get("mesh") is not None
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint(x, P(*spec)) if a mesh context is active.
+
+    Spec entries may be the literal strings "EXPERT"/"BATCH"/"MODEL" which
+    resolve against the active context (EXPERT may be None => no-op dim).
+    """
+    ctx = _get()
+    mesh = ctx.get("mesh")
+    if mesh is None:
+        return x
+    resolved = []
+    for s in spec:
+        if s == "EXPERT":
+            ax = ctx.get("expert_axes")
+            resolved.append(ax if ax else None)
+        elif s == "BATCH":
+            ax = ctx.get("batch_axes")
+            resolved.append(ax if len(ax) > 1 else ax[0])
+        elif s == "MODEL":
+            resolved.append(ctx.get("model_axis"))
+        elif s == "SEQ":
+            resolved.append(ctx.get("seq_axis"))  # None when SP off
+        elif s == "TOKENS":
+            # flattened (batch*seq) token dim: batch axes (+ seq axis if SP)
+            ax = tuple(ctx.get("batch_axes"))
+            if ctx.get("seq_axis"):
+                ax = ax + (ctx["seq_axis"],)
+            resolved.append(ax if len(ax) > 1 else ax[0])
+        else:
+            resolved.append(s)
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*resolved)))

@@ -1,0 +1,219 @@
+"""Mamba2 (SSD — state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD for full sequences (train / prefill): within-chunk quadratic
+attention-form + cross-chunk linear recurrence over chunk-final states,
+scanned with lax.scan so memory stays O(chunk²) and the 512k-token cell is
+feasible (this is why the SSM/hybrid archs own the long_500k shape).
+
+Decode is the O(1)-state recurrence: S ← exp(dt·A)·S + dt·(B ⊗ x),
+y = C·S + D·x — no KV cache grows, which is exactly why the paper's DR
+eDRAM tiering is N/A for this family (DESIGN.md §Arch-applicability).
+
+in/out projections are ternary BitLinears (the paper's quantization applies
+to every linear); the tiny depthwise conv and SSM scalars stay float.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import qops
+from repro.models.layers import init_rms_norm, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return s, di, nh, conv_ch
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    s, di, nh, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * di + 2 * s.n_groups * s.d_state + nh  # [z, x, B, C, dt]
+    p = {
+        "ln": init_rms_norm(d, dtype),
+        "in_proj": qops.init_linear(ks[0], d, in_dim, dtype),
+        "conv_w": jax.random.normal(ks[1], (conv_ch, s.d_conv), dtype) * (s.d_conv**-0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(dtype)),
+        "d_skip": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "gate_ln": init_rms_norm(di, dtype),
+        "out_proj": qops.init_linear(ks[2], di, d, dtype),
+    }
+    if cfg.bitnet.lora_rank and "down" in cfg.bitnet.lora_targets:
+        from repro.core import lora as lora_lib
+
+        # out_proj is the SSM analogue of the Down projection (paper target)
+        p["lora_out"] = lora_lib.init(ks[3], di, d, cfg.bitnet.lora_rank, dtype)
+    return p
+
+
+def _split_in_proj(zxbcdt, cfg: ModelConfig):
+    s, di, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = zxbcdt[..., :di]
+    xc = zxbcdt[..., di : di + di + 2 * gn]  # conv input: [x, B, C]
+    dt = zxbcdt[..., di + di + 2 * gn :]  # (…, nh)
+    return z, xc, dt
+
+
+def _causal_conv_full(xc, w, b):
+    """Depthwise causal conv over seq. xc: (bsz, l, c); w: (c, k)."""
+    k = w.shape[1]
+    xt = jnp.moveaxis(xc, 1, 2)  # (bsz, c, l)
+    out = jax.lax.conv_general_dilated(
+        xt,
+        w[:, None, :],  # (c, 1, k)
+        window_strides=(1,),
+        padding=[(k - 1, 0)],
+        feature_group_count=w.shape[0],
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )
+    return jnp.moveaxis(out, 1, 2) + b  # (bsz, l, c)
+
+
+def _ssd_chunked(xh, dt_a, bmat, cmat, cfg: ModelConfig, s_init=None):
+    """Chunked SSD scan.
+
+    xh:   (bsz, l, g, r, p)  — dt-scaled inputs per head
+    dt_a: (bsz, l, g, r)     — log decays dt*A (negative)
+    bmat, cmat: (bsz, l, g, n)
+    Returns (y (bsz, l, g, r, p), final_state (bsz, g, r, p, n)).
+    """
+    s = cfg.ssm
+    bsz, l, g, r, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(s.chunk, l)
+    while l % q:
+        q //= 2
+    nc = l // q
+
+    xh = xh.reshape(bsz, nc, q, g, r, p)
+    dt_a = dt_a.reshape(bsz, nc, q, g, r)
+    bmat = bmat.reshape(bsz, nc, q, g, n)
+    cmat = cmat.reshape(bsz, nc, q, g, n)
+
+    def chunk_step(state, inp):
+        xc, ac, bc, cc = inp  # (bsz, q, g, r, p) etc.
+        a_cs = jnp.cumsum(ac, axis=1)  # inclusive (bsz, q, g, r)
+        # within-chunk (attention-form) term; mask BEFORE exp: the i<j
+        # entries have positive exponents that overflow, and exp-then-where
+        # would poison the gradient (inf * 0 = NaN).
+        tri = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None, None]
+        diff = a_cs[:, :, None] - a_cs[:, None]  # (bsz, i, j, g, r)
+        ldec = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+        scores = jnp.einsum("bign,bjgn->bijg", cc, bc)
+        y_diag = jnp.einsum("bijg,bijgr,bjgrp->bigrp", scores, ldec, xc)
+        # carry-in state term
+        y_off = jnp.einsum("bign,bgrpn,bigr->bigrp", cc, state, jnp.exp(a_cs))
+        # chunk-final state
+        a_sum = a_cs[:, -1]  # (bsz, g, r)
+        decay = jnp.exp(a_sum[:, None] - a_cs)  # (bsz, j, g, r)
+        s_chunk = jnp.einsum("bjgn,bjgr,bjgrp->bgrpn", bc, decay, xc)
+        state_new = state * jnp.exp(a_sum)[..., None, None] + s_chunk
+        return state_new, y_diag + y_off
+
+    s0 = (
+        s_init
+        if s_init is not None
+        else jnp.zeros((bsz, g, r, p, n), jnp.float32)
+    )
+    xs = (
+        jnp.moveaxis(xh, 1, 0),
+        jnp.moveaxis(dt_a, 1, 0),
+        jnp.moveaxis(bmat, 1, 0),
+        jnp.moveaxis(cmat, 1, 0),
+    )
+    final, ys = jax.lax.scan(chunk_step, s0, xs)  # ys: (nc, bsz, q, g, r, p)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l, g, r, p)
+    return y, final
+
+
+def apply_mamba_full(p: dict, x: jax.Array, cfg: ModelConfig, mode: str,
+                     return_state: bool = False):
+    """Full-sequence Mamba2 block. x: (bsz, l, d) -> y (+ final SSM/conv state)."""
+    s, di, nh, conv_ch = _dims(cfg)
+    bsz, l, d = x.shape
+    g, n = s.n_groups, s.d_state
+    r = nh // g
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = qops.linear(p["in_proj"], h, cfg, mode)
+    z, xc, dt_raw = _split_in_proj(zxbcdt, cfg)
+    xc = jax.nn.silu(_causal_conv_full(xc, p["conv_w"], p["conv_b"]))
+    xin = xc[..., :di]
+    bmat = xc[..., di : di + g * n].reshape(bsz, l, g, n).astype(jnp.float32)
+    cmat = xc[..., di + g * n :].reshape(bsz, l, g, n).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (bsz,l,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (nh,)
+    xheads = xin.reshape(bsz, l, g, r, s.head_dim).astype(jnp.float32)
+    dt_h = dt.reshape(bsz, l, g, r)
+    xh = xheads * dt_h[..., None]
+    dt_a = dt_h * a.reshape(g, r)
+
+    y, final = _ssd_chunked(xh, dt_a, bmat, cmat, cfg)
+    y = y + xheads * p["d_skip"].reshape(g, r)[None, None, :, :, None]
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_ln"], cfg.norm_eps)
+    out = qops.linear(p["out_proj"], y, cfg, mode, lora_leaf=p.get("lora_out"))
+    if return_state:
+        # conv state = last d_conv-1 *raw* conv inputs (pre-conv, pre-silu)
+        _, xc_raw, _ = _split_in_proj(zxbcdt, cfg)
+        conv_state = xc_raw[:, l - (s.d_conv - 1) :, :]
+        return out, {"ssm": final, "conv": conv_state}
+    return out
+
+
+def init_mamba_state(bsz: int, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    s, di, nh, conv_ch = _dims(cfg)
+    g, r = s.n_groups, nh // s.n_groups
+    return {
+        "ssm": jnp.zeros((bsz, g, r, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((bsz, s.d_conv - 1, conv_ch), dtype),
+    }
+
+
+def apply_mamba_decode(p: dict, x: jax.Array, cfg: ModelConfig, mode: str, state: dict):
+    """One-token recurrent step. x: (bsz, d). Returns (y, new_state)."""
+    s, di, nh, conv_ch = _dims(cfg)
+    bsz, d = x.shape
+    g, n = s.n_groups, s.d_state
+    r = nh // g
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = qops.linear(p["in_proj"], h, cfg, mode)
+    z, xc_new, dt_raw = _split_in_proj(zxbcdt, cfg)
+
+    # rolling causal conv
+    window = jnp.concatenate([state["conv"], xc_new[:, None, :]], axis=1)  # (bsz,k,c)
+    conv_out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(conv_out + p["conv_b"]).astype(x.dtype)
+    new_conv_state = window[:, 1:]
+
+    xin = xc[..., :di]
+    bvec = xc[..., di : di + g * n].reshape(bsz, g, n).astype(jnp.float32)
+    cvec = xc[..., di + g * n :].reshape(bsz, g, n).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"]).reshape(bsz, g, r)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)).reshape(g, r)
+    xheads = xin.reshape(bsz, g, r, s.head_dim).astype(jnp.float32)
+
+    decay = jnp.exp(dt * a)[..., None, None]  # (bsz,g,r,1,1)
+    upd = jnp.einsum("bgrp,bgn->bgrpn", xheads * dt[..., None], bvec)
+    new_ssm = state["ssm"] * decay + upd
+    y = jnp.einsum("bgrpn,bgn->bgrp", new_ssm, cvec)
+    y = y + xheads * p["d_skip"].reshape(g, r)[None, :, :, None]
+    y = y.reshape(bsz, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_ln"], cfg.norm_eps)
+    out = qops.linear(p["out_proj"], y, cfg, mode, lora_leaf=p.get("lora_out"))
+    return out, {"ssm": new_ssm, "conv": new_conv_state}

@@ -1,0 +1,104 @@
+"""The training loop: data -> step -> metrics -> checkpoint -> resume."""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.distributed.fault import FaultInjector, PreemptionGuard, StragglerMonitor
+from repro.models import transformer as T
+from repro.training import optimizer as opt_lib
+from repro.training import train_lib
+
+
+def train(
+    cfg: ModelConfig,
+    steps: int,
+    global_batch: int,
+    seq_len: int,
+    opt_cfg: Optional[opt_lib.AdamWConfig] = None,
+    n_micro: int = 1,
+    lora_only: bool = False,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    keep: int = 3,
+    seed: int = 0,
+    dtype=jnp.float32,
+    fault: Optional[FaultInjector] = None,
+    preemption: Optional[PreemptionGuard] = None,
+    log_every: int = 10,
+    verbose: bool = True,
+) -> dict:
+    """Run (or resume) a training job; returns {'losses': [...], 'step': n, ...}."""
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig(total_steps=steps)
+    params = T.init_params(jax.random.PRNGKey(seed), cfg, dtype=dtype)
+    opt_state = opt_lib.init(params, opt_cfg)
+    data = DataIterator(cfg, DataConfig(seed=seed), global_batch, seq_len)
+    start = 0
+    losses: list = []
+
+    if ckpt_dir is not None:
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            trees, extra = ckpt.restore(
+                ckpt_dir, last, {"params": params, "opt": opt_state}
+            )
+            params, opt_state = trees["params"], trees["opt"]
+            data.load_state_dict(extra["data"])
+            start = last
+            losses = list(extra.get("losses", []))
+            if verbose:
+                print(f"[train] resumed from step {last}")
+
+    step_fn = jax.jit(
+        train_lib.make_train_step(cfg, opt_cfg, n_micro=n_micro, lora_only=lora_only),
+        donate_argnums=(0, 1),
+    )
+    monitor = StragglerMonitor()
+
+    def save(step):
+        if ckpt_dir is None:
+            return
+        ckpt.save(
+            ckpt_dir,
+            step,
+            {"params": params, "opt": opt_state},
+            extra={"data": data.state_dict(), "losses": losses[-200:]},
+        )
+        ckpt.keep_last_k(ckpt_dir, keep)
+
+    for step in range(start, steps):
+        if fault is not None:
+            fault.check(step)
+        if preemption is not None and preemption.requested:
+            save(step)
+            if verbose:
+                print(f"[train] preempted at step {step}; checkpointed cleanly")
+            return {"losses": losses, "step": step, "preempted": True}
+        batch = next(data)
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        monitor.record(step, time.time() - t0)
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.3f}")
+        if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
+            save(step + 1)
+
+    save(steps)
+    return {
+        "losses": losses,
+        "step": steps,
+        "params": params,
+        "opt_state": opt_state,
+        "stragglers": monitor.flagged,
+    }

@@ -1,0 +1,124 @@
+"""Training step: QAT (BitNet STE) forward, CE loss, grad accumulation, AdamW.
+
+``make_train_step`` builds the jit-able step used by both the real training
+loop (launch/train.py) and the multi-pod dry-run: microbatched gradient
+accumulation via lax.scan (bounds activation memory — the per-arch
+``dryrun_overrides`` pick the microbatch count), loss in f32, optional
+LoRA-only masking (frozen ternary base = the ROM).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.training import optimizer as opt_lib
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over all positions. logits: (b, s, V) f32; labels: (b, s)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, mode: str = "qat"):
+    logits, aux = T.forward(params, cfg, batch, mode=mode, remat=True)
+    labels = batch["labels"]
+    logits = logits[:, -labels.shape[1] :, :]  # VLM: patches carry no labels
+    ce = cross_entropy(logits, labels)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def lora_trainable_mask(params) -> dict:
+    """True only on LoRA leaves — the ROM base stays frozen (paper §III-C)."""
+
+    def walk(path, leaf):
+        return any("lora" in str(k) for k in path)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def _split_micro(batch: dict, n_micro: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: opt_lib.AdamWConfig,
+    n_micro: int = 1,
+    lora_only: bool = False,
+    mode: str = "qat",
+    grad_shardings=None,
+    micro_shardings=None,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_shardings``: optional pytree of shardings (matching params) used
+    to constrain the f32 gradient accumulator of the microbatch scan —
+    without it GSPMD may leave the accumulator (param-sized!) partially
+    replicated, blowing the per-device temp memory.
+    ``micro_shardings``: shardings for ONE microbatch (batch dim over data)
+    — the (B,) -> (n_micro, B/n) reshape loses the batch-dim sharding in
+    propagation, replicating all activations (observed on the dry-run).
+    """
+
+    def _constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, grad_shardings
+        )
+
+    def _constrain_micro(mb):
+        if micro_shardings is None:
+            return mb
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), mb, micro_shardings
+        )
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, mode), has_aux=True
+            )(params)
+        else:
+            micro = _split_micro(batch, n_micro)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                mb = _constrain_micro(mb)
+                (l, _), g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, mb, mode), has_aux=True
+                )(params)
+                g_acc = _constrain(
+                    jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = _constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+        )
+        mask = lora_trainable_mask(params) if lora_only else None
+        params_new, opt_new = opt_lib.update(grads, opt_state, params, opt_cfg, mask)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=opt_lib.lr_at(opt_cfg, opt_state.step))
+        return params_new, opt_new, metrics
+
+    return train_step

@@ -1,0 +1,73 @@
+"""DR eDRAM reproduction tests — the paper's 43.6% claim and Fig. 5(b)."""
+
+import pytest
+
+from repro.core import dr_edram
+
+
+def test_paper_headline_43_6_percent():
+    """S=128, B=32 must give exactly the paper's 43.6% reduction."""
+    r = dr_edram.closed_form_reduction(128, 32)
+    assert r == pytest.approx(0.43605, abs=1e-5)
+    assert round(r * 100, 1) == 43.6
+
+
+def test_simulator_matches_closed_form():
+    for s, b in [(32, 4), (64, 16), (128, 32), (256, 64), (128, 128), (16, 16)]:
+        tr = dr_edram.simulate(s, b)
+        expect = dr_edram.closed_form_reduction(s, b)
+        assert tr.reduction == pytest.approx(expect, abs=1e-9), (s, b)
+
+
+def test_simulator_total_accesses():
+    tr = dr_edram.simulate(128, 32)
+    # S writes + S(S-1)/2 reads
+    assert tr.total == 128 + 128 * 127 // 2 == 8256
+    assert tr.external == 8256 - 3600
+
+
+def test_early_tokens_read_most():
+    """Paper §IV property (i)/(ii): token i is read S-1-i times."""
+    s = 64
+    tr = dr_edram.simulate(s, 8)
+    for i, reads in enumerate(tr.reads_per_token):
+        assert reads == s - 1 - i
+
+
+def test_refresh_invariant_every_step():
+    """Every resident row is touched every decode step (gap == 1) =>
+    decode-driven refresh works iff TBT < tREF."""
+    tr = dr_edram.simulate(64, 16)
+    assert tr.max_touch_gap == 1
+    assert dr_edram.refresh_ok(128, 32, tbt_ms=50.0)  # TBT 50ms < 64ms
+    assert not dr_edram.refresh_ok(128, 32, tbt_ms=70.0)
+
+
+def test_fig5b_quarter_buffer_halves_traffic():
+    """Paper: 'relocating only 1/4 of the early tokens ... reduces the DRAM
+    access rate by nearly half'."""
+    for s in (32, 64, 128, 256):
+        r = dr_edram.closed_form_reduction(s, s // 4)
+        assert 0.40 <= r <= 0.50, (s, r)
+
+
+def test_fig5b_monotonicity():
+    tbl = dr_edram.fig5b_sweep()
+    for s, row in tbl.items():
+        vals = [row[b] for b in sorted(row)]
+        assert all(b2 > b1 for b1, b2 in zip(vals, vals[1:]))  # more buffer, more saving
+    # longer sequence, same buffer => smaller relative saving
+    assert tbl[256][32] < tbl[128][32] < tbl[64][32]
+
+
+def test_edram_capacity_falcon3_1b():
+    """Paper §V-B: 13.5 MB DR eDRAM for Falcon3-1B, S=128, 32 tokens, 6 batches."""
+    nbytes = dr_edram.edram_bytes(
+        buffered_tokens=32, n_layers=18, n_kv_heads=4, head_dim=256, n_batches=6
+    )
+    assert nbytes == 32 * 18 * 2 * 6 * 4 * 256 * 2
+    assert nbytes / 2**20 == pytest.approx(13.5, abs=0.01)
+
+
+def test_full_buffer_removes_all_traffic():
+    assert dr_edram.closed_form_reduction(64, 64) == pytest.approx(1.0)

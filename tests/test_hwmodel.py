@@ -1,0 +1,66 @@
+"""Hardware-model reproduction gates (paper Table III, §V-B, Fig. 1a)."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.hwmodel import model as hw
+
+
+def test_bit_density_10x_over_dcirom():
+    assert hw.density_ratio_vs_dcirom() == pytest.approx(10.2, abs=0.05)
+
+
+def test_tops_per_watt_headline():
+    # energy/op must invert exactly to the reported TOPS/W
+    assert 1e12 / hw.energy_per_op_pj(4) / 1e12 == pytest.approx(20.8)
+    assert 1e12 / hw.energy_per_op_pj(8) / 1e12 == pytest.approx(5.2)
+    # A8 runs 2-cycle bit-serial (plus tree toggling): 4x energy per op
+    assert hw.energy_per_op_pj(8) / hw.energy_per_op_pj(4) == pytest.approx(4.0)
+
+
+def test_biroma_macro_spec():
+    m = hw.MacroSpec()
+    assert m.trits == 2048 * 1024 * 2  # two ternary weights per transistor
+    assert m.n_trimla == 128
+    # macro stores ~4.2M weights at 1.58 b
+    assert m.capacity_bits == pytest.approx(m.trits * 1.58)
+
+
+def test_falcon3_deployment_matches_paper():
+    dep = hw.falcon3_deployment(get_config("falcon3-1b"))
+    assert dep["edram_mib"] == pytest.approx(13.5, abs=0.01)  # 13.5 MB DR eDRAM
+    assert dep["macro_partitions"] == 6 and dep["layers_per_partition"] == 3
+    assert dep["kv_reduction"] == pytest.approx(0.436, abs=0.001)  # 43.6%
+    assert dep["edram_area_cm2_14nm"] == pytest.approx(10.24, abs=0.01)
+
+
+def test_fig1a_llama7b_exceeds_1000cm2():
+    """Fig 1(a): LLaMA-7B CiROM mapping exceeds 1,000 cm² at the task-level
+    density implied by [1]'s full ResNet-56 deployment (8-bit weights)."""
+    area = hw.model_area_estimate_cm2(7e9, 8.0, hw.DCIROM_TASK_DENSITY_KB_MM2)
+    assert area > 1000.0
+
+
+def test_fig1a_bitnet1b_tens_of_cm2():
+    """BitNet-1B at DCiROM density lands at 'tens of cm²' (the design gap)…"""
+    area = hw.model_area_estimate_cm2(1e9, 1.58)
+    assert 10.0 < area < 100.0
+    # …and BitROM's 10x density closes it to single-digit cm²
+    area_bitrom = hw.model_area_estimate_cm2(1e9, 1.58, hw.BIT_DENSITY_KB_MM2)
+    assert area_bitrom < 10.0
+
+
+def test_update_free_gain_positive():
+    """Zero weight reload must dominate a DRAM-streaming baseline."""
+    cfg = get_config("falcon3-1b")
+    kv = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * cfg.n_layers
+    gain = hw.system_efficiency_gain(cfg.param_count(), seq_len=128, kv_bytes_per_token=kv)
+    assert gain > 3.0  # weight streaming dominates edge energy
+
+
+def test_periphery_fraction():
+    """Adder tree + TriMLA + periphery = 4.8% of macro area."""
+    n = 10_000_000
+    total = hw.macro_area_mm2(n)
+    array = n * 1.58 / 1e3 / hw.BIT_DENSITY_KB_MM2
+    assert (total - array) / total == pytest.approx(0.048, abs=1e-3)

@@ -1,0 +1,138 @@
+"""Pallas ternary-matmul kernel vs pure-jnp oracle (interpret mode on CPU).
+
+Sweeps shapes, codecs and block sizes; all comparisons are exact integer
+equality (the kernel is integer-only by construction).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import packing
+from repro.core.ternary import act_quant, weight_quant_absmean
+from repro.kernels import ops, ref
+
+
+def _random_case(seed, m, k, n):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    xq = jax.random.randint(kx, (m, k), -128, 128, dtype=jnp.int8)
+    wq = jax.random.randint(kw, (k, n), -1, 2, dtype=jnp.int8)
+    return xq, wq
+
+
+@pytest.mark.parametrize("codec", ["pack2", "pack243"])
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (8, 64, 16),       # tiny
+        (1, 256, 128),     # GEMV (decode shape)
+        (16, 512, 256),    # one full default block
+        (32, 520, 96),     # K not multiple of block/group
+        (5, 33, 7),        # everything ragged
+    ],
+)
+def test_pallas_matches_ref(codec, m, k, n):
+    xq, wq = _random_case(m * 7919 + k * 31 + n, m, k, n)
+    pack = packing.pack2 if codec == "pack2" else packing.pack243
+    packed = pack(wq)
+    got = ops.ternary_matmul(
+        xq, packed, k=k, codec=codec, impl="pallas",
+        block_m=8, block_n=128, block_k=20 if codec == "pack243" else 16,
+    )
+    want = ref.ternary_matmul_ref(xq, packed, k=k, codec=codec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and both equal the plain integer matmul
+    np.testing.assert_array_equal(
+        np.asarray(want, np.int64), np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    )
+
+
+@pytest.mark.parametrize("codec", ["pack2", "pack243"])
+def test_xla_path_matches_ref(codec):
+    xq, wq = _random_case(0, 12, 300, 48)
+    pack = packing.pack2 if codec == "pack2" else packing.pack243
+    packed = pack(wq)
+    got = ops.ternary_matmul(xq, packed, k=300, codec=codec, impl="xla")
+    want = ref.ternary_matmul_ref(xq, packed, k=300, codec=codec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batched_leading_dims():
+    xq = jax.random.randint(jax.random.PRNGKey(1), (2, 3, 64), -128, 128, dtype=jnp.int8)
+    wq = jax.random.randint(jax.random.PRNGKey(2), (64, 32), -1, 2, dtype=jnp.int8)
+    packed = packing.pack2(wq)
+    got = ops.ternary_matmul(
+        xq, packed, k=64, codec="pack2", impl="pallas", block_m=8, block_n=32, block_k=16
+    )
+    want = jnp.einsum("btk,kn->btn", xq.astype(jnp.int32), wq.astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 17),
+    k=st.integers(1, 130),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**30),
+    codec=st.sampled_from(["pack2", "pack243"]),
+)
+def test_property_kernel_exact(m, k, n, seed, codec):
+    xq, wq = _random_case(seed, m, k, n)
+    pack = packing.pack2 if codec == "pack2" else packing.pack243
+    got = ops.ternary_matmul(
+        xq, pack(wq), k=k, codec=codec, impl="pallas",
+        block_m=8, block_n=32, block_k=20,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got, np.int64), np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    )
+
+
+def test_int8_accumulator_headroom():
+    """Paper: 8-bit TriMLA output suffices for symmetric ternary weights.
+    We use int32 accumulators (TPU-native); verify no overflow at LLM dims."""
+    m, k, n = 4, 8192, 64
+    xq = jnp.full((m, k), 127, dtype=jnp.int8)
+    wq = jnp.ones((k, n), dtype=jnp.int8)  # worst case: all +1
+    got = ops.ternary_matmul(xq, packing.pack2(wq), k=k, codec="pack2", impl="xla")
+    assert int(got.max()) == 127 * k  # exact, no wraparound
+    assert 127 * k < 2**31 - 1
+
+
+def test_bitlinear_packed_vs_qat_consistency():
+    """Packed inference forward must match the dequantized reference within
+    float tolerance (scales applied outside the integer kernel)."""
+    from repro.core import bitlinear
+
+    key = jax.random.PRNGKey(3)
+    params = bitlinear.init(key, 96, 48)
+    x = jax.random.normal(jax.random.PRNGKey(4), (6, 96))
+    pw = bitlinear.quantize_pack(params, codec="pack2")
+    y_packed = bitlinear.apply_packed(pw, x, impl="xla")
+    y_ref = ref.bitlinear_ref(x, params["w"])
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_bitlinear_pallas_impl_matches_xla():
+    from repro.core import bitlinear
+
+    params = bitlinear.init(jax.random.PRNGKey(5), 128, 64)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 128))
+    pw = bitlinear.quantize_pack(params, codec="pack243")
+    y_xla = bitlinear.apply_packed(pw, x, impl="xla")
+    y_pal = bitlinear.apply_packed(pw, x, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pal), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bitlinear_dtypes(dtype):
+    from repro.core import bitlinear
+
+    params = bitlinear.init(jax.random.PRNGKey(7), 64, 32, dtype=dtype)
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 64), dtype=dtype)
+    y = bitlinear.apply_qat(params, x)
+    assert y.dtype == dtype and y.shape == (2, 32)
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))

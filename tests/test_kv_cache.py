@@ -1,0 +1,96 @@
+"""Two-tier DR KV cache: routing, tiered attention vs single-buffer oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kv_cache
+
+
+def _mk(batch=2, hot=4, cold=12, heads=2, dim=8, dtype=jnp.float32):
+    return kv_cache.init_cache(batch, hot, cold, (heads, dim), dtype)
+
+
+def test_append_routes_early_tokens_hot():
+    cache = _mk()
+    b, h, d = 2, 2, 8
+    for t in range(6):
+        k = jnp.full((b, h, d), float(t + 1))
+        cache = kv_cache.append_decode(cache, k, k * 10)
+    assert int(cache.length) == 6
+    # tokens 0..3 in hot, 4..5 in cold
+    np.testing.assert_allclose(np.asarray(cache.hot_k[0, :, 0, 0]), [1, 2, 3, 4])
+    np.testing.assert_allclose(np.asarray(cache.cold_k[0, :2, 0, 0]), [5, 6])
+    np.testing.assert_allclose(np.asarray(cache.cold_v[0, :2, 0, 0]), [50, 60])
+
+
+def test_bulk_append_matches_decode_appends():
+    cache_a = _mk()
+    cache_b = _mk()
+    ks = jax.random.normal(jax.random.PRNGKey(0), (2, 7, 2, 8))
+    vs = jax.random.normal(jax.random.PRNGKey(1), (2, 7, 2, 8))
+    cache_a = kv_cache.append(cache_a, ks, vs)
+    for t in range(7):
+        cache_b = kv_cache.append_decode(cache_b, ks[:, t], vs[:, t])
+    for fa, fb in zip(cache_a, cache_b):
+        np.testing.assert_allclose(np.asarray(fa), np.asarray(fb), rtol=1e-6)
+
+
+def _oracle_attention(q, ks, vs):
+    """Plain single-buffer attention oracle. q: (b,h,d); ks/vs: (b,t,g,d)."""
+    b, t, g, d = ks.shape
+    h = q.shape[1]
+    rep = h // g
+    qg = q.reshape(b, g, rep, d)
+    logits = jnp.einsum("bgrd,bsgd->bgrs", qg, ks) * (d**-0.5)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, vs)
+    return out.reshape(b, h, d)
+
+
+@pytest.mark.parametrize("n_tokens", [1, 3, 4, 5, 11, 16])
+def test_tiered_attention_matches_oracle(n_tokens):
+    """Streaming-softmax merge over (hot, cold) == softmax over the concat."""
+    cache = _mk()
+    ks = jax.random.normal(jax.random.PRNGKey(2), (2, n_tokens, 2, 8))
+    vs = jax.random.normal(jax.random.PRNGKey(3), (2, n_tokens, 2, 8))
+    cache = kv_cache.append(cache, ks, vs)
+    q = jax.random.normal(jax.random.PRNGKey(4), (2, 4, 8))  # 4 q heads, 2 kv (GQA rep=2)
+    got = kv_cache.tiered_decode_attention(q, cache)
+    want = _oracle_attention(q, ks, vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_tiered_attention_hot_only():
+    cache = _mk()
+    ks = jax.random.normal(jax.random.PRNGKey(5), (2, 2, 2, 8))
+    vs = jax.random.normal(jax.random.PRNGKey(6), (2, 2, 2, 8))
+    cache = kv_cache.append(cache, ks, vs)
+    q = jax.random.normal(jax.random.PRNGKey(7), (2, 2, 8))
+    got = kv_cache.tiered_decode_attention(q, cache)
+    want = _oracle_attention(q, ks, vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_append_is_jittable_and_scan_safe():
+    cache = _mk()
+
+    def step(c, kv):
+        k, v = kv
+        return kv_cache.append_decode(c, k, v), None
+
+    ks = jax.random.normal(jax.random.PRNGKey(8), (10, 2, 2, 8))
+    vs = jax.random.normal(jax.random.PRNGKey(9), (10, 2, 2, 8))
+    final, _ = jax.lax.scan(step, cache, (ks, vs))
+    assert int(final.length) == 10
+
+
+def test_step_traffic_accounting():
+    tb = 100  # bytes per token per step
+    tr = kv_cache.step_traffic_bytes(length=40, hot_cap=32, token_bytes=tb)
+    assert tr["ondie_read"] == 32 * tb
+    assert tr["ext_read"] == 8 * tb
+    assert tr["ext_write"] == tb  # position 40 >= hot_cap -> external write
+    tr2 = kv_cache.step_traffic_bytes(length=10, hot_cap=32, token_bytes=tb)
+    assert tr2["ext_read"] == 0 and tr2["ext_write"] == 0

@@ -1,0 +1,87 @@
+"""Sharding-rule unit tests (1-device mesh — structure, not placement)."""
+
+import jax
+import pytest
+from jax.sharding import NamedSharding
+
+from repro.configs import SHAPES, get_smoke_config
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import input_specs, make_bundle
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_debug_mesh(1, 1)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mixtral-8x22b", "mamba2-130m", "zamba2-7b"])
+def test_param_shardings_cover_tree(arch, mesh):
+    cfg = get_smoke_config(arch)
+    from repro.launch.steps import param_specs
+
+    for packed in (False, True):
+        tree = param_specs(cfg, packed=packed)
+        sh = shd.param_shardings(tree, cfg, mesh, "train" if not packed else "infer")
+        flat_t = jax.tree.leaves(tree)
+        flat_s = jax.tree.leaves(
+            sh, is_leaf=lambda x: isinstance(x, NamedSharding)
+        )
+        assert len(flat_t) == len(flat_s)
+        assert all(isinstance(s, NamedSharding) for s in flat_s)
+
+
+def test_input_specs_no_allocation():
+    """input_specs must return ShapeDtypeStructs (never device arrays)."""
+    cfg = get_smoke_config("qwen3-8b")
+    for shape_name in ("train_4k", "decode_32k"):
+        args = input_specs(cfg, SHAPES[shape_name])
+        for leaf in jax.tree.leaves(
+            args, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        ):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+
+
+def test_bundle_kinds():
+    cfg = get_smoke_config("qwen3-8b")
+    assert make_bundle(cfg, SHAPES["train_4k"]).kind == "train"
+    assert make_bundle(cfg, SHAPES["prefill_32k"]).kind == "prefill"
+    assert make_bundle(cfg, SHAPES["decode_32k"]).kind == "decode"
+
+
+def test_applicable_shapes_rules():
+    from repro.configs import applicable_shapes, get_config
+
+    assert applicable_shapes(get_config("hubert-xlarge")) == ("train_4k", "prefill_32k")
+    assert "long_500k" in applicable_shapes(get_config("mamba2-130m"))
+    assert "long_500k" in applicable_shapes(get_config("zamba2-7b"))
+    assert "long_500k" not in applicable_shapes(get_config("qwen3-8b"))
+    # 31 combos = the 62-cell dry-run over two meshes
+    from repro.configs import list_configs
+
+    combos = sum(
+        len(applicable_shapes(get_config(a))) for a in list_configs() if a != "falcon3-1b"
+    )
+    assert combos == 31
+
+
+def test_dryrun_records_complete():
+    """If the dry-run artifacts exist, every expected cell must be present."""
+    import json
+    from pathlib import Path
+
+    from repro.configs import applicable_shapes, get_config, list_configs
+
+    d = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not d.exists():
+        pytest.skip("dry-run results not generated in this checkout")
+    for arch in list_configs():
+        if arch == "falcon3-1b":
+            continue
+        for shape in applicable_shapes(get_config(arch)):
+            for mesh_name in ("single", "multi"):
+                p = d / f"{arch}__{shape}__{mesh_name}.json"
+                assert p.exists(), p.name
+                r = json.loads(p.read_text())
+                assert r["memory"]["argument_bytes"] > 0
+                assert r["flops_total"] > 0

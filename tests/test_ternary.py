@@ -1,0 +1,103 @@
+"""Unit + property tests for BitNet b1.58 quantization (core/ternary.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ternary
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_weight_quant_values_are_ternary():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    q = ternary.weight_quant_absmean(w)
+    assert q.wq.dtype == jnp.int8
+    assert set(np.unique(np.asarray(q.wq))).issubset({-1, 0, 1})
+    assert float(q.scale) == pytest.approx(float(jnp.mean(jnp.abs(w))), rel=1e-6)
+
+
+def test_weight_quant_matches_bitnet_rule():
+    """W_q must equal RoundClip(W / mean|W|, -1, 1) exactly."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 16)) * 0.02
+    q = ternary.weight_quant_absmean(w)
+    scale = np.mean(np.abs(np.asarray(w, dtype=np.float32)))
+    expect = np.clip(np.round(np.asarray(w, np.float32) / scale), -1, 1)
+    np.testing.assert_array_equal(np.asarray(q.wq), expect.astype(np.int8))
+
+
+@pytest.mark.parametrize("bits,qmin,qmax", [(8, -128, 127), (4, -8, 7)])
+def test_act_quant_range(bits, qmin, qmax):
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 256)) * 10
+    q = ternary.act_quant(x, bits=bits)
+    xq = np.asarray(q.xq)
+    assert xq.min() >= qmin and xq.max() <= qmax
+    # absmax element must map to +/- qmax
+    assert np.max(np.abs(xq)) == qmax
+
+
+def test_act_quant_dequant_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 512))
+    q = ternary.act_quant(x, bits=8)
+    xd = ternary.act_dequant(q)
+    # max error bounded by half a quantization step per token
+    step = 1.0 / np.asarray(q.scale)
+    assert np.max(np.abs(np.asarray(xd - x)) - 0.5 * step) < 1e-5
+
+
+def test_ste_identity_gradient():
+    w = jax.random.normal(jax.random.PRNGKey(4), (32, 8))
+    g = jax.grad(lambda w: jnp.sum(ternary.weight_quant_ste(w) ** 2))(w)
+    # STE: d/dw sum(q(w)^2) == 2*q(w) (identity through the quantizer)
+    qw = ternary.weight_quant_ste(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * qw), rtol=1e-5, atol=1e-5)
+
+
+def test_ternary_mac_is_mult_free_equivalent():
+    key = jax.random.PRNGKey(5)
+    xq = jax.random.randint(key, (4, 96), -128, 128, dtype=jnp.int8)
+    wq = jax.random.randint(jax.random.PRNGKey(6), (96, 24), -1, 2, dtype=jnp.int8)
+    acc = ternary.ternary_mac_reference(xq, wq)
+    expect = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    np.testing.assert_array_equal(np.asarray(acc, np.int64), expect)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 7),
+    k=st.integers(1, 65),
+    n=st.integers(1, 9),
+    seed=st.integers(0, 2**30),
+)
+def test_property_mac_matches_integer_matmul(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    xq = jax.random.randint(kx, (m, k), -128, 128, dtype=jnp.int8)
+    wq = jax.random.randint(kw, (k, n), -1, 2, dtype=jnp.int8)
+    acc = ternary.ternary_mac_reference(xq, wq)
+    np.testing.assert_array_equal(
+        np.asarray(acc, np.int64), np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30), bits=st.sampled_from([4, 8]))
+def test_property_fake_quant_linear_close_to_float(seed, bits):
+    """Fake-quant forward approximates the float matmul within quant error."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (3, 64))
+    w = jax.random.normal(k2, (64, 16)) * 0.05
+    y = ternary.fake_quant_linear(x, w, bits=bits)
+    assert np.all(np.isfinite(np.asarray(y)))
+    # scale of output should match float matmul within ~50% (coarse ternary)
+    ref = x @ w
+    denom = float(jnp.linalg.norm(ref)) + 1e-6
+    rel = float(jnp.linalg.norm(y - ref)) / denom
+    assert rel < 1.0  # sanity: quantization is lossy but not unbounded
+
+
+def test_sparsity_measured():
+    wq = jnp.array([[0, 1, -1, 0], [0, 0, 1, -1]], dtype=jnp.int8)
+    assert float(ternary.ternary_sparsity(wq)) == pytest.approx(4 / 8)

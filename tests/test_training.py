@@ -1,0 +1,127 @@
+"""Training substrate: optimizer (incl. 8-bit states), data pipeline,
+grad accumulation, LoRA-only masking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, DataIterator, batch_at_step
+from repro.training import optimizer as opt_lib
+from repro.training import train_lib
+
+CFG = get_smoke_config("qwen3-8b")
+
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    cfg = opt_lib.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    state = opt_lib.init(params, cfg)
+    for _ in range(50):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt_lib.update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_quantized_state_tracks_fp32():
+    """8-bit m/v AdamW stays close to the fp32 trajectory."""
+    key = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(key, (64, 64))
+    cfg32 = opt_lib.AdamWConfig(lr=0.01, warmup_steps=0, weight_decay=0.0)
+    cfg8 = opt_lib.AdamWConfig(lr=0.01, warmup_steps=0, weight_decay=0.0,
+                               quantized_state=True)
+    p32, p8 = {"w": w0}, {"w": w0}
+    s32, s8 = opt_lib.init(p32, cfg32), opt_lib.init(p8, cfg8)
+    assert isinstance(s8.m["w"], opt_lib.QTensor)
+    for i in range(20):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (64, 64))}
+        p32, s32 = opt_lib.update(g, s32, p32, cfg32)
+        p8, s8 = opt_lib.update(g, s8, p8, cfg8)
+    rel = float(jnp.linalg.norm(p8["w"] - p32["w"]) / jnp.linalg.norm(p32["w"]))
+    assert rel < 0.05
+
+
+def test_quantized_state_memory_4x_smaller():
+    params = {"w": jnp.zeros((512, 512))}
+    s32 = opt_lib.init(params, opt_lib.AdamWConfig())
+    s8 = opt_lib.init(params, opt_lib.AdamWConfig(quantized_state=True))
+    assert opt_lib.state_bytes(s8) < opt_lib.state_bytes(s32) / 3.5
+
+
+def test_lr_schedule():
+    cfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(opt_lib.lr_at(cfg, jnp.asarray(0))) < 2e-4
+    assert float(opt_lib.lr_at(cfg, jnp.asarray(10))) == pytest.approx(1e-3, rel=0.01)
+    assert float(opt_lib.lr_at(cfg, jnp.asarray(100))) == pytest.approx(1e-4, rel=0.05)
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    it1 = DataIterator(CFG, DataConfig(seed=7), 4, 32)
+    batches = [next(it1) for _ in range(3)]
+    it2 = DataIterator(CFG, DataConfig(seed=7), 4, 32)
+    it2.load_state_dict({"step": 2, "seed": 7})
+    b2 = next(it2)
+    np.testing.assert_array_equal(np.asarray(b2["tokens"]), np.asarray(batches[2]["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(
+        np.asarray(batches[0]["labels"][:, :-1]), np.asarray(batches[0]["tokens"][:, 1:])
+    )
+
+
+def test_grad_accumulation_matches_full_batch():
+    """n_micro=2 must produce (nearly) the same update as n_micro=1."""
+    cfg = get_smoke_config("falcon3-1b")
+    import repro.models.transformer as T
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=0)
+    batch = batch_at_step(cfg, DataConfig(), 0, 8, 32)
+
+    s1 = opt_lib.init(params, opt_cfg)
+    step1 = train_lib.make_train_step(cfg, opt_cfg, n_micro=1)
+    p1, _, m1 = step1(params, s1, batch)
+
+    s2 = opt_lib.init(params, opt_cfg)
+    step2 = train_lib.make_train_step(cfg, opt_cfg, n_micro=2)
+    p2, _, m2 = step2(params, s2, batch)
+
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    # Adam's first step is sign-normalized (upd ~ g/|g|), so elements whose
+    # grad is ~0 may flip sign between accumulation orders and differ by up
+    # to 2*lr. Require: bounded by 2*lr everywhere, and the flip fraction
+    # (beyond float noise) is tiny.
+    lr = opt_cfg.lr
+    total, off = 0, 0
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        d = np.abs(np.asarray(a, np.float64) - np.asarray(b, np.float64))
+        assert d.max() <= 2.05 * lr
+        total += d.size
+        off += int((d > 1e-5).sum())
+    assert off / total < 0.01, f"{off}/{total} elements diverged"
+
+
+def test_lora_only_freezes_base():
+    import dataclasses
+
+    import repro.models.transformer as T
+
+    cfg = get_smoke_config("falcon3-1b")  # lora_rank=4 in smoke
+    assert cfg.bitnet.lora_rank > 0
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = opt_lib.AdamWConfig(lr=1e-2, warmup_steps=0)
+    state = opt_lib.init(params, opt_cfg)
+    batch = batch_at_step(cfg, DataConfig(), 0, 4, 16)
+    step = train_lib.make_train_step(cfg, opt_cfg, lora_only=True)
+    p2, _, _ = step(params, state, batch)
+
+    flat1 = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat2 = jax.tree.leaves(p2)
+    changed_lora, changed_base = 0, 0
+    for (path, a), b in zip(flat1, flat2):
+        moved = not np.array_equal(np.asarray(a), np.asarray(b))
+        if any("lora" in str(k) for k in path):
+            changed_lora += moved
+        else:
+            changed_base += moved
+    assert changed_lora > 0 and changed_base == 0  # the ROM stays fused

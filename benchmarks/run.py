@@ -8,7 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   fig5b/*   DR eDRAM access-reduction sweep              (Fig. 5b)
   fig6a/*   LoRA quantization-bit ablation (measured)    (Fig. 6a)
   kernel/*  ternary matmul + packing microbenchmarks
-  serving/* packed decode + DR traffic (measured)
+  serving/* packed decode + DR traffic (measured), plus the
+            continuous-batching vs lock-step throughput comparison
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--fast]
 """
@@ -24,7 +25,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="skip the trained ablation")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_tables
+    from benchmarks import kernel_bench, paper_tables, serving_bench
 
     rows: list = []
     sections = [
@@ -36,6 +37,7 @@ def main() -> None:
         ("kernel/density", kernel_bench.packing_density),
         ("kernel/matmul", kernel_bench.ternary_matmul_shapes),
         ("serving", kernel_bench.serving_token_rate),
+        ("serving/continuous", serving_bench.serving_throughput),
     ]
     if not args.fast:
         sections.append(("fig6a", paper_tables.fig6a))

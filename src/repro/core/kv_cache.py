@@ -1,4 +1,4 @@
-"""Two-tier (DR eDRAM-style) KV cache (paper §IV).
+"""Two-tier (DR eDRAM-style) KV cache with per-slot lengths (paper §IV).
 
 BitROM buffers the first ``hot_cap`` tokens of a sequence on-die (DR eDRAM)
 and leaves the tail in external DRAM. The TPU adaptation keeps the same
@@ -10,17 +10,26 @@ The cache is a pytree of fixed-shape arrays (jit/scan friendly):
 
   hot_k/hot_v   : (batch, hot_cap, ...)      early tokens
   cold_k/cold_v : (batch, cold_cap, ...)     the rest
-  length        : ()  int32                  tokens written so far
+  lengths       : (batch,) int32             tokens written, per slot
 
 ``...`` is whatever a layer caches per token: (n_kv_heads, head_dim) for
 GQA/MQA, (d_latent,) for MLA latents. Appends route on position; attention
 runs per-tier and combines with a numerically-stable streaming softmax, so
 no concat of the two tiers is ever materialized.
+
+Continuous batching (serving/scheduler.py) treats each batch row as a
+*slot*: sequences of different lengths decode side by side, so every
+operation is vectorized over ``lengths``, and the decode-path appends
+(``append_decode`` / ``append_decode_ring``) take an optional
+``active: (batch,) bool`` mask — inactive slots (retired / not yet
+admitted) neither write their tier buffers nor advance their length.
+Bulk ``append`` has no mask: prefill always targets a fresh cache whose
+rows are scattered into live slots afterwards (see Engine._admit).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +40,7 @@ class TieredKVCache(NamedTuple):
     hot_v: jax.Array
     cold_k: jax.Array
     cold_v: jax.Array
-    length: jax.Array  # scalar int32: number of tokens currently cached
+    lengths: jax.Array  # (batch,) int32: tokens currently cached per slot
 
     @property
     def hot_cap(self) -> int:
@@ -60,34 +69,42 @@ def init_cache(
         hot_v=jnp.zeros(shape_hot, dtype),
         cold_k=jnp.zeros(shape_cold, dtype),
         cold_v=jnp.zeros(shape_cold, dtype),
-        length=jnp.zeros((), jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
     )
+
+
+def _active_mask(cache: TieredKVCache, active: Optional[jax.Array]) -> jax.Array:
+    if active is None:
+        return jnp.ones(cache.lengths.shape, bool)
+    return active.astype(bool)
 
 
 def append(cache: TieredKVCache, k_new: jax.Array, v_new: jax.Array) -> TieredKVCache:
     """Append ``t_new`` tokens (batch, t_new, ...). Early positions land hot.
 
-    Routing is data-independent given ``cache.length`` (a traced scalar), so
-    we write both tiers with masked dynamic_update_slice semantics: each new
-    token goes to the hot tier if its absolute position < hot_cap, else cold.
+    Each slot appends starting at its own ``lengths[b]``, so the same call
+    serves aligned prefill (all lengths equal) and per-slot refill. Routing
+    is data-independent given the traced lengths: every new token goes to
+    the hot tier if its absolute position < hot_cap, else cold.
     """
-    b, t_new = k_new.shape[0], k_new.shape[1]
-    start = cache.length
-    pos = start + jnp.arange(t_new, dtype=jnp.int32)  # absolute positions
+    t_new = k_new.shape[1]
+    start = cache.lengths  # (b,)
+    pos = start[:, None] + jnp.arange(t_new, dtype=jnp.int32)[None]  # (b, t)
 
     def scatter(tier_k, tier_v, tier_pos, in_tier):
-        # tier_pos: position within the tier (clipped); in_tier: bool mask
+        # tier_pos: (b, t) position within the tier (clipped); in_tier: bool
         cap = tier_k.shape[1]
+        if cap == 0:
+            return tier_k, tier_v
         idx = jnp.clip(tier_pos, 0, cap - 1)
         onehot = (
             jax.nn.one_hot(idx, cap, dtype=tier_k.dtype)
-            * in_tier.astype(tier_k.dtype)[:, None]
-        )  # (t_new, cap)
-        # (b, t, ...) -> (b, cap, ...): accumulate-overwrite via where
-        upd_k = jnp.einsum("tc,bt...->bc...", onehot, k_new.astype(tier_k.dtype))
-        upd_v = jnp.einsum("tc,bt...->bc...", onehot, v_new.astype(tier_v.dtype))
-        written = jnp.einsum("tc->c", onehot) > 0
-        mask = written.reshape((1, cap) + (1,) * (tier_k.ndim - 2))
+            * in_tier.astype(tier_k.dtype)[..., None]
+        )  # (b, t, cap)
+        upd_k = jnp.einsum("btc,bt...->bc...", onehot, k_new.astype(tier_k.dtype))
+        upd_v = jnp.einsum("btc,bt...->bc...", onehot, v_new.astype(tier_v.dtype))
+        written = jnp.einsum("btc->bc", onehot) > 0
+        mask = written.reshape(written.shape + (1,) * (tier_k.ndim - 2))
         return jnp.where(mask, upd_k, tier_k), jnp.where(mask, upd_v, tier_v)
 
     in_hot = pos < cache.hot_cap
@@ -96,51 +113,61 @@ def append(cache: TieredKVCache, k_new: jax.Array, v_new: jax.Array) -> TieredKV
     return TieredKVCache(hot_k, hot_v, cold_k, cold_v, start + t_new)
 
 
-def append_decode(cache: TieredKVCache, k_new: jax.Array, v_new: jax.Array) -> TieredKVCache:
-    """Fast path for decode: append exactly one token (batch, ...)."""
-    pos = cache.length
+def _append_one(
+    cache: TieredKVCache,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    active: Optional[jax.Array],
+    ring: bool,
+) -> TieredKVCache:
+    pos = cache.lengths  # (b,)
+    act = _active_mask(cache, active)
     in_hot = pos < cache.hot_cap
 
     def upd(tier, new, tier_pos, write):
         cap = tier.shape[1]
         if cap == 0:  # zero-size tier (e.g. SWA: hot_cap=0) — nothing to write
             return tier
-        idx = jnp.clip(tier_pos, 0, cap - 1)
-        new = new.astype(tier.dtype)[:, None]  # (b, 1, ...)
-        updated = jax.lax.dynamic_update_slice_in_dim(tier, new, idx, axis=1)
-        return jnp.where(write, updated, tier)
+        idx = tier_pos % cap if ring else jnp.clip(tier_pos, 0, cap - 1)
+        onehot = idx[:, None] == jnp.arange(cap, dtype=jnp.int32)[None]  # (b, cap)
+        mask = onehot & write[:, None] & act[:, None]
+        mask = mask.reshape(mask.shape + (1,) * (tier.ndim - 2))
+        return jnp.where(mask, new.astype(tier.dtype)[:, None], tier)
 
     hot_k = upd(cache.hot_k, k_new, pos, in_hot)
     hot_v = upd(cache.hot_v, v_new, pos, in_hot)
     cold_k = upd(cache.cold_k, k_new, pos - cache.hot_cap, ~in_hot)
     cold_v = upd(cache.cold_v, v_new, pos - cache.hot_cap, ~in_hot)
-    return TieredKVCache(hot_k, hot_v, cold_k, cold_v, pos + 1)
+    return TieredKVCache(hot_k, hot_v, cold_k, cold_v, pos + act.astype(jnp.int32))
 
 
-def append_decode_ring(cache: TieredKVCache, k_new: jax.Array, v_new: jax.Array) -> TieredKVCache:
+def append_decode(
+    cache: TieredKVCache,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    active: Optional[jax.Array] = None,
+) -> TieredKVCache:
+    """Fast path for decode: append exactly one token (batch, ...) per slot.
+
+    ``active`` (batch,) bool gates the write per slot: inactive slots keep
+    their buffers and length untouched (continuous-batching retirement).
+    """
+    return _append_one(cache, k_new, v_new, active, ring=False)
+
+
+def append_decode_ring(
+    cache: TieredKVCache,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    active: Optional[jax.Array] = None,
+) -> TieredKVCache:
     """Decode append with a *ring-buffer* cold tier (sliding-window archs).
 
     Position p ≥ hot_cap lands at cold slot (p - hot_cap) % cold_cap, so the
     cold tier holds exactly the last ``cold_cap`` tokens (SWA window) and
     early tokens are evicted — DR tiering uses hot_cap=0 here (DESIGN.md §4).
     """
-    pos = cache.length
-    in_hot = pos < cache.hot_cap
-
-    def upd(tier, new, tier_pos, write):
-        cap = tier.shape[1]
-        if cap == 0:  # zero-size tier — nothing to write
-            return tier
-        idx = jnp.clip(tier_pos % cap, 0, cap - 1)
-        new = new.astype(tier.dtype)[:, None]
-        updated = jax.lax.dynamic_update_slice_in_dim(tier, new, idx, axis=1)
-        return jnp.where(write, updated, tier)
-
-    hot_k = upd(cache.hot_k, k_new, pos, in_hot)
-    hot_v = upd(cache.hot_v, v_new, pos, in_hot)
-    cold_k = upd(cache.cold_k, k_new, pos - cache.hot_cap, ~in_hot)
-    cold_v = upd(cache.cold_v, v_new, pos - cache.hot_cap, ~in_hot)
-    return TieredKVCache(hot_k, hot_v, cold_k, cold_v, pos + 1)
+    return _append_one(cache, k_new, v_new, active, ring=True)
 
 
 # ---------------------------------------------------------------------------
@@ -156,6 +183,20 @@ def _upcast(x):
     if x.dtype == jnp.float8_e4m3fn:
         return x.astype(jnp.bfloat16)
     return x.astype(jnp.float32)
+
+
+def _valid_masks(cache: TieredKVCache):
+    """Per-slot validity of each tier position: (b, hot_cap), (b, cold_cap).
+
+    The cold formula clamps at cold_cap, which is correct for both the
+    linear layout (lengths never exceed capacity) and the ring layout
+    (every slot is valid once the window has wrapped).
+    """
+    lengths = cache.lengths  # (b,)
+    hot_valid = jnp.arange(cache.hot_cap)[None] < lengths[:, None]
+    n_cold = jnp.clip(lengths - cache.hot_cap, 0, cache.cold_cap)
+    cold_valid = jnp.arange(cache.cold_cap)[None] < n_cold[:, None]
+    return hot_valid, cold_valid
 
 
 def _tier_partial(q, k, v, valid, scale):
@@ -199,21 +240,16 @@ def tiered_decode_attention(
 ) -> jax.Array:
     """One-token attention over both tiers. q: (b, h, d) -> (b, h, d).
 
-    ``ring`` marks a ring-buffer cold tier (SWA): validity clamps at
-    cold_cap (every slot valid once the window has wrapped). The clamped
-    formula is also correct for the non-ring case, so it is always used;
-    the flag is kept for call-site clarity.
+    Validity is per slot (``cache.lengths``), so mixed-length batches each
+    attend to exactly their own prefix. A slot with length 0 (unadmitted)
+    returns zeros. ``ring`` marks a ring-buffer cold tier (SWA); the
+    clamped validity formula covers both layouts, the flag is kept for
+    call-site clarity.
     """
     del ring  # validity formula below covers both layouts
     d = q.shape[-1]
     scale = scale if scale is not None else d**-0.5
-    length = cache.length
-    hot_valid = jnp.arange(cache.hot_cap) < length
-    n_cold = jnp.clip(length - cache.hot_cap, 0, cache.cold_cap)
-    cold_valid = jnp.arange(cache.cold_cap) < n_cold
-    b = q.shape[0]
-    hot_valid = jnp.broadcast_to(hot_valid[None], (b, cache.hot_cap))
-    cold_valid = jnp.broadcast_to(cold_valid[None], (b, cache.cold_cap))
+    hot_valid, cold_valid = _valid_masks(cache)
 
     n1, d1, m1 = _tier_partial(q, cache.hot_k, cache.hot_v, hot_valid, scale)
     n2, d2, m2 = _tier_partial(q, cache.cold_k, cache.cold_v, cold_valid, scale)
@@ -237,17 +273,10 @@ def tiered_decode_attention_latent(
     The cache k-slot holds (c_kv ‖ k_rope) per token, shape (b, s, D); the
     v-slot is empty (0-dim) — values are the first ``value_dim`` dims of the
     k-slot (the latent), so the latent is stored exactly once. Returns the
-    per-head latent context (b, h, value_dim).
+    per-head latent context (b, h, value_dim). Validity is per slot.
     """
-    length = cache.length
     b = q.shape[0]
-    hot_valid = jnp.broadcast_to(
-        (jnp.arange(cache.hot_cap) < length)[None], (b, cache.hot_cap)
-    )
-    n_cold = jnp.clip(length - cache.hot_cap, 0, cache.cold_cap)
-    cold_valid = jnp.broadcast_to(
-        (jnp.arange(cache.cold_cap) < n_cold)[None], (b, cache.cold_cap)
-    )
+    hot_valid, cold_valid = _valid_masks(cache)
 
     def partial(kbuf, valid):
         if kbuf.shape[1] == 0:  # zero-capacity tier: neutral merge element
@@ -285,7 +314,11 @@ def tiered_decode_attention_latent(
 def step_traffic_bytes(
     length: int, hot_cap: int, token_bytes: int
 ) -> dict:
-    """External vs on-die bytes moved by one decode step at cache length L."""
+    """External vs on-die bytes moved by one decode step at cache length L.
+
+    Host-side scalar form (single sequence). The vectorized per-slot form
+    used by the jitted serving loop is ``step_traffic_tokens``.
+    """
     hot_tokens = min(length, hot_cap)
     cold_tokens = max(length - hot_cap, 0)
     write_ext = 0 if length < hot_cap else token_bytes
@@ -294,4 +327,64 @@ def step_traffic_bytes(
         "ext_read": cold_tokens * token_bytes,
         "ondie_write": token_bytes - write_ext,
         "ext_write": write_ext,
+    }
+
+
+TRAFFIC_KEYS = ("ondie_read", "ext_read", "ondie_write", "ext_write")
+
+
+def external_reduction(traffic: dict) -> float:
+    """Fraction of accesses kept on-die, from a 4-key traffic ledger.
+
+    Shared by every result type that carries a ledger (engine
+    GenerationResult, scheduler FinishedRequest) so the accounting rule
+    lives in exactly one place."""
+    ext = traffic["ext_read"] + traffic["ext_write"]
+    total = ext + traffic["ondie_read"] + traffic["ondie_write"]
+    return 1.0 - ext / total if total else 0.0
+
+
+def step_traffic_tokens(lengths: jax.Array, hot_cap: int) -> dict:
+    """Vectorized per-slot ledger for one decode step, in *token* units.
+
+    ``lengths`` (b,) is each slot's cache length *before* the step's append.
+    Returns a dict of (b,) int32 token counts; multiply by the per-token KV
+    byte size to get bytes (kept as counts on device so int32 never meets
+    byte-scaled magnitudes inside the jitted loop). Summing this over steps
+    i = 0..S-1 for one slot reproduces ``dr_edram.simulate`` exactly, so the
+    accumulated ledger reconciles with ``dr_edram.closed_form_reduction``
+    per sequence even in mixed-length batches.
+    """
+    lengths = lengths.astype(jnp.int32)
+    hot = jnp.minimum(lengths, hot_cap)
+    cold = jnp.maximum(lengths - hot_cap, 0)
+    ext_w = (lengths >= hot_cap).astype(jnp.int32)
+    return {
+        "ondie_read": hot,
+        "ext_read": cold,
+        "ondie_write": 1 - ext_w,
+        "ext_write": ext_w,
+    }
+
+
+def prompt_traffic_tokens(prompt_len: int, hot_cap: int) -> dict:
+    """Closed-form prompt-phase ledger (token units) for one sequence.
+
+    Paper's accounting (§IV Fig. 5a): the edge pipeline processes prompt
+    tokens sequentially, so token i writes once and reads tokens 0..i-1 —
+    the same ledger as a decode step at length i. This host-side closed
+    form equals sum(step_traffic_tokens(i) for i in range(prompt_len)).
+    """
+    p, b = prompt_len, hot_cap
+    if p <= b:
+        ondie_read = p * (p - 1) // 2
+        ext_read = 0
+    else:
+        ondie_read = b * (b - 1) // 2 + (p - b) * b
+        ext_read = (p - b - 1) * (p - b) // 2
+    return {
+        "ondie_read": ondie_read,
+        "ext_read": ext_read,
+        "ondie_write": min(p, b),
+        "ext_write": max(p - b, 0),
     }

@@ -20,7 +20,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+try:  # jax >= 0.6: public top-level export
+    from jax import shard_map
+except ImportError:  # jax 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -59,8 +63,6 @@ def make_pipeline_forward(cfg: ModelConfig, mesh, n_stages: int, n_micro: int,
         # shapes inside shard_map: staged_params (1, L/S, ...); x (n_micro, mb, s, d)
         sp = jax.tree.map(lambda a: a[0], staged_params)
         idx = jax.lax.axis_index(axis)
-        s_count = jax.lax.axis_size(axis)
-        total = n_micro + n_stages - 1
         mb, s, d = x.shape[1], x.shape[2], x.shape[3]
         positions = jnp.arange(s, dtype=jnp.int32)
         pad = jnp.zeros((n_stages - 1, mb, s, d), x.dtype)
@@ -80,13 +82,22 @@ def make_pipeline_forward(cfg: ModelConfig, mesh, n_stages: int, n_micro: int,
         final = jax.lax.dynamic_slice_in_dim(outs, n_stages - 1, n_micro, axis=0)
         return final[None]  # (1, n_micro, mb, s, d) per stage
 
-    fn = shard_map(
-        pipelined_local,
-        mesh=mesh,
-        in_specs=(P(axis), P()),
-        out_specs=P(axis),
-        check_vma=False,
-    )
+    try:  # new API spells the replication check check_vma ...
+        fn = shard_map(
+            pipelined_local,
+            mesh=mesh,
+            in_specs=(P(axis), P()),
+            out_specs=P(axis),
+            check_vma=False,
+        )
+    except TypeError:  # ... jax 0.4.x spells it check_rep
+        fn = shard_map(
+            pipelined_local,
+            mesh=mesh,
+            in_specs=(P(axis), P()),
+            out_specs=P(axis),
+            check_rep=False,
+        )
 
     def pipelined(staged_params, x):
         outs = fn(staged_params, x)  # (S, n_micro, mb, s, d)

@@ -190,24 +190,30 @@ def attention_full(
 
 def attention_decode(
     p: dict,
-    x: jax.Array,  # (b, d_model) — one token
+    x: jax.Array,  # (b, d_model) — one token per slot
     cfg: ModelConfig,
     mode: str,
     cache: kvc.TieredKVCache,
+    active: jax.Array | None = None,  # (b,) bool: slots that really decode
 ):
-    """One decode step against the tiered cache. Returns (y, new_cache)."""
+    """One decode step against the tiered cache. Returns (y, new_cache).
+
+    RoPE positions come from the per-slot ``cache.lengths``, so slots at
+    different sequence lengths decode side by side (continuous batching);
+    ``active`` gates the KV append per slot.
+    """
     b, _ = x.shape
     h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     q, k, v = _project_qkv(p, x[:, None, :], cfg, mode)  # (b,1,h,hd)
-    pos = cache.length[None]
-    q = apply_rope(q, pos[None], cfg.rope_theta)[:, 0]  # (b,h,hd)
-    k = apply_rope(k, pos[None], cfg.rope_theta)[:, 0]  # (b,g,hd)
+    pos = cache.lengths[:, None]  # (b, 1) per-slot absolute position
+    q = apply_rope(q, pos, cfg.rope_theta)[:, 0]  # (b,h,hd)
+    k = apply_rope(k, pos, cfg.rope_theta)[:, 0]  # (b,g,hd)
     v = v[:, 0]
     if cfg.attn_type == "swa":
-        cache = kvc.append_decode_ring(cache, k, v)
+        cache = kvc.append_decode_ring(cache, k, v, active=active)
         o = kvc.tiered_decode_attention(q, cache, ring=True)
     else:
-        cache = kvc.append_decode(cache, k, v)
+        cache = kvc.append_decode(cache, k, v, active=active)
         o = kvc.tiered_decode_attention(q, cache)
     y = qops.linear(
         p["wo"], o.reshape(b, h * hd), cfg, mode, lora_leaf=p.get("lora_o")
@@ -252,23 +258,30 @@ def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 
 
 def _mla_queries(p, hidden, cfg: ModelConfig, mode, positions):
-    """-> q_nope (b,t,h,dn), q_rope (b,t,h,dr) with RoPE applied."""
+    """-> q_nope (b,t,h,dn), q_rope (b,t,h,dr) with RoPE applied.
+
+    ``positions`` is batch-broadcastable: (1, s) for a shared full
+    sequence, (b, 1) for per-slot decode positions.
+    """
     m, h = cfg.mla, cfg.n_heads
     qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
     cq = rms_norm(qops.linear(p["w_dq"], hidden, cfg, mode), p["q_ln"], cfg.norm_eps)
     q = qops.linear(p["w_uq"], cq, cfg, mode, out_shape=(h, qk_head))
     q_nope = q[..., : m.qk_nope_head_dim]
-    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions[None], cfg.rope_theta)
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
     return q_nope, q_rope
 
 
 def _mla_latent(p, hidden, cfg: ModelConfig, mode, positions):
-    """-> latent c_kv (b,t,dl) [normed], k_rope (b,t,dr) with RoPE."""
+    """-> latent c_kv (b,t,dl) [normed], k_rope (b,t,dr) with RoPE.
+
+    ``positions`` is batch-broadcastable, as in ``_mla_queries``.
+    """
     m = cfg.mla
     dkv = qops.linear(p["w_dkv"], hidden, cfg, mode)
     c_kv = rms_norm(dkv[..., : m.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
     k_rope = apply_rope(
-        dkv[..., m.kv_lora_rank :][:, :, None, :], positions[None], cfg.rope_theta
+        dkv[..., m.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta
     )[:, :, 0, :]
     return c_kv, k_rope
 
@@ -278,8 +291,8 @@ def mla_full(p, x, cfg: ModelConfig, mode, positions, *, return_kv: bool = False
     m, h = cfg.mla, cfg.n_heads
     b, s, _ = x.shape
     hidden = rms_norm(x, p["ln"], cfg.norm_eps)
-    q_nope, q_rope = _mla_queries(p, hidden, cfg, mode, positions)
-    c_kv, k_rope = _mla_latent(p, hidden, cfg, mode, positions)
+    q_nope, q_rope = _mla_queries(p, hidden, cfg, mode, positions[None])
+    c_kv, k_rope = _mla_latent(p, hidden, cfg, mode, positions[None])
     k_nope = qops.linear(p["w_uk"], c_kv, cfg, mode, out_shape=(h, m.qk_nope_head_dim))
     v = qops.linear(
         p["w_uv"], c_kv, cfg, mode, out_shape=(h, m.v_head_dim), lora_leaf=p.get("lora_v")
@@ -302,16 +315,22 @@ def mla_full(p, x, cfg: ModelConfig, mode, positions, *, return_kv: bool = False
     return y
 
 
-def mla_decode(p, x, cfg: ModelConfig, mode, cache: kvc.TieredKVCache):
-    """Absorbed-form MLA decode over the tiered latent cache."""
+def mla_decode(p, x, cfg: ModelConfig, mode, cache: kvc.TieredKVCache,
+               active: jax.Array | None = None):
+    """Absorbed-form MLA decode over the tiered latent cache.
+
+    Per-slot positions from ``cache.lengths``; ``active`` gates the latent
+    append per slot (continuous batching).
+    """
     m, h = cfg.mla, cfg.n_heads
     b, _ = x.shape
     hidden = rms_norm(x[:, None, :], p["ln"], cfg.norm_eps)
-    pos = cache.length[None]
+    pos = cache.lengths[:, None]  # (b, 1)
     q_nope, q_rope = _mla_queries(p, hidden, cfg, mode, pos)  # (b,1,h,·)
     c_kv, k_rope = _mla_latent(p, hidden, cfg, mode, pos)
     lat_new = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0]  # (b, dl+dr)
-    cache = kvc.append_decode(cache, lat_new, jnp.zeros((b, 0), lat_new.dtype))
+    cache = kvc.append_decode(cache, lat_new, jnp.zeros((b, 0), lat_new.dtype),
+                              active=active)
 
     # absorb W_uk into the query: q_abs = q_nope @ W_uk^T  (per head)
     w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)

@@ -431,7 +431,7 @@ def _fill_attn_cache(cache_stack, kvs, cfg):
             filled = cache_stack._replace(
                 cold_k=ks_w.astype(cache_stack.cold_k.dtype),
                 cold_v=vs_w.astype(cache_stack.cold_v.dtype),
-                length=jnp.full_like(cache_stack.length, s),
+                lengths=jnp.full_like(cache_stack.lengths, s),
             )
             return filled
         return jax.vmap(lambda c, k, v: kvc.append(c, k, v))(cache_stack, ks, vs)
@@ -484,9 +484,9 @@ def prefill(
 # ---------------------------------------------------------------------------
 
 
-def _attn_block_decode(bp, x1, cfg, mode, cache_layer):
+def _attn_block_decode(bp, x1, cfg, mode, cache_layer, active=None):
     f = attn.mla_decode if cfg.attn_type == "mla" else attn.attention_decode
-    y, cache_layer = f(bp["attn"], x1, cfg, mode, cache_layer)
+    y, cache_layer = f(bp["attn"], x1, cfg, mode, cache_layer, active=active)
     x1 = x1 + y
     if "moe" in bp:
         h, _ = moe_lib.apply_moe(bp["moe"], x1[:, None, :], cfg, mode)
@@ -496,24 +496,43 @@ def _attn_block_decode(bp, x1, cfg, mode, cache_layer):
     return x1 + h, cache_layer
 
 
-def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, cache, mode: str = "packed"):
-    """One token for the whole batch. tokens: (b,) int32 -> (logits, cache)."""
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, cache,
+                mode: str = "packed", active: Optional[jax.Array] = None):
+    """One token for the whole batch. tokens: (b,) int32 -> (logits, cache).
+
+    Each batch row is an independent *slot* at its own sequence length
+    (``cache.lengths``). ``active`` (b,) bool gates cache mutation per
+    slot: inactive slots (retired or unadmitted, in continuous batching)
+    still flow through the compute — their logits are garbage and ignored
+    by the caller — but neither append KV nor advance recurrent state.
+    """
     dtype = params["final_ln"].dtype
     x = _embed_tokens(params, cfg, tokens[:, None], dtype)[:, 0]  # (b, d)
 
     def scan_attn(x1, stack_params, cache_stack):
         def step(h, xs):
             bp, cl = xs
-            h2, cl2 = _attn_block_decode(bp, h, cfg, mode, cl)
+            h2, cl2 = _attn_block_decode(bp, h, cfg, mode, cl, active)
             return h2, cl2
 
         return jax.lax.scan(step, x1, (stack_params, cache_stack))
+
+    def _mask_state(new_state, old_state):
+        if active is None:
+            return new_state
+        return jax.tree.map(
+            lambda n, o: jnp.where(
+                active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o
+            ),
+            new_state,
+            old_state,
+        )
 
     def scan_ssm(x1, stack_params, state_stack):
         def step(h, xs):
             bp, st = xs
             h2, st2 = ssm_lib.apply_mamba_decode(bp, h, cfg, mode, st)
-            return h2, st2
+            return h2, _mask_state(st2, st)
 
         return jax.lax.scan(step, x1, (stack_params, state_stack))
 
@@ -535,17 +554,10 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, cache, mode: 
             sp = {"attn": params["shared"]["attn"], "mlp": params["shared"]["mlp"]}
             if lora_v is not None:
                 sp = {"attn": {**sp["attn"], "lora_v": lora_v}, "mlp": sp["mlp"]}
-            h, acache2 = _attn_block_decode(sp, h, cfg, mode, acache)
+            h, acache2 = _attn_block_decode(sp, h, cfg, mode, acache, active)
             return h, (gstate2, acache2)
 
         lora_stack = params.get("shared_lora_v")
-        ng = cache["attn"].length.shape[0]
-        xs = (
-            params["mamba_groups"],
-            cache["mamba"],
-            cache["attn"],
-            lora_stack if lora_stack is not None else None,
-        )
         if lora_stack is None:
             def step(h, xs_i):
                 gp, gstate, acache = xs_i

@@ -1,0 +1,41 @@
+"""Weight-reload-free serving: continuous batching over per-slot DR caches.
+
+Public API
+----------
+:class:`~repro.serving.engine.Engine`
+    Owns the packed (ROM-form) weights — loaded to device once, never
+    reloaded — and the fully-jitted decode step. ``serve(requests)`` runs
+    the continuous-batching loop; ``generate(prompts, ...)`` is the
+    aligned-batch convenience wrapper.
+:class:`~repro.serving.scheduler.Request` /
+:class:`~repro.serving.scheduler.FinishedRequest`
+    One generation request and its completed result (tokens + the
+    per-sequence DR-traffic ledger that reconciles with
+    ``core.dr_edram.closed_form_reduction``).
+:class:`~repro.serving.scheduler.SlotScheduler`
+    Host-side control plane: FIFO queue, slot table, pad-free admission
+    grouping, retirement.
+
+Continuous-batching semantics
+-----------------------------
+The engine holds ``slots`` batch rows. Each row is an independent
+sequence at its own length (``TieredKVCache.lengths``); the jitted decode
+step advances every *active* slot by one token per dispatch with
+on-device sampling and an on-device ``done`` mask (stop token or budget),
+so the Python loop never synchronizes with the device. Every
+``sync_every`` steps the host harvests finished slots and prefills queued
+prompts into the freed rows — admission happens mid-decode, while the
+remaining slots keep generating.
+"""
+
+from repro.serving.engine import DecodeState, Engine, GenerationResult
+from repro.serving.scheduler import FinishedRequest, Request, SlotScheduler
+
+__all__ = [
+    "DecodeState",
+    "Engine",
+    "FinishedRequest",
+    "GenerationResult",
+    "Request",
+    "SlotScheduler",
+]

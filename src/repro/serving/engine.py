@@ -1,31 +1,77 @@
-"""Batched serving engine: packed-ternary weights + DR-tiered KV cache.
+"""Continuous-batching serving engine: packed-ternary weights + per-slot
+DR-tiered KV caches, with a fully-jitted decode hot loop.
 
 The paper's deployment (§V-B): weights fused on-die (here: packed ternary,
 device-resident across the whole session — ZERO weight reload), a DR
-eDRAM hot tier for the first `hot_cap` tokens of each sequence, external
-memory for the rest. The engine tracks the access-traffic split per decode
-step and reports the external-DRAM reduction, which must match the
-closed-form model of core/dr_edram.py (asserted in tests).
+eDRAM hot tier for the first ``hot_cap`` tokens of each sequence, external
+memory for the rest. Because the weights never move, the serving problem
+reduces to keeping the decode path saturated — which is what the slot
+model below does.
 
-Batching model: static batched generation — B aligned sequences decode in
-lock-step (the paper pipelines 6 such batches through 6 macro partitions;
-see distributed/pipeline.py for that axis). Greedy or temperature
-sampling.
+Architecture
+------------
+Device state (``DecodeState``) is a fixed-shape pytree over ``n_slots``
+batch rows: the stacked tiered KV cache (per-slot ``lengths``), the last
+sampled token, a ``done`` mask, per-slot output buffer and the vectorized
+DR-traffic ledger. One decode step is ONE jitted dispatch:
+
+  * embedding -> L-layer scan -> logits for every slot,
+  * KV appends and recurrent-state updates gated by the on-device
+    ``active = allocated & ~done`` mask,
+  * sampling (greedy or temperature) on-device,
+  * stop-token detection folds into ``done`` ON DEVICE — no
+    ``bool(jnp.all(...))`` host pull, so the Python loop never blocks.
+
+The host only syncs at *chunk boundaries* (every ``sync_every`` steps): it
+reads the small ``done``/``allocated`` masks, retires finished slots,
+harvests their outputs and per-slot ledgers, and admits queued prompts
+into the freed slots via a prefill dispatch + cache scatter
+(``serving/scheduler.py`` decides who goes where). Slots at different
+sequence lengths decode side by side; per-slot validity masks inside
+``core/kv_cache.py`` keep each sequence's attention exact.
+
+Traffic accounting
+------------------
+The ledger is vectorized per slot in *token* units
+(``kv_cache.step_traffic_tokens``) and accumulated inside the jitted step;
+the analytic prompt-phase ledger (``prompt_traffic_tokens``) is added at
+admission. Per sequence, the total reconciles exactly with
+``dr_edram.closed_form_reduction(seq_len, hot_cap)`` — including in
+mixed-length batches, which is asserted in tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import dr_edram, kv_cache
 from repro.models import pack as pack_lib
 from repro.models import transformer as T
+from repro.serving.scheduler import FinishedRequest, Request, SlotScheduler
+
+TRAFFIC_KEYS = kv_cache.TRAFFIC_KEYS
+
+
+class DecodeState(NamedTuple):
+    """Fixed-shape device state for the jitted decode loop (one row = slot)."""
+
+    cache: Any  # stacked tiered KV / SSM state pytree, per-slot lengths
+    tok: jax.Array  # (slots,) int32 — last sampled token per slot
+    key: jax.Array  # PRNG key threaded through on-device sampling
+    allocated: jax.Array  # (slots,) bool — slot holds a live request
+    done: jax.Array  # (slots,) bool — request finished (stop / budget)
+    seq_len: jax.Array  # (slots,) int32 — cache length incl. prompt
+    n_gen: jax.Array  # (slots,) int32 — tokens emitted so far
+    max_new: jax.Array  # (slots,) int32 — per-slot generation budget
+    out: jax.Array  # (slots, out_cap) int32 — emitted tokens
+    ledger: Dict[str, jax.Array]  # 4 × (slots,) int32 decode token counts
 
 
 @dataclasses.dataclass
@@ -37,14 +83,24 @@ class GenerationResult:
 
     @property
     def external_reduction(self) -> float:
-        t = self.traffic
-        ext = t["ext_read"] + t["ext_write"]
-        total = ext + t["ondie_read"] + t["ondie_write"]
-        return 1.0 - ext / total if total else 0.0
+        return kv_cache.external_reduction(self.traffic)
 
 
 class Engine:
-    """Weight-reload-free inference engine."""
+    """Weight-reload-free continuous-batching inference engine.
+
+    ``serve(requests)`` is the native API: a list of :class:`Request` with
+    arbitrary prompt lengths and budgets, served through ``slots``
+    concurrent slots with mid-decode admission. ``generate(prompts, ...)``
+    is the aligned-batch convenience wrapper (one slot per row) kept for
+    the launchers, examples and benchmarks.
+
+    The engine is immutable after construction: sampling mode,
+    temperature, hot_cap and max_len are baked into the cached jitted
+    step/prefill/admit functions at first trace, so mutating those
+    attributes later is silently ignored — build a new Engine instead
+    (the packed params can be shared across engines).
+    """
 
     def __init__(
         self,
@@ -56,6 +112,8 @@ class Engine:
         sample: str = "greedy",
         temperature: float = 1.0,
         seed: int = 0,
+        slots: int = 8,
+        sync_every: int = 8,
     ):
         self.cfg = cfg
         # Freeze to ROM form once; never reloaded afterwards.
@@ -66,10 +124,23 @@ class Engine:
         self.sample = sample
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(
-            lambda p, t, c: T.decode_step(p, cfg, t, c, mode=self.mode)
-        )
+        self.slots = slots
+        self.sync_every = sync_every
         self.weight_loads = 0  # host->device weight transfers after init
+        self._step_fns: dict = {}  # (out_cap, stop_token) -> jitted step
+        self._batch_axes = None  # lazy: cache-leaf batch-axis pytree
+        self._admit_fn = None  # jitted admission (compiles per group size)
+        # jitted prefill (one compile per admitted (group, prompt) shape)
+        self._prefill = jax.jit(
+            lambda p, batch: T.prefill(
+                p, self.cfg, batch,
+                hot_cap=self.hot_cap, max_len=self.max_len, mode=self.mode,
+            )
+        )
+
+    # ------------------------------------------------------------------
+    # sizing helpers
+    # ------------------------------------------------------------------
 
     def _kv_token_bytes(self) -> int:
         cfg = self.cfg
@@ -83,13 +154,292 @@ class Engine:
 
         return per_layer * _n_attn_layers(cfg)
 
-    def _select(self, logits: jax.Array) -> jax.Array:
+    # ------------------------------------------------------------------
+    # device state init / admission scatter
+    # ------------------------------------------------------------------
+
+    def _cache_dtype(self):
+        # same rule prefill uses, so admission scatters are cast-free
+        return self.params["final_ln"].dtype
+
+    def _init_state(self, n_slots: int, out_cap: int) -> DecodeState:
+        cache = T.init_decode_cache(
+            self.cfg, n_slots, self.max_len, self.hot_cap, dtype=self._cache_dtype()
+        )
+        self.key, sub = jax.random.split(self.key)
+
+        def z():
+            # distinct buffers: the jitted step/admit donate the state, and
+            # XLA rejects donating one buffer through several arguments
+            return jnp.zeros((n_slots,), jnp.int32)
+
+        return DecodeState(
+            cache=cache,
+            tok=z(),
+            key=sub,
+            allocated=jnp.zeros((n_slots,), bool),
+            done=jnp.zeros((n_slots,), bool),
+            seq_len=z(),
+            n_gen=z(),
+            max_new=z(),
+            out=jnp.zeros((n_slots, out_cap), jnp.int32),
+            ledger={k: z() for k in TRAFFIC_KEYS},
+        )
+
+    def _cache_batch_axes(self):
+        """Pytree (matching the cache) of each leaf's batch axis, found by
+        diffing the abstract shapes of two init sizes — robust across the
+        dense/moe/ssm/hybrid cache layouts without per-family code."""
+        if self._batch_axes is not None:
+            return self._batch_axes
+        sa = jax.eval_shape(
+            lambda: T.init_decode_cache(self.cfg, 2, self.max_len, self.hot_cap)
+        )
+        sb = jax.eval_shape(
+            lambda: T.init_decode_cache(self.cfg, 3, self.max_len, self.hot_cap)
+        )
+
+        def axis(a, b):
+            diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+            assert len(diffs) == 1, (a.shape, b.shape)
+            return diffs[0]
+
+        self._batch_axes = jax.tree.map(axis, sa, sb)
+        return self._batch_axes
+
+    def _scatter_cache(self, live, fresh, slots_idx: jax.Array):
+        """Write each fresh cache row (batch n) into the live cache at
+        ``slots_idx`` along every leaf's batch axis."""
+        axes = self._cache_batch_axes()
+
+        def scatter(lv, fr, ax):
+            lv_m = jnp.moveaxis(lv, ax, 0)
+            fr_m = jnp.moveaxis(fr, ax, 0)
+            return jnp.moveaxis(lv_m.at[slots_idx].set(fr_m.astype(lv_m.dtype)), 0, ax)
+
+        return jax.tree.map(scatter, live, fresh, axes)
+
+    def _sample_fn(self, logits: jax.Array, key: jax.Array) -> jax.Array:
         if self.sample == "greedy":
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / self.temperature, axis=-1).astype(
-            jnp.int32
+        return jax.random.categorical(
+            key, logits / self.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    # the fully-jitted decode step
+    # ------------------------------------------------------------------
+
+    def _get_step(self, out_cap: int, stop_token: Optional[int]):
+        """One decode dispatch: emit -> decode/append -> account -> sample
+        -> fold stop into ``done``. Entirely on device; no host syncs."""
+        key = (out_cap, stop_token)
+        if key in self._step_fns:
+            return self._step_fns[key]
+        cfg, mode, hot_cap = self.cfg, self.mode, self.hot_cap
+
+        def step(params, state: DecodeState) -> DecodeState:
+            active = state.allocated & ~state.done
+            act32 = active.astype(jnp.int32)
+            # emit the pending token (sampled last step / at admission)
+            emit = (
+                jnp.arange(out_cap, dtype=jnp.int32)[None] == state.n_gen[:, None]
+            ) & active[:, None]
+            out = jnp.where(emit, state.tok[:, None], state.out)
+            n_gen = state.n_gen + act32
+            # decode: append the pending token's KV, get next logits
+            logits, cache = T.decode_step(
+                params, cfg, state.tok, state.cache, mode=mode, active=active
+            )
+            # vectorized per-slot DR ledger at the pre-append length
+            tr = kv_cache.step_traffic_tokens(state.seq_len, hot_cap)
+            ledger = {
+                k: state.ledger[k] + tr[k] * act32 for k in TRAFFIC_KEYS
+            }
+            seq_len = state.seq_len + act32
+            # on-device sampling
+            key_next, sub = jax.random.split(state.key)
+            tok = jnp.where(active, self._sample_fn(logits, sub), state.tok)
+            # on-device stop handling: retire via mask, never break the loop
+            done = state.done | (active & (n_gen >= state.max_new))
+            if stop_token is not None:
+                done = done | (active & (tok == stop_token))
+            return DecodeState(
+                cache=cache, tok=tok, key=key_next, allocated=state.allocated,
+                done=done, seq_len=seq_len, n_gen=n_gen,
+                max_new=state.max_new, out=out, ledger=ledger,
+            )
+
+        fn = jax.jit(step, donate_argnums=(1,))
+        self._step_fns[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    # admission: prefill queued prompts into freed slots
+    # ------------------------------------------------------------------
+
+    def _get_admit(self):
+        """Jitted admission: scatter fresh cache rows + sample first tokens
+        + reset per-slot bookkeeping, all in ONE dispatch. Compiles once
+        per admitted group size (shapes of idx/logits), not per prompt
+        length — the fresh cache shape only depends on the group size."""
+        if self._admit_fn is not None:
+            return self._admit_fn
+
+        def admit(state, fresh, logits, idx, p_len, max_new, key):
+            first = self._sample_fn(logits, key)
+            cache = self._scatter_cache(state.cache, fresh, idx)
+            n = idx.shape[0]
+            z = jnp.zeros((n,), jnp.int32)
+            return DecodeState(
+                cache=cache,
+                tok=state.tok.at[idx].set(first),
+                key=state.key,
+                allocated=state.allocated.at[idx].set(True),
+                done=state.done.at[idx].set(max_new <= 0),
+                seq_len=state.seq_len.at[idx].set(p_len),
+                n_gen=state.n_gen.at[idx].set(0),
+                max_new=state.max_new.at[idx].set(max_new),
+                out=state.out.at[idx].set(0),
+                ledger={k: state.ledger[k].at[idx].set(z) for k in TRAFFIC_KEYS},
+            )
+
+        self._admit_fn = jax.jit(admit, donate_argnums=(0,))
+        return self._admit_fn
+
+    def _admit(
+        self, state: DecodeState, slots_idx: List[int], group: List[Request]
+    ) -> DecodeState:
+        """Prefill ``group`` (equal prompt lengths) and scatter the fresh
+        cache rows + first sampled tokens into ``slots_idx``."""
+        toks = jnp.asarray(
+            np.stack([np.asarray(r.tokens, np.int32) for r in group]), jnp.int32
         )
+        batch = {"tokens": toks}
+        if group[0].patches is not None:
+            batch["patches"] = jnp.asarray(
+                np.stack([np.asarray(r.patches) for r in group])
+            )
+        logits, fresh = self._prefill(self.params, batch)
+        idx = jnp.asarray(slots_idx, jnp.int32)
+        p_len = toks.shape[1] + (self.cfg.n_patches if "patches" in batch else 0)
+        max_new = jnp.asarray([r.max_new_tokens for r in group], jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return self._get_admit()(
+            state, fresh, logits, idx, jnp.int32(p_len), max_new, sub
+        )
+
+    # ------------------------------------------------------------------
+    # the serving loop
+    # ------------------------------------------------------------------
+
+    def serve(
+        self,
+        requests: Sequence[Request],
+        slots: Optional[int] = None,
+        stop_token: Optional[int] = None,
+        sync_every: Optional[int] = None,
+    ) -> List[FinishedRequest]:
+        """Serve ``requests`` through continuous batching; returns finished
+        requests in completion order (slot order within a sync chunk —
+        sort by ``rid`` if you need submission order).
+
+        The decode hot loop issues exactly one jitted dispatch per token
+        and never reads device memory; host synchronization happens only
+        every ``sync_every`` steps, to retire finished slots and admit
+        queued prompts into the freed rows.
+        """
+        n_slots = slots or self.slots
+        chunk = sync_every or self.sync_every
+        for r in requests:
+            need = r.prompt_len + (self.cfg.n_patches if r.patches is not None else 0)
+            if need + r.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {need} + max_new "
+                    f"{r.max_new_tokens} exceeds max_len {self.max_len}"
+                )
+        # output buffer sized by max_len (which already bounds any budget),
+        # NOT by this batch's max budget — the buffer shape is baked into
+        # the jitted step, and a varying out_cap would recompile the whole
+        # decode graph per distinct value
+        out_cap = self.max_len
+        sched = SlotScheduler(n_slots)
+        for r in requests:
+            sched.submit(r)
+
+        state = self._init_state(n_slots, out_cap)
+        step = self._get_step(out_cap, stop_token)
+        token_bytes = self._kv_token_bytes()
+        finished: List[FinishedRequest] = []
+        # host mirror of each slot's remaining budget: generation progress
+        # is deterministic (one token per active step), so the host can
+        # bound the next chunk without reading device state — only stop
+        # tokens finish a slot earlier than this mirror predicts.
+        remaining = [0] * n_slots
+
+        while not sched.idle():
+            # -- admission: fill every free slot we can ----------------
+            while True:
+                slots_idx, group = sched.next_group()
+                if not group:
+                    break
+                state = self._admit(state, slots_idx, group)
+                for s, req in zip(slots_idx, group):
+                    remaining[s] = req.max_new_tokens
+            # -- decode chunk: no host syncs inside --------------------
+            # clip the chunk so no dispatch runs past the earliest
+            # budget-exhaustion among active slots (those steps would be
+            # pure waste: the finished slot idles until the next sync);
+            # if every active slot has exhausted its budget mirror (e.g.
+            # max_new_tokens=0 admissions) skip straight to harvest
+            active = sched.active_slots()
+            budgets = [remaining[s] for s in active if remaining[s] > 0]
+            n_steps = min([chunk] + budgets) if budgets else 0
+            for _ in range(n_steps):
+                state = step(self.params, state)
+            for s in active:
+                remaining[s] = max(remaining[s] - n_steps, 0)
+            # -- sync point: harvest finished slots --------------------
+            # (the slot table mirrors `allocated`, so only the small
+            # `done` mask crosses the device boundary here)
+            done = np.asarray(state.done)
+            ripe = [i for i in sched.active_slots() if done[i]]
+            if ripe:
+                n_gen = np.asarray(state.n_gen)
+                seq_len = np.asarray(state.seq_len)
+                out = np.asarray(state.out)
+                ledger = {k: np.asarray(state.ledger[k]) for k in TRAFFIC_KEYS}
+                for s in ripe:
+                    req = sched.retire(s)
+                    traffic = {
+                        k: int(ledger[k][s]) * token_bytes for k in TRAFFIC_KEYS
+                    }
+                    prompt = kv_cache.prompt_traffic_tokens(
+                        req.prompt_len
+                        + (self.cfg.n_patches if req.patches is not None else 0),
+                        self.hot_cap,
+                    )
+                    for k in TRAFFIC_KEYS:
+                        traffic[k] += prompt[k] * token_bytes
+                    finished.append(
+                        FinishedRequest(
+                            rid=req.rid,
+                            prompt_len=req.prompt_len,
+                            tokens=out[s, : n_gen[s]].copy(),
+                            seq_len=int(seq_len[s]),
+                            steps=int(n_gen[s]),
+                            traffic=traffic,
+                        )
+                    )
+                idx = jnp.asarray(ripe, jnp.int32)
+                state = state._replace(
+                    allocated=state.allocated.at[idx].set(False)
+                )
+        return finished
+
+    # ------------------------------------------------------------------
+    # aligned-batch convenience API (launchers / examples / benchmarks)
+    # ------------------------------------------------------------------
 
     def generate(
         self,
@@ -97,50 +447,38 @@ class Engine:
         max_new_tokens: int = 32,
         patches: Optional[jax.Array] = None,
         stop_token: Optional[int] = None,
-        on_step: Optional[Callable] = None,
     ) -> GenerationResult:
+        """Aligned-batch generation: one slot per prompt row, all admitted
+        in a single prefill. Semantics match the seed lock-step engine —
+        same tokens for greedy sampling — but stop handling is per-slot
+        (a finished row retires instead of gating the whole batch)."""
         t0 = time.time()
-        batch = {"tokens": prompts}
-        if patches is not None:
-            batch["patches"] = patches
-        logits, cache = T.prefill(
-            self.params,
-            self.cfg,
-            batch,
-            hot_cap=self.hot_cap,
-            max_len=self.max_len,
-            mode=self.mode,
-        )
-        token_bytes = self._kv_token_bytes() * prompts.shape[0]
-        traffic = {"ondie_read": 0, "ext_read": 0, "ondie_write": 0, "ext_write": 0}
-        # Prompt phase, paper's accounting (§IV Fig. 5a): the edge pipeline
-        # processes tokens sequentially, so token i writes once and reads
-        # tokens 0..i-1 — same ledger as a decode step at length i. This is
-        # what makes the measured reduction match the closed form exactly.
-        p_len = prompts.shape[1] + (self.cfg.n_patches if patches is not None else 0)
-        for i in range(p_len):
-            tr = kv_cache.step_traffic_bytes(i, self.hot_cap, token_bytes)
-            for k in traffic:
-                traffic[k] += tr[k]
-
-        out = []
-        tok = self._select(logits)
-        length = p_len
-        for step in range(max_new_tokens):
-            out.append(tok)
-            logits, cache = self._decode(self.params, tok, cache)
-            tr = kv_cache.step_traffic_bytes(length, self.hot_cap, token_bytes)
-            for k in traffic:
-                traffic[k] += tr[k]
-            length += 1
-            tok = self._select(logits)
-            if on_step is not None:
-                on_step(step, tok)
-            if stop_token is not None and bool(jnp.all(tok == stop_token)):
-                break
+        b = prompts.shape[0]
+        prompts_np = np.asarray(prompts, np.int32)
+        patches_np = None if patches is None else np.asarray(patches)
+        reqs = [
+            Request(
+                rid=i, tokens=prompts_np[i], max_new_tokens=max_new_tokens,
+                patches=None if patches_np is None else patches_np[i],
+            )
+            for i in range(b)
+        ]
+        finished = self.serve(reqs, slots=b, stop_token=stop_token)
+        finished.sort(key=lambda f: f.rid)
+        pad = stop_token if stop_token is not None else 0
+        rows = [
+            np.concatenate(
+                [f.tokens, np.full((max_new_tokens - len(f.tokens),), pad, np.int32)]
+            )
+            for f in finished
+        ]
+        traffic = {k: 0 for k in TRAFFIC_KEYS}
+        for f in finished:
+            for k in TRAFFIC_KEYS:
+                traffic[k] += f.traffic[k]
         return GenerationResult(
-            tokens=jnp.stack(out, axis=1),
-            steps=len(out),
+            tokens=jnp.asarray(np.stack(rows), jnp.int32),
+            steps=max((f.steps for f in finished), default=0),
             traffic=traffic,
             wall_s=time.time() - t0,
         )

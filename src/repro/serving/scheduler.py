@@ -1,0 +1,143 @@
+"""Slot scheduler for continuous-batching serving (host-side control plane).
+
+The engine (``serving/engine.py``) holds a fixed number of *slots* — batch
+rows of the per-slot tiered KV cache — and decodes all active slots in
+lock-free step: each slot is at its own sequence length. This module owns
+the host-side bookkeeping around that device state:
+
+  * a FIFO request queue (``submit``),
+  * the slot table (which request occupies which slot),
+  * admission grouping: the next batch of queued requests that can prefill
+    together (same prompt length — no padding tokens ever enter the cache)
+    into the currently free slots,
+  * retirement: freeing a slot once its request is done.
+
+The scheduler never touches device arrays; it only decides *which* slots
+the engine should fill or free at each synchronization point. Mid-decode
+admission is the point of the design: new prompts prefill into freed slots
+while the remaining slots keep decoding, so the decode hot loop stays
+saturated instead of draining the whole batch (the seed engine's lock-step
+model, where the slowest sequence gated everyone).
+
+Scheduling policy is FIFO with same-length grouping: the head-of-line
+request always admits first; other queued requests with the *same* prompt
+length ride along in the same prefill dispatch (one XLA compilation per
+(group_size, prompt_len) shape). This keeps admission pad-free — padded
+prompt tokens would pollute the causal KV cache — while still batching
+prefill work when traffic has repeated shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``tokens`` is the prompt (prompt_len,) int32; ``patches`` carries VLM
+    image features when the model has a vision frontend.
+    """
+
+    rid: int
+    tokens: np.ndarray
+    max_new_tokens: int
+    patches: Optional[np.ndarray] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[-1])
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    """A completed request with its per-sequence DR-traffic ledger.
+
+    ``traffic`` is in bytes, split into the four DR-eDRAM categories
+    (ondie_read / ext_read / ondie_write / ext_write); it accumulates the
+    analytic prompt phase plus the measured per-step decode ledger, so
+    ``external_reduction`` reconciles with
+    ``dr_edram.closed_form_reduction(seq_len, hot_cap)`` for *this*
+    sequence regardless of what other lengths shared the batch.
+    """
+
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray  # (n_generated,) int32
+    seq_len: int  # prompt + appended decode tokens
+    steps: int  # decode dispatches this request was active for
+    traffic: Dict[str, int]
+
+    @property
+    def external_reduction(self) -> float:
+        from repro.core.kv_cache import external_reduction
+
+        return external_reduction(self.traffic)
+
+
+class SlotScheduler:
+    """Host-side slot table + FIFO admission queue (see module docstring)."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.queue: Deque[Request] = deque()
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+
+    # -- queue ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # -- slot table -----------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    # -- admission ------------------------------------------------------
+    @staticmethod
+    def _group_key(req: Request):
+        """Requests may share a prefill dispatch iff their stacked batch is
+        homogeneous: same prompt length AND same frontend-feature shape
+        (patches present with one shape, or absent)."""
+        patches = None if req.patches is None else np.asarray(req.patches).shape
+        return (req.prompt_len, patches)
+
+    def next_group(self) -> Tuple[List[int], List[Request]]:
+        """Pop the next admissible group: head-of-line request plus any
+        queued requests sharing its group key (prompt length + patches
+        shape), up to the number of free slots. Returns ([], []) when
+        nothing can be admitted."""
+        free = self.free_slots()
+        if not free or not self.queue:
+            return [], []
+        key = self._group_key(self.queue[0])
+        group: List[Request] = []
+        rest: Deque[Request] = deque()
+        while self.queue and len(group) < len(free):
+            req = self.queue.popleft()
+            if self._group_key(req) == key:
+                group.append(req)
+            else:
+                rest.append(req)
+        rest.extend(self.queue)
+        self.queue = rest
+        slots = free[: len(group)]
+        for s, req in zip(slots, group):
+            self.slot_req[s] = req
+        return slots, group
+
+    # -- retirement -----------------------------------------------------
+    def retire(self, slot: int) -> Request:
+        req = self.slot_req[slot]
+        assert req is not None, f"retiring free slot {slot}"
+        self.slot_req[slot] = None
+        return req
+
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.slot_req)

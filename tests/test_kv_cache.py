@@ -1,4 +1,5 @@
-"""Two-tier DR KV cache: routing, tiered attention vs single-buffer oracle."""
+"""Two-tier DR KV cache: routing, per-slot lengths, tiered attention vs
+single-buffer oracle, ring wrap-around, vectorized traffic ledger."""
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +19,7 @@ def test_append_routes_early_tokens_hot():
     for t in range(6):
         k = jnp.full((b, h, d), float(t + 1))
         cache = kv_cache.append_decode(cache, k, k * 10)
-    assert int(cache.length) == 6
+    np.testing.assert_array_equal(np.asarray(cache.lengths), [6, 6])
     # tokens 0..3 in hot, 4..5 in cold
     np.testing.assert_allclose(np.asarray(cache.hot_k[0, :, 0, 0]), [1, 2, 3, 4])
     np.testing.assert_allclose(np.asarray(cache.cold_k[0, :2, 0, 0]), [5, 6])
@@ -83,7 +84,94 @@ def test_append_is_jittable_and_scan_safe():
     ks = jax.random.normal(jax.random.PRNGKey(8), (10, 2, 2, 8))
     vs = jax.random.normal(jax.random.PRNGKey(9), (10, 2, 2, 8))
     final, _ = jax.lax.scan(step, cache, (ks, vs))
-    assert int(final.length) == 10
+    np.testing.assert_array_equal(np.asarray(final.lengths), [10, 10])
+
+
+# ---------------------------------------------------------------------------
+# per-slot (continuous batching) behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_length_slots_attention_matches_oracle():
+    """Slots at different lengths each attend to exactly their own prefix."""
+    b, hot, cold = 3, 4, 12
+    cache = kv_cache.init_cache(b, hot, cold, (2, 8), jnp.float32)
+    lens = [2, 9, 14]
+    ks = jax.random.normal(jax.random.PRNGKey(10), (b, 16, 2, 8))
+    vs = jax.random.normal(jax.random.PRNGKey(11), (b, 16, 2, 8))
+    # build per-slot lengths via active-masked decode appends
+    for t in range(16):
+        active = jnp.asarray([t < L for L in lens])
+        cache = kv_cache.append_decode(cache, ks[:, t], vs[:, t], active=active)
+    np.testing.assert_array_equal(np.asarray(cache.lengths), lens)
+    q = jax.random.normal(jax.random.PRNGKey(12), (b, 4, 8))
+    got = kv_cache.tiered_decode_attention(q, cache)
+    for i, L in enumerate(lens):
+        want = _oracle_attention(q[i : i + 1], ks[i : i + 1, :L], vs[i : i + 1, :L])
+        np.testing.assert_allclose(
+            np.asarray(got[i : i + 1]), np.asarray(want), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_inactive_slots_do_not_write():
+    cache = _mk()
+    k1 = jnp.ones((2, 2, 8))
+    cache = kv_cache.append_decode(cache, k1, k1, active=jnp.asarray([True, False]))
+    np.testing.assert_array_equal(np.asarray(cache.lengths), [1, 0])
+    assert float(jnp.abs(cache.hot_k[1]).sum()) == 0.0
+    np.testing.assert_allclose(np.asarray(cache.hot_k[0, 0]), np.asarray(k1[0]))
+
+
+def test_per_slot_bulk_append_from_unequal_starts():
+    """append() continues from each slot's own length."""
+    cache = _mk(batch=2, hot=2, cold=10)
+    # advance slot 0 by 3 tokens, slot 1 stays empty
+    for t in range(3):
+        k = jnp.full((2, 2, 8), float(t + 1))
+        cache = kv_cache.append_decode(cache, k, k, active=jnp.asarray([True, False]))
+    ks = jnp.stack([jnp.full((2, 2, 8), 7.0), jnp.full((2, 2, 8), 9.0)])  # (b,2,g,d)
+    cache = kv_cache.append(cache, ks, ks)
+    np.testing.assert_array_equal(np.asarray(cache.lengths), [5, 2])
+    # slot 0: positions 3,4 -> cold slots 1,2 (hot_cap=2)
+    np.testing.assert_allclose(np.asarray(cache.cold_k[0, 1:3, 0, 0]), [7, 7])
+    # slot 1: positions 0,1 -> hot slots 0,1
+    np.testing.assert_allclose(np.asarray(cache.hot_k[1, :2, 0, 0]), [9, 9])
+
+
+def test_ring_cold_tier_wraparound_per_slot():
+    """append_decode_ring keeps exactly the last cold_cap tokens per slot,
+    at slot (p - hot_cap) % cold_cap, including after wrap-around — and
+    slots can wrap independently."""
+    b, hot, cold = 2, 0, 4
+    cache = kv_cache.init_cache(b, hot, cold, (1, 4), jnp.float32)
+    lens = [7, 3]  # slot 0 wraps (7 > 4), slot 1 does not
+    for t in range(7):
+        k = jnp.stack([jnp.full((1, 4), float(10 + t)), jnp.full((1, 4), float(20 + t))])
+        active = jnp.asarray([t < lens[0], t < lens[1]])
+        cache = kv_cache.append_decode_ring(cache, k, k, active=active)
+    np.testing.assert_array_equal(np.asarray(cache.lengths), lens)
+    # slot 0 holds tokens 3..6 at ring positions p % 4
+    want0 = [0.0] * 4
+    for p in range(3, 7):
+        want0[p % 4] = 10.0 + p
+    np.testing.assert_allclose(np.asarray(cache.cold_k[0, :, 0, 0]), want0)
+    # slot 1 holds tokens 0..2 in order, last ring slot untouched
+    np.testing.assert_allclose(np.asarray(cache.cold_k[1, :, 0, 0]), [20, 21, 22, 0])
+    # validity clamps at cold_cap: all 4 positions valid for the wrapped
+    # slot, 3 for the unwrapped one
+    q = jax.random.normal(jax.random.PRNGKey(13), (b, 1, 4))
+    got = kv_cache.tiered_decode_attention(q, cache, ring=True)
+    ks0 = cache.cold_k[0:1]  # ring content (order irrelevant to attention)
+    want = _oracle_attention(q[0:1], ks0, ks0)
+    np.testing.assert_allclose(np.asarray(got[0:1]), np.asarray(want), rtol=2e-5, atol=2e-5)
+    ks1 = cache.cold_k[1:2, :3]
+    want1 = _oracle_attention(q[1:2], ks1, ks1)
+    np.testing.assert_allclose(np.asarray(got[1:2]), np.asarray(want1), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# traffic ledger
+# ---------------------------------------------------------------------------
 
 
 def test_step_traffic_accounting():
@@ -94,3 +182,26 @@ def test_step_traffic_accounting():
     assert tr["ext_write"] == tb  # position 40 >= hot_cap -> external write
     tr2 = kv_cache.step_traffic_bytes(length=10, hot_cap=32, token_bytes=tb)
     assert tr2["ext_read"] == 0 and tr2["ext_write"] == 0
+
+
+def test_step_traffic_tokens_matches_scalar_form():
+    """Vectorized per-slot ledger == scalar ledger at every length."""
+    hot = 8
+    lengths = jnp.asarray([0, 1, 7, 8, 9, 40], jnp.int32)
+    vec = kv_cache.step_traffic_tokens(lengths, hot)
+    for i, L in enumerate(np.asarray(lengths)):
+        scal = kv_cache.step_traffic_bytes(int(L), hot, token_bytes=1)
+        for k in kv_cache.TRAFFIC_KEYS:
+            assert int(vec[k][i]) == scal[k], (k, int(L))
+
+
+@pytest.mark.parametrize("p_len", [0, 1, 3, 8, 9, 17])
+def test_prompt_traffic_closed_form_matches_step_sum(p_len):
+    hot = 8
+    want = {k: 0 for k in kv_cache.TRAFFIC_KEYS}
+    for i in range(p_len):
+        tr = kv_cache.step_traffic_bytes(i, hot, token_bytes=1)
+        for k in want:
+            want[k] += tr[k]
+    got = kv_cache.prompt_traffic_tokens(p_len, hot)
+    assert got == want

@@ -8,6 +8,8 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 from repro.distributed.pipeline import bubble_fraction
 
 ROOT = Path(__file__).resolve().parents[1]
@@ -19,6 +21,7 @@ def test_bubble_fraction():
     assert bubble_fraction(4, 28) < 0.1
 
 
+@pytest.mark.slow
 def test_pipeline_matches_plain_forward_subprocess():
     """Runs the falcon3 6-stage pipeline example, which asserts exactness."""
     r = subprocess.run(

@@ -1,4 +1,18 @@
-"""Ternary-matmul kernel microbenchmarks + serving-path measurements."""
+"""Ternary-matmul kernel microbenchmarks + serving-path measurements.
+
+Sections (all emit ``name,us_per_call,derived`` rows):
+  * ``ternary_matmul_shapes`` — impl axis (xla vs pallas) over decode-shaped
+    rows (M ∈ {1, 8, 32}: the continuous-batching regime) and prefill-shaped
+    rows. On CPU the Pallas rows run in interpret mode (correctness-path
+    timing, not TPU latency) and are annotated as such.
+  * ``decode_blocking`` — shape-aware skinny-M blocks (select_blocks) vs the
+    historical pad-M-to-256 baseline at decode shapes.
+  * ``fused_epilogue`` — epilogue-fused kernel (scales applied in VMEM, no
+    (M, N) int32 intermediate in HBM) vs raw kernel + separate XLA rescale.
+  * ``fused_projection`` — one fused wq‖wk‖wv launch vs three separate
+    projections (falcon3-7b-ish dims), including act-quant.
+  * ``packing_density`` / ``serving_token_rate`` — unchanged ledgers.
+"""
 
 from __future__ import annotations
 
@@ -6,25 +20,141 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_us
-from repro.core import packing
+from repro.core import bitlinear, packing
 from repro.kernels import ops
+
+# decode-shaped (continuous-batching) + prefill-shaped rows
+BENCH_SHAPES = (
+    (1, 2048, 2048),
+    (8, 2048, 2048),
+    (32, 2048, 2048),
+    (16, 2048, 8192),
+    (128, 4096, 4096),
+)
+
+
+def _interpreted() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _iters(impl: str) -> int:
+    # Pallas-interpret on CPU is the correctness path, not a speed path;
+    # keep the bench wall-time bounded.
+    return 2 if (impl == "pallas" and _interpreted()) else 5
+
+
+def _note(impl: str) -> str:
+    return "pallas-interpret" if (impl == "pallas" and _interpreted()) else impl
+
+
+def _random_packed(k: int, n: int, codec: str, seed: int = 1):
+    wq = jax.random.randint(jax.random.PRNGKey(seed), (k, n), -1, 2, dtype=jnp.int8)
+    pack = packing.pack2 if codec == "pack2" else packing.pack243
+    return pack(wq)
 
 
 def ternary_matmul_shapes() -> list:
     rows = []
-    for m, k, n in [(1, 2048, 2048), (16, 2048, 8192), (128, 4096, 4096)]:
+    for m, k, n in BENCH_SHAPES:
         xq = jax.random.randint(jax.random.PRNGKey(0), (m, k), -128, 128, dtype=jnp.int8)
-        wq = jax.random.randint(jax.random.PRNGKey(1), (k, n), -1, 2, dtype=jnp.int8)
         for codec in ("pack2", "pack243"):
-            pack = packing.pack2 if codec == "pack2" else packing.pack243
-            packed = pack(wq)
-            fn = jax.jit(
-                lambda x, p: ops.ternary_matmul(x, p, k=k, codec=codec, impl="xla")
-            )
-            us = time_us(lambda: jax.block_until_ready(fn(xq, packed)), iters=5)
-            flops = 2.0 * m * k * n
-            rows.append(row(f"kernel/ternary_{codec}_{m}x{k}x{n}", us,
-                            f"gflops={flops/us/1e3:.2f} bytes_per_w={8/ (4 if codec=='pack2' else 5):.1f}bit"))
+            packed = _random_packed(k, n, codec)
+            for impl in ("xla", "pallas"):
+                if impl == "pallas" and _interpreted() and m > 32:
+                    continue  # interpret-mode prefill rows add minutes, no signal
+                fn = jax.jit(
+                    lambda x, p, codec=codec, impl=impl, k=k: ops.ternary_matmul(
+                        x, p, k=k, codec=codec, impl=impl
+                    )
+                )
+                us = time_us(lambda: jax.block_until_ready(fn(xq, packed)),
+                             iters=_iters(impl))
+                flops = 2.0 * m * k * n
+                rows.append(row(
+                    f"kernel/ternary_{impl}_{codec}_{m}x{k}x{n}", us,
+                    f"gflops={flops/us/1e3:.2f} impl={_note(impl)} "
+                    f"bytes_per_w={8/(4 if codec=='pack2' else 5):.1f}bit"))
+    return rows
+
+
+def decode_blocking() -> list:
+    """Skinny-M auto blocks vs the pad-to-256 baseline at decode shapes."""
+    rows = []
+    k, n, codec = 2048, 2048, "pack2"
+    packed = _random_packed(k, n, codec)
+    for m in (1, 8, 32):
+        xq = jax.random.randint(jax.random.PRNGKey(0), (m, k), -128, 128, dtype=jnp.int8)
+        variants = {
+            "auto": dict(),  # select_blocks: bm=32, bn=512, bk=1024
+            "pad256": dict(block_m=256, block_n=256, block_k=512),
+        }
+        t = {}
+        for name, kw in variants.items():
+            fn = jax.jit(lambda x, p, kw=kw: ops.ternary_matmul(
+                x, p, k=k, codec=codec, impl="pallas", **kw))
+            t[name] = time_us(lambda: jax.block_until_ready(fn(xq, packed)),
+                              iters=_iters("pallas"))
+        bm, bn, bk = ops.select_blocks(m, n, k, codec)
+        rows.append(row(
+            f"kernel/decode_blocking_m{m}", t["auto"],
+            f"pad256_us={t['pad256']:.1f} speedup={t['pad256']/t['auto']:.2f}x "
+            f"blocks={bm}x{bn}x{bk} impl={_note('pallas')}"))
+    return rows
+
+
+def fused_epilogue() -> list:
+    """Epilogue fusion: scaled-float out of the kernel vs raw int32 kernel +
+    separate XLA rescale pass over an (M, N) int32 HBM intermediate."""
+    rows = []
+    k, n, codec = 2048, 2048, "pack2"
+    packed = _random_packed(k, n, codec)
+    for m in (8, 32):
+        xq = jax.random.randint(jax.random.PRNGKey(0), (m, k), -128, 128, dtype=jnp.int8)
+        xs = jax.random.uniform(jax.random.PRNGKey(1), (m, 1)) + 0.5
+        cs = jax.random.uniform(jax.random.PRNGKey(2), (n,)) + 0.5
+
+        fused = jax.jit(lambda x, p, s, c: ops.ternary_matmul_fused(
+            x, p, s, c, k=k, codec=codec, impl="pallas"))
+        unfused = jax.jit(lambda x, p, s, c: (
+            ops.ternary_matmul(x, p, k=k, codec=codec, impl="pallas")
+            .astype(jnp.float32) * (c / s)))
+        t_f = time_us(lambda: jax.block_until_ready(fused(xq, packed, xs, cs)),
+                      iters=_iters("pallas"))
+        t_u = time_us(lambda: jax.block_until_ready(unfused(xq, packed, xs, cs)),
+                      iters=_iters("pallas"))
+        rows.append(row(
+            f"kernel/fused_epilogue_m{m}", t_f,
+            f"unfused_us={t_u:.1f} int32_hbm_intermediate_bytes=0 "
+            f"(unfused={4*m*n}) impl={_note('pallas')}"))
+    return rows
+
+
+def fused_projection() -> list:
+    """One fused wq‖wk‖wv launch vs three separate projections (act-quant
+    included) — the serving-path QKV shape (d=2048, h*hd=2048, g*hd=512)."""
+    from repro.models.pack import fuse_packed
+
+    rows = []
+    d, widths = 2048, (2048, 512, 512)
+    keys = jax.random.split(jax.random.PRNGKey(7), len(widths) + 1)
+    pws = [
+        bitlinear.quantize_pack(
+            {"w": jax.random.normal(kk, (d, w)) * d**-0.5}, codec="pack2")
+        for kk, w in zip(keys, widths)
+    ]
+    fused_leaf = fuse_packed(pws)
+    impl = "pallas"
+    for m in (1, 32):
+        x = jax.random.normal(keys[-1], (m, d))
+        f_one = jax.jit(lambda xx: bitlinear.packed_matmul(fused_leaf, xx, impl=impl))
+        f_sep = jax.jit(lambda xx: tuple(
+            bitlinear.packed_matmul(pw, xx, impl=impl) for pw in pws))
+        t_f = time_us(lambda: jax.block_until_ready(f_one(x)), iters=_iters(impl))
+        t_s = time_us(lambda: jax.block_until_ready(f_sep(x)), iters=_iters(impl))
+        rows.append(row(
+            f"kernel/fused_qkv_m{m}", t_f,
+            f"separate_us={t_s:.1f} speedup={t_s/t_f:.2f}x launches=1_vs_3 "
+            f"impl={_note(impl)}"))
     return rows
 
 

@@ -7,22 +7,33 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   fig1a/*   CiROM full-model area estimates              (Fig. 1a)
   fig5b/*   DR eDRAM access-reduction sweep              (Fig. 5b)
   fig6a/*   LoRA quantization-bit ablation (measured)    (Fig. 6a)
-  kernel/*  ternary matmul + packing microbenchmarks
+  kernel/*  ternary matmul + packing microbenchmarks: impl axis
+            (xla vs pallas), decode-shaped rows, shape-aware blocking vs
+            pad-to-256, fused epilogue, fused QKV projections
   serving/* packed decode + DR traffic (measured), plus the
             continuous-batching vs lock-step throughput comparison
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--fast]
+Run:  PYTHONPATH=src python -m benchmarks.run [--fast] [--only PREFIX]
+                                              [--json [PATH]]
+
+``--only kernel`` runs just the kernel sections; ``--json`` additionally
+records the rows as structured JSON (default path BENCH_kernels.json).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="skip the trained ablation")
+    ap.add_argument("--only", default=None,
+                    help="run only sections whose name starts with this prefix")
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json", default=None,
+                    help="also write rows as JSON (default: BENCH_kernels.json)")
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, paper_tables, serving_bench
@@ -36,11 +47,16 @@ def main() -> None:
         ("fig5b", paper_tables.fig5b),
         ("kernel/density", kernel_bench.packing_density),
         ("kernel/matmul", kernel_bench.ternary_matmul_shapes),
+        ("kernel/decode_blocking", kernel_bench.decode_blocking),
+        ("kernel/fused_epilogue", kernel_bench.fused_epilogue),
+        ("kernel/fused_qkv", kernel_bench.fused_projection),
         ("serving", kernel_bench.serving_token_rate),
         ("serving/continuous", serving_bench.serving_throughput),
     ]
     if not args.fast:
         sections.append(("fig6a", paper_tables.fig6a))
+    if args.only:
+        sections = [(n, f) for n, f in sections if n.startswith(args.only)]
 
     failures = 0
     for name, fn in sections:
@@ -56,6 +72,18 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
+    if args.json:
+        import jax
+
+        structured = []
+        for r in rows:
+            name, us, derived = r.split(",", 2)
+            structured.append({"name": name, "us_per_call": float(us),
+                               "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump({"backend": jax.default_backend(), "rows": structured},
+                      f, indent=1)
+        print(f"\nwrote {len(structured)} rows to {args.json}", file=sys.stderr)
     if failures:
         print(f"\n{failures} section(s) failed", file=sys.stderr)
         raise SystemExit(1)

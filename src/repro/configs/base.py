@@ -62,6 +62,13 @@ class BitNetConfig:
     enabled: bool = True
     act_bits: int = 8  # 8 = b1.58, 4 = a4.8 (TriMLA-native)
     codec: str = "pack2"  # "pack2" (BiROMA 2b/trit) | "pack243" (1.6b, beyond-paper)
+    # packed-matmul execution path: "auto" resolves to the Pallas fused-
+    # epilogue kernel on TPU (single-device) and the XLA unpack+dot path on
+    # CPU / under GSPMD sharding hints; "pallas" / "xla" force a path.
+    impl: str = "auto"
+    # fuse wq|wk|wv and gate|up into one packed projection at pack time
+    # (one act-quant + one kernel launch per group; see models/pack.py)
+    fuse_proj: bool = True
     lora_rank: int = 0  # 0 disables adapters
     lora_targets: Tuple[str, ...] = ("v", "o", "down")
     lora_bits: int = 6

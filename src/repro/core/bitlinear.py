@@ -50,6 +50,26 @@ class PackedLinear:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class FusedPackedLinear:
+    """Several same-input ternary projections packed side by side along N.
+
+    The fused-projection form (wq‖wk‖wv, gate‖up): one act-quant + one
+    kernel launch serve every segment, amortizing the in-VMEM trit decode
+    across the combined output width. ``scale`` is *per column* (each
+    segment keeps its own absmean scale, repeated over its width) so the
+    epilogue rescale stays exact; ``splits`` records the segment widths
+    for the output split.
+    """
+
+    packed: jax.Array  # uint8 (ceil(K/g), sum(splits))
+    scale: jax.Array  # (sum(splits),) f32 per-column absmean
+    k: int = dataclasses.field(metadata=dict(static=True))
+    codec: str = dataclasses.field(metadata=dict(static=True))
+    splits: tuple = dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class Int8Linear:
     """int8 weight + per-axis absmax scale — the beyond-paper codec for the
     high-precision residue (embedding / lm_head), which dominates the
@@ -93,6 +113,40 @@ def quantize_pack(params: dict, codec: str = "pack2") -> PackedLinear:
     return PackedLinear(packed=pack(q.wq), scale=q.scale, k=params["w"].shape[0], codec=codec)
 
 
+def packed_matmul(
+    pw,
+    x: jax.Array,
+    act_bits: int = 8,
+    impl: str = "xla",
+) -> jax.Array:
+    """The ONE packed ternary fast path: act-quant -> matmul -> rescale.
+
+    Shared by every consumer (qops.linear, apply_packed, and through them
+    the models, the serving engine and the LoRA add-on). ``pw`` is a
+    ``PackedLinear`` (scalar absmean scale) or ``FusedPackedLinear``
+    (per-column scale); ``x`` is (..., K) float. Returns the *float32*
+    projection output (callers cast to the activation dtype). On the
+    Pallas path the rescale happens in the kernel epilogue (no (M, N)
+    int32 intermediate in HBM); the XLA path performs the numerically
+    identical dot + elementwise rescale.
+    """
+    from repro.kernels import ops  # lazy: kernels depend on core.packing
+
+    xq = act_quant(x, bits=act_bits)
+    scale = jnp.asarray(pw.scale, jnp.float32)
+    if impl == "pallas":
+        # the kernel wants an explicit (N,) per-column vector; the XLA path
+        # keeps the scale's natural shape — a scalar scale must divide by
+        # the per-row activation scale BEFORE broadcasting over N, or the
+        # (b, N)-shaped division costs a ulp that breaks the bit-exactness
+        # of mixed-batch vs solo decode across batch-size compilations.
+        scale = jnp.broadcast_to(scale.reshape(-1), (pw.packed.shape[-1],))
+    return ops.ternary_matmul_fused(
+        xq.xq, pw.packed, xq.scale, scale,
+        k=pw.k, codec=pw.codec, impl=impl,
+    )
+
+
 def apply_packed(
     pw: PackedLinear,
     x: jax.Array,
@@ -100,14 +154,13 @@ def apply_packed(
     impl: str = "xla",
     lora_params: Optional[dict] = None,
 ) -> jax.Array:
-    """Inference forward on packed ternary weights."""
-    from repro.kernels import ops  # lazy: kernels depend on core.packing
+    """Inference forward on packed ternary weights.
 
-    xq = act_quant(x, bits=act_bits)
-    acc = ops.ternary_matmul(
-        xq.xq, pw.packed, k=pw.k, codec=pw.codec, impl=impl
-    )  # (..., N) int32
-    y = acc.astype(jnp.float32) * (pw.scale / xq.scale)
+    ``lora_params`` is a standalone convenience using ``lora_lib.apply``
+    defaults; the model projection paths apply adapters with the
+    config-driven recipe in ``qops._apply_lora`` instead.
+    """
+    y = packed_matmul(pw, x, act_bits=act_bits, impl=impl)
     if lora_params is not None:
         y = y + lora_lib.apply(lora_params, x)
     return y.astype(x.dtype)
@@ -120,7 +173,7 @@ def apply(
     impl: str = "xla",
     lora_params: Optional[dict] = None,
 ) -> jax.Array:
-    """Mode-dispatching forward (dict => QAT, PackedLinear => packed)."""
-    if isinstance(params_or_packed, PackedLinear):
+    """Mode-dispatching forward (dict => QAT, Packed/Fused => packed)."""
+    if isinstance(params_or_packed, (PackedLinear, FusedPackedLinear)):
         return apply_packed(params_or_packed, x, act_bits, impl, lora_params)
     return apply_qat(params_or_packed, x, act_bits, lora_params)

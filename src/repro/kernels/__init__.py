@@ -1,7 +1,11 @@
 """Pallas TPU kernels for the perf-critical ternary compute path.
 
-  ternary_matmul — packed-trit decode + local-then-global accumulation
+  ternary_matmul — packed-trit decode + local-then-global accumulation;
+                   raw int32 variant + the production epilogue-fused
+                   variant (scales applied in VMEM, float out)
   ops            — jit'd dispatch (pallas | xla) with padding/batching
+                   and the shape-aware block-selection table
+                   (select_blocks: skinny-M decode vs MXU-aligned prefill)
   ref            — pure-jnp oracles
 """
 

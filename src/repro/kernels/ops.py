@@ -10,6 +10,42 @@
 
 Handles arbitrary leading batch dims and non-aligned M/N/K by zero padding
 (zero trits are TriMLA skip-ops; zero activations contribute nothing).
+
+Shape-aware block selection
+---------------------------
+When the caller does not pin block sizes, ``select_blocks`` picks them from
+a static table keyed on (M, N, K). The two regimes it distinguishes:
+
+  * decode (M <= 32, continuous-batching GEMV-ish shapes) — block_m = 32
+    (the int8 sublane tile) instead of padding the batch up to 256, a 8x
+    cut in streamed/accumulated M rows; block_n widens to 512 and block_k
+    to 1024 so each launch amortizes the in-VMEM trit decode and the x
+    tile reload across more output columns / contraction depth;
+  * prefill / train (large M) — classic MXU-aligned 256/256/512 blocks.
+
+    M range   | block_m | block_n | block_k
+    ----------|---------|---------|--------
+    1..32     |   32    |   512   |  1024      (decode fast path)
+    33..64    |   64    |   256   |   512
+    65..128   |  128    |   256   |   512
+    129..     |  256    |   256   |   512      (prefill/train)
+
+(under pack243, block_k snaps to multiples of 640 = lcm(5 trits/byte,
+128 lanes) so both the x tile and the packed tile stay lane-aligned)
+
+block_n / block_k are additionally capped by the (padded) N / K of the
+operand and block_k is aligned down to the codec group (4 or 5 trits per
+byte).
+
+Fused epilogue
+--------------
+``ternary_matmul_fused`` is the production entry point used by the model
+fast path (core/bitlinear.packed_matmul): it takes the per-row activation
+scale and per-column weight scale and returns the *scaled float* output in
+one kernel launch (Pallas) or one dot + one elementwise rescale (XLA
+fallback, numerically identical ops to the historical unfused path). The
+per-column weight scale is what makes fused QKV / gate-up projections
+(one launch for wq‖wk‖wv) exact: each segment keeps its own absmean scale.
 """
 
 from __future__ import annotations
@@ -20,11 +56,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packing
-from repro.kernels.ternary_matmul import ternary_matmul_pallas
+from repro.kernels.ternary_matmul import (
+    ternary_matmul_fused_pallas,
+    ternary_matmul_pallas,
+)
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+# Static block table: (max_m, block_m, block_n, block_k). See module doc.
+_BLOCK_TABLE = (
+    (32, 32, 512, 1024),
+    (64, 64, 256, 512),
+    (128, 128, 256, 512),
+    (None, 256, 256, 512),
+)
+
+
+def select_blocks(m: int, n: int, k: int, codec: str) -> tuple:
+    """(M, N, K) -> (block_m, block_n, block_k) from the static table.
+
+    Caps block_n / block_k at the padded operand extent and aligns block_k
+    to the codec group so a block never spans a partial packed byte. For
+    pack243 the group (5) is coprime with the 128-lane tile, so block_k
+    additionally snaps to multiples of lcm(5, 128) = 640 whenever K allows
+    — otherwise the (bm, bk) x tile and (bk/5, bn) packed tile would be
+    lane-misaligned on real TPU (interpret mode doesn't care, Mosaic does).
+    """
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    for max_m, bm, bn, bk in _BLOCK_TABLE:
+        if max_m is None or m <= max_m:
+            break
+    bn = min(bn, _round_up(max(n, 1), 128))
+    kp = _round_up(max(k, 1), group)
+    bk = min(bk, kp)
+    if codec == "pack243" and kp >= 640:
+        bk = max(640, bk // 640 * 640)
+    else:
+        bk = max(group, bk // group * group)
+    return bm, bn, bk
 
 
 def _xla_path(xq: jax.Array, packed: jax.Array, k: int, codec: str) -> jax.Array:
@@ -38,6 +110,55 @@ def _xla_path(xq: jax.Array, packed: jax.Array, k: int, codec: str) -> jax.Array
     )
 
 
+def _pad_operands(xq, packed, codec, block_m, block_n, block_k):
+    """Flatten leading dims and zero-pad to block multiples.
+
+    Returns (x2 (Mp, Kp) int8, wp (Kp/g, Np) uint8, lead shape, m, n).
+    Padding is computation-neutral: zero activation rows/columns contribute
+    nothing, and padded *weight* bytes are repaired to the all-zero-trit
+    code where the byte encoding requires it (pack243's zero code is 121,
+    not 0x00 — note the parenthesization below: the repair is only ever
+    needed for pack243, for *either* K-row or N-column padding; pack2's
+    zero code is 0x00, which jnp.pad already produces).
+    """
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    lead = xq.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = xq.reshape(m, xq.shape[-1])
+
+    n = packed.shape[1]
+    kp_logical = packed.shape[0] * group  # K padded to group already
+    mp = _round_up(max(m, 1), block_m)
+    np_ = _round_up(n, block_n)
+    kpp = _round_up(kp_logical, block_k)
+    x2 = jnp.pad(
+        x2, ((0, mp - m), (0, kpp - xq.shape[-1]))
+    )  # pad K with zero activations
+    wp = jnp.pad(packed, ((0, kpp // group - packed.shape[0]), (0, np_ - n)))
+    if codec == "pack243" and (kpp // group > packed.shape[0] or np_ > n):
+        # byte 0 decodes to trits (-1,-1,-1,-1,-1) under pack243; rewrite
+        # padded bytes to the all-zero-trit code 121 = sum((0+1) * 3^i).
+        zero_code = 121
+        mask_r = jnp.arange(kpp // group) >= packed.shape[0]
+        mask_c = jnp.arange(np_) >= n
+        mask = mask_r[:, None] | mask_c[None, :]
+        wp = jnp.where(mask, jnp.uint8(zero_code), wp)
+    return x2, wp, lead, m, n
+
+
+def _resolve_blocks(m, n, k, codec, block_m, block_n, block_k):
+    auto = select_blocks(m, n, k, codec)
+    bm = block_m if block_m is not None else auto[0]
+    bn = block_n if block_n is not None else auto[1]
+    bk = block_k if block_k is not None else auto[2]
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    bk = max(group, bk // group * group)  # align block to codec group
+    bk = min(bk, _round_up(k, group))  # don't exceed (padded) K
+    return bm, bn, bk
+
+
 @functools.partial(
     jax.jit, static_argnames=("k", "codec", "impl", "block_m", "block_n", "block_k")
 )
@@ -48,54 +169,91 @@ def ternary_matmul(
     k: int,
     codec: str = "pack2",
     impl: str = "xla",
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 512,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
 ) -> jax.Array:
-    """int8 activations (..., K) x packed trits -> int32 (..., N)."""
+    """int8 activations (..., K) x packed trits -> int32 (..., N).
+
+    Block sizes default to the shape-aware table (``select_blocks``).
+    """
     if impl == "xla":
         return _xla_path(xq, packed, k, codec)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
 
     group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
-    lead = xq.shape[:-1]
     m = 1
-    for d in lead:
+    for d in xq.shape[:-1]:
         m *= d
-    x2 = xq.reshape(m, xq.shape[-1])
-
-    # pad to block multiples (and codec group)
-    n = packed.shape[1]
-    kp_logical = packed.shape[0] * group  # K padded to group already
-    block_k = max(group, block_k // group * group)  # align block to codec group
-    block_k = min(block_k, kp_logical)  # don't exceed (padded) K
-    mp = _round_up(max(m, 1), block_m)
-    np_ = _round_up(n, block_n)
-    kpp = _round_up(kp_logical, block_k)
-    x2 = jnp.pad(
-        x2, ((0, mp - m), (0, kpp - xq.shape[-1]))
-    )  # pad K with zero activations
-    wp = jnp.pad(packed, ((0, kpp // group - packed.shape[0]), (0, np_ - n)))
-    # pack243 zero-pad decodes byte 0 -> trits (-1,...): must use the code of
-    # all-zero trits instead. all-zero trits = sum(0+1)*3^i = 121 for pack243,
-    # 0x00 for pack2.
-    if codec == "pack243" and kpp // group > packed.shape[0] or np_ > n:
-        zero_code = 0 if codec == "pack2" else 121
-        if zero_code:
-            mask_r = jnp.arange(kpp // group) >= packed.shape[0]
-            mask_c = jnp.arange(np_) >= n
-            mask = mask_r[:, None] | mask_c[None, :]
-            wp = jnp.where(mask, jnp.uint8(zero_code), wp)
+    bm, bn, bk = _resolve_blocks(
+        m, packed.shape[1], packed.shape[0] * group, codec, block_m, block_n, block_k
+    )
+    x2, wp, lead, m, n = _pad_operands(xq, packed, codec, bm, bn, bk)
 
     interpret = jax.default_backend() == "cpu"
     out = ternary_matmul_pallas(
-        x2,
-        wp,
-        codec=codec,
-        block_m=block_m,
-        block_n=block_n,
-        block_k=block_k,
+        x2, wp, codec=codec, block_m=bm, block_n=bn, block_k=bk,
         interpret=interpret,
+    )
+    return out[:m, :n].reshape(lead + (n,))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "codec", "impl", "out_dtype",
+                     "block_m", "block_n", "block_k"),
+)
+def ternary_matmul_fused(
+    xq: jax.Array,
+    packed: jax.Array,
+    x_scale: jax.Array,
+    col_scale: jax.Array,
+    *,
+    k: int,
+    codec: str = "pack2",
+    impl: str = "pallas",
+    out_dtype=jnp.float32,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """Epilogue-fused ternary matmul: int8 x packed -> scaled float (..., N).
+
+    ``x_scale``: (..., 1) f32 per-row activation scale (act_quant
+    convention, dequant = xq / scale); ``col_scale``: (N,) f32 per-column
+    weight scale. Returns ``(xq @ trits) * col_scale / x_scale`` without
+    materializing the (M, N) int32 accumulator in HBM on the Pallas path.
+    """
+    n = packed.shape[1]
+    if impl == "xla":
+        acc = _xla_path(xq, packed, k, codec)
+        y = acc.astype(jnp.float32) * (col_scale / x_scale)
+        return y.astype(out_dtype)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    m = 1
+    for d in xq.shape[:-1]:
+        m *= d
+    bm, bn, bk = _resolve_blocks(
+        m, n, packed.shape[0] * group, codec, block_m, block_n, block_k
+    )
+    x2, wp, lead, m, n = _pad_operands(xq, packed, codec, bm, bn, bk)
+    mp, np_ = x2.shape[0], wp.shape[1]
+    # padded rows divide by 1 (not 0); padded columns scale to exactly 0
+    xs = jnp.pad(
+        x_scale.reshape(m, 1).astype(jnp.float32), ((0, mp - m), (0, 0)),
+        constant_values=1.0,
+    )
+    ws = jnp.pad(
+        col_scale.reshape(1, n).astype(jnp.float32), ((0, 0), (0, np_ - n))
+    )
+
+    interpret = jax.default_backend() == "cpu"
+    out = ternary_matmul_fused_pallas(
+        x2, wp, xs, ws, codec=codec, block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype, interpret=interpret,
     )
     return out[:m, :n].reshape(lead + (n,))

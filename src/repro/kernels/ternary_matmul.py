@@ -20,6 +20,21 @@ sized so the packed rows stay lane-aligned). VMEM footprint per step:
   x tile (bm, bk) int8 + packed tile (bk/g, bn) uint8
   + decoded (bk, bn) int8 + acc (bm, bn) int32
 e.g. bm=bn=256, bk=512 (pack2): 128K + 32K + 128K + 256K = 544 KiB << 16 MiB VMEM.
+
+Two entry points:
+
+  * ``ternary_matmul_pallas`` — raw int32 accumulator out (kept for the
+    bit-exactness oracle tests and as the building block);
+  * ``ternary_matmul_fused_pallas`` — the production fast path: the same
+    integer pipeline plus a *fused epilogue*. The int32 local accumulator
+    lives in VMEM scratch; on the final K step it is rescaled in VMEM by
+    the per-column weight scale and per-row activation scale and written
+    out directly as f32/bf16. The (M, N) int32 accumulator never exists
+    in HBM and the separate XLA rescale pass disappears — one kernel
+    launch goes activations-int8 -> scaled float output. Per-column
+    (rather than per-tensor) weight scales are what lets fused QKV /
+    gate-up projections (models/pack.py::fuse_packed) ride the same
+    kernel: each output segment keeps its own absmean scale.
 """
 
 from __future__ import annotations
@@ -29,6 +44,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import packing
 
@@ -113,3 +129,84 @@ def ternary_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(xq, packed)
+
+
+def _fused_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, codec: str,
+                  k_steps: int):
+    """Integer accumulate in VMEM scratch; rescale + emit on the last K step.
+
+    xs_ref: (bm, 1) f32 per-row activation scale (act_quant convention:
+            dequant = xq / scale, so the epilogue *divides* by it);
+    ws_ref: (1, bn) f32 per-column weight scale (dequant = acc * scale).
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    decode = _decode2_block if codec == "pack2" else _decode243_block
+    trits = decode(w_ref[...])  # (bk, bn) int8 in {-1,0,+1}
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        trits,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(kk == k_steps - 1)
+    def _epilogue():
+        # y = acc * (w_scale / x_scale), computed entirely in VMEM: the
+        # (M, N) int32 accumulator never round-trips through HBM.
+        y = acc_ref[...].astype(jnp.float32) * (ws_ref[...] / xs_ref[...])
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codec", "block_m", "block_n", "block_k", "out_dtype",
+                     "interpret"),
+)
+def ternary_matmul_fused_pallas(
+    xq: jax.Array,
+    packed: jax.Array,
+    x_scale: jax.Array,
+    col_scale: jax.Array,
+    *,
+    codec: str = "pack2",
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, K) int8 x packed (K/g, N) uint8 -> (M, N) float, epilogue-fused.
+
+    ``x_scale``: (M, 1) f32 per-row activation scale; ``col_scale``: (1, N)
+    f32 per-column weight scale. Shapes must already be padded to block
+    multiples (ops.py handles padding; padded x_scale rows must be nonzero).
+    """
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    assert block_k % group == 0, (block_k, group)
+    m, k = xq.shape
+    kp, n = packed.shape
+    assert kp * group == k, (kp, group, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (m, n, k)
+    assert x_scale.shape == (m, 1), x_scale.shape
+    assert col_scale.shape == (1, n), col_scale.shape
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, codec=codec, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k // group, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(xq, packed, x_scale.astype(jnp.float32), col_scale.astype(jnp.float32))

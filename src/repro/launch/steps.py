@@ -54,7 +54,11 @@ def _batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
 def param_specs(cfg: ModelConfig, packed: bool):
     def build(key):
         p = T.init_params(key, cfg, dtype=PARAM_DTYPE)
-        return pack_lib.pack_params(p, cfg) if packed else p
+        # fuse=False: the multi-pod lowering shards per-projection leaves by
+        # name (launch/sharding.py) and runs the XLA packed path anyway
+        # (qops.resolve_impl returns "xla" under sharding hints); the fused
+        # wqkv/wgu fast path is the single-device TPU serving feature.
+        return pack_lib.pack_params(p, cfg, fuse=False) if packed else p
 
     return jax.eval_shape(build, jax.random.PRNGKey(0))
 

@@ -146,9 +146,21 @@ def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 def _project_qkv(p, x, cfg: ModelConfig, mode: str):
     h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     hidden = rms_norm(x, p["ln"], cfg.norm_eps)
-    q = qops.linear(p["wq"], hidden, cfg, mode, out_shape=(h, hd))
-    k = qops.linear(p["wk"], hidden, cfg, mode, out_shape=(g, hd))
-    v = qops.linear(p["wv"], hidden, cfg, mode, out_shape=(g, hd), lora_leaf=p.get("lora_v"))
+    if "wqkv" in p:
+        # fused packed fast path (models/pack.py::fuse_packed): one
+        # act-quant + one kernel launch produce q‖k‖v; the v-adapter
+        # applies to its segment after the split.
+        q, k, v = qops.fused_linear(
+            p["wqkv"], hidden, cfg,
+            out_shapes=((h, hd), (g, hd), (g, hd)),
+            lora_leaves={2: p.get("lora_v")},
+        )
+    else:
+        q = qops.linear(p["wq"], hidden, cfg, mode, out_shape=(h, hd))
+        k = qops.linear(p["wk"], hidden, cfg, mode, out_shape=(g, hd))
+        v = qops.linear(
+            p["wv"], hidden, cfg, mode, out_shape=(g, hd), lora_leaf=p.get("lora_v")
+        )
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)

@@ -68,8 +68,13 @@ def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig, mode: str) -> jax.Array:
     if cfg.activation == "gelu":
         a = jax.nn.gelu(qops.linear(p["up"], h, cfg, mode))
     else:
-        g = qops.linear(p["gate"], h, cfg, mode)
-        u = qops.linear(p["up"], h, cfg, mode)
+        if "wgu" in p:
+            # fused packed gate‖up (models/pack.py::fuse_packed): one
+            # act-quant + one kernel launch for both halves of the GLU.
+            g, u = qops.fused_linear(p["wgu"], h, cfg)
+        else:
+            g = qops.linear(p["gate"], h, cfg, mode)
+            u = qops.linear(p["up"], h, cfg, mode)
         act = jax.nn.gelu(g, approximate=True) if cfg.activation == "geglu" else jax.nn.silu(g)
         a = act * u
     return qops.linear(p["down"], a, cfg, mode, lora_leaf=p.get("lora_down"))

@@ -126,8 +126,12 @@ def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig, mode: str):
 
     # --- shared experts (DeepSeek-V3: always-on) ---
     if mo.n_shared:
-        sg = qops.linear(p["shared_gate"], h3, cfg, mode)
-        su = qops.linear(p["shared_up"], h3, cfg, mode)
+        if "shared_gu" in p:
+            # fused packed gate‖up (models/pack.py::fuse_packed)
+            sg, su = qops.fused_linear(p["shared_gu"], h3, cfg)
+        else:
+            sg = qops.linear(p["shared_gate"], h3, cfg, mode)
+            su = qops.linear(p["shared_up"], h3, cfg, mode)
         shared = qops.linear(p["shared_down"], jax.nn.silu(sg) * su, cfg, mode)
         y = y + shared.astype(jnp.float32).reshape(b * t, d)
 

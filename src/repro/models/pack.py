@@ -6,22 +6,37 @@ projection leaf {"w": float (…, K, N)} into a ``PackedLinear`` (uint8 trits
 vmapped through the codec. This is the moment the paper fabricates the ROM:
 after it, inference never touches a float weight for these projections.
 
+A second pass (``cfg.bitnet.fuse_proj``, on by default) merges sibling
+projections that consume the same input into one ``FusedPackedLinear``
+via ``fuse_packed``: wq‖wk‖wv -> "wqkv", gate‖up -> "wgu",
+shared_gate‖shared_up -> "shared_gu". One act-quant + one kernel launch
+then serves the whole group, and the in-VMEM trit decode of each K tile is
+amortized across 3x (resp. 2x) more output columns. Segment scales stay
+exact: the fused leaf carries a per-column scale vector.
+
 Not packed (and why):
   * embed / lm_head / frontend — BitNet keeps them high-precision;
   * router — routing accuracy is precision-sensitive and it is tiny;
   * MLA factor matrices (w_uk/w_uv) — consumed in absorbed per-head form,
     kept fake-quant ternary (same numerics, bf16 storage; ~0.3% of weights);
   * norms / conv / SSM scalars / LoRA (LoRA is SRAM, 6-bit, by design).
+
+Not fused (and why):
+  * expert weights (E, K, N) — dispatched through vmapped expert GEMMs;
+  * MLA down-projections (w_dq / w_dkv share an input but interleave with
+    per-branch norms) — candidate for a later PR.
 """
 
 from __future__ import annotations
+
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import packing
-from repro.core.bitlinear import PackedLinear
+from repro.core.bitlinear import FusedPackedLinear, PackedLinear
 from repro.core.ternary import EPS
 
 PACK_KEYS = {
@@ -53,11 +68,68 @@ def _pack_weight(w: jax.Array, codec: str) -> PackedLinear:
     return PackedLinear(packed=packed, scale=scale, k=k, codec=codec)
 
 
-def pack_params(params, cfg: ModelConfig, codec: str | None = None):
-    """Convert a QAT parameter tree to the packed-inference tree."""
+# Same-input sibling projections merged by the fusion pass (order matters:
+# it fixes the segment order of the fused output splits).
+FUSE_GROUPS = (
+    (("wq", "wk", "wv"), "wqkv"),
+    (("gate", "up"), "wgu"),
+    (("shared_gate", "shared_up"), "shared_gu"),
+)
+
+
+def fuse_packed(pws: Sequence[PackedLinear]) -> FusedPackedLinear:
+    """Concatenate same-K PackedLinears along N into one fused projection.
+
+    Per-tensor absmean scales become a per-column scale vector (each
+    segment's scalar repeated over its width), so the fused epilogue
+    rescale is bit-for-bit the same as the per-projection rescales.
+    Leading stack dims (layer scan) pass straight through.
+    """
+    k, codec = pws[0].k, pws[0].codec
+    assert all(pw.k == k and pw.codec == codec for pw in pws), [
+        (pw.k, pw.codec) for pw in pws
+    ]
+    splits = tuple(int(pw.packed.shape[-1]) for pw in pws)
+    packed = jnp.concatenate([pw.packed for pw in pws], axis=-1)
+    cols = []
+    for pw, w in zip(pws, splits):
+        s = jnp.asarray(pw.scale, jnp.float32)
+        cols.append(jnp.broadcast_to(s[..., None], s.shape + (w,)))
+    scale = jnp.concatenate(cols, axis=-1)
+    return FusedPackedLinear(packed=packed, scale=scale, k=k, codec=codec,
+                             splits=splits)
+
+
+def _fuse_tree(tree):
+    """Bottom-up pass replacing FUSE_GROUPS siblings with fused leaves."""
+    if not isinstance(tree, dict):
+        return tree
+    out = {k: _fuse_tree(v) for k, v in tree.items()}
+    for keys, fused_name in FUSE_GROUPS:
+        members = [out.get(kk) for kk in keys]
+        if not all(isinstance(m, PackedLinear) for m in members):
+            continue
+        if len({(m.k, m.codec) for m in members}) != 1:
+            continue
+        if any(m.packed.ndim != members[0].packed.ndim for m in members):
+            continue
+        for kk in keys:
+            del out[kk]
+        out[fused_name] = fuse_packed(members)
+    return out
+
+
+def pack_params(params, cfg: ModelConfig, codec: str | None = None,
+                fuse: bool | None = None):
+    """Convert a QAT parameter tree to the packed-inference tree.
+
+    ``fuse`` (default: ``cfg.bitnet.fuse_proj``) controls the fused-
+    projection pass (wqkv / wgu / shared_gu); see the module docstring.
+    """
     from repro.core.bitlinear import quantize_int8
 
     codec = codec or cfg.bitnet.codec
+    fuse = cfg.bitnet.fuse_proj if fuse is None else fuse
 
     def walk(tree, path=()):
         if isinstance(tree, dict):
@@ -77,20 +149,20 @@ def pack_params(params, cfg: ModelConfig, codec: str | None = None):
             return {k: walk(v, path + (k,)) for k, v in tree.items()}
         return tree
 
-    return walk(params)
+    packed = walk(params)
+    if fuse and cfg.bitnet.enabled:
+        packed = _fuse_tree(packed)
+    return packed
 
 
 def packed_param_bytes(packed_tree) -> dict:
-    """HBM ledger: packed trit bytes vs residual float bytes."""
+    """HBM ledger: packed trit bytes (trits + their scales) vs residual
+    float bytes. One walk so scale arrays are counted exactly once."""
     packed_b, float_b = 0, 0
-    for leaf in jax.tree.leaves(
-        packed_tree, is_leaf=lambda x: isinstance(x, PackedLinear)
-    ):
-        if isinstance(leaf, PackedLinear):
+    is_packed = lambda x: isinstance(x, (PackedLinear, FusedPackedLinear))  # noqa: E731
+    for leaf in jax.tree.leaves(packed_tree, is_leaf=is_packed):
+        if is_packed(leaf):
             packed_b += leaf.packed.size + 4 * leaf.scale.size
-        else:
-            packed_b += 0
-    for leaf in jax.tree.leaves(packed_tree):
-        if leaf.dtype != jnp.uint8:
+        elif leaf.dtype != jnp.uint8:
             float_b += leaf.size * leaf.dtype.itemsize
     return {"packed_bytes": packed_b, "other_bytes": float_b}

@@ -5,8 +5,14 @@ technique (ternary weights, A8/A4 activations, packed storage, LoRA) is
 applied uniformly:
 
   * QAT mode ("qat")    — BitNet STE fake quantization (training forward)
-  * packed mode         — leaf already converted to ``PackedLinear``:
-                          integer ternary matmul on packed trits
+  * packed mode         — leaf already converted to ``PackedLinear`` /
+                          ``FusedPackedLinear``: integer ternary matmul on
+                          packed trits via the shared fast-path helper
+                          (core/bitlinear.packed_matmul — Pallas fused
+                          epilogue on TPU, XLA unpack+dot otherwise; see
+                          ``resolve_impl``). ``fused_linear`` serves a
+                          whole same-input projection group (wq‖wk‖wv,
+                          gate‖up) with one act-quant + one launch.
   * float mode ("none") — plain matmul (ablation baseline)
 
 Weights are always stored contraction-first (K, N) — inputs with multiple
@@ -23,10 +29,49 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitlinear
 from repro.core import lora as lora_lib
-from repro.core.bitlinear import PackedLinear
-from repro.core.ternary import act_quant, act_quant_ste, weight_quant_ste
+from repro.core.bitlinear import FusedPackedLinear, PackedLinear
+from repro.core.ternary import act_quant_ste, weight_quant_ste
 from repro.configs.base import ModelConfig
+
+
+def resolve_impl(cfg: ModelConfig) -> str:
+    """Pick the packed-matmul execution path for this process.
+
+    ``cfg.bitnet.impl`` of "pallas"/"xla" is honored verbatim; "auto"
+    selects the Pallas fused-epilogue kernel on a TPU backend and falls
+    back to the XLA unpack+dot path on CPU (where Pallas would run in the
+    slow interpreter) and under active sharding hints (a hand-written
+    kernel blocks GSPMD propagation on the multi-pod dry-run lowering).
+    """
+    impl = cfg.bitnet.impl
+    if impl != "auto":
+        return impl
+    from repro.models import shard_ctx
+
+    if shard_ctx.active():
+        return "xla"
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _apply_lora(y: jax.Array, x: jax.Array, lora_leaf: dict, cfg: ModelConfig):
+    """Add the quantized-LoRA delta (paper §III-C) to a projection output.
+
+    The single site for the cfg-driven adapter recipe (alpha = 2r,
+    lora_bits weights, A8) on the model projection paths, so the fused
+    and unfused ``linear``/``fused_linear`` routes can never diverge.
+    (The standalone ``core.bitlinear.apply*`` conveniences predate this
+    and use ``lora_lib.apply`` defaults — no model path goes through them.)
+    """
+    x2l, _ = _flatten_x(x, lora_leaf["a"].shape[0])
+    return y + lora_lib.apply(
+        lora_leaf,
+        x2l,
+        alpha=2.0 * cfg.bitnet.lora_rank,
+        weight_bits=cfg.bitnet.lora_bits,
+        act_bits=8,
+    ).astype(y.dtype)
 
 
 def _flatten_x(x: jax.Array, k: int):
@@ -50,22 +95,23 @@ def linear(
     out_shape: tuple | None = None,
     lora_leaf: Optional[dict] = None,
     quantize: bool = True,
+    impl: Optional[str] = None,
 ) -> jax.Array:
-    """y = x @ W with the BitNet recipe. ``leaf`` is {"w": (K, N)} or PackedLinear.
+    """y = x @ W with the BitNet recipe. ``leaf`` is {"w": (K, N)},
+    PackedLinear or FusedPackedLinear.
 
     ``out_shape``: optional trailing shape to unflatten N into (e.g. (H, hd)).
     ``quantize=False`` exempts a projection from ternarization (embeddings,
-    lm_head — BitNet convention).
+    lm_head — BitNet convention). ``impl`` overrides the config-resolved
+    packed execution path (the vmapped expert path pins "xla").
     """
     act_bits = cfg.bitnet.act_bits
 
-    if isinstance(leaf, PackedLinear):
-        from repro.kernels import ops
-
+    if isinstance(leaf, (PackedLinear, FusedPackedLinear)):
         x2, lead = _flatten_x(x, leaf.k)
-        xq = act_quant(x2, bits=act_bits)
-        acc = ops.ternary_matmul(xq.xq, leaf.packed, k=leaf.k, codec=leaf.codec, impl="xla")
-        y = acc.astype(jnp.float32) * (leaf.scale / xq.scale)
+        y = bitlinear.packed_matmul(
+            leaf, x2, act_bits=act_bits, impl=impl or resolve_impl(cfg)
+        )
         y = y.astype(x.dtype)
         n = leaf.packed.shape[-1]
     else:
@@ -84,14 +130,7 @@ def linear(
         n = w.shape[-1]
 
     if lora_leaf is not None and cfg.bitnet.lora_rank > 0:
-        x2l, _ = _flatten_x(x, lora_leaf["a"].shape[0])
-        y = y + lora_lib.apply(
-            lora_leaf,
-            x2l,
-            alpha=2.0 * cfg.bitnet.lora_rank,
-            weight_bits=cfg.bitnet.lora_bits,
-            act_bits=8,
-        ).astype(y.dtype)
+        y = _apply_lora(y, x, lora_leaf, cfg)
 
     if out_shape is not None:
         y = y.reshape(lead + tuple(out_shape))
@@ -100,14 +139,49 @@ def linear(
     return y
 
 
+def fused_linear(
+    leaf: FusedPackedLinear,
+    x: jax.Array,
+    cfg: ModelConfig,
+    out_shapes: Optional[tuple] = None,
+    lora_leaves: Optional[dict] = None,
+) -> tuple:
+    """Fused projection group: ONE act-quant + ONE packed matmul, split out.
+
+    ``leaf`` is a ``FusedPackedLinear`` (wq‖wk‖wv or gate‖up); returns one
+    array per segment. ``out_shapes``: optional per-segment trailing shapes
+    (e.g. ((H, hd), (G, hd), (G, hd))). ``lora_leaves``: {segment_index:
+    lora leaf} — adapters apply to the segment output after the split, so
+    LoRA'd projections (e.g. wv) fuse like any other.
+    """
+    x2, lead = _flatten_x(x, leaf.k)
+    y = bitlinear.packed_matmul(
+        leaf, x2, act_bits=cfg.bitnet.act_bits, impl=resolve_impl(cfg)
+    ).astype(x.dtype)
+    parts = []
+    off = 0
+    for i, w in enumerate(leaf.splits):
+        seg = jax.lax.slice_in_dim(y, off, off + w, axis=-1)
+        off += w
+        lora_leaf = (lora_leaves or {}).get(i)
+        if lora_leaf is not None and cfg.bitnet.lora_rank > 0:
+            seg = _apply_lora(seg, x, lora_leaf, cfg)
+        shape = out_shapes[i] if out_shapes and out_shapes[i] else (w,)
+        parts.append(seg.reshape(lead + tuple(shape)))
+    return tuple(parts)
+
+
 def expert_linear(leaf, x: jax.Array, cfg: ModelConfig, mode: str = "qat") -> jax.Array:
     """Per-expert linear: x (E, C, K) @ W (E, K, N) -> (E, C, N)."""
     if isinstance(leaf, PackedLinear):
+        # impl pinned to "xla": the expert GEMMs are vmapped over E, and a
+        # vmapped pallas_call has no batching rule on this jax version.
         fn = lambda px, xx: linear(  # noqa: E731
             PackedLinear(packed=px[0], scale=px[1], k=leaf.k, codec=leaf.codec),
             xx,
             cfg,
             mode,
+            impl="xla",
         )
         return jax.vmap(fn)((leaf.packed, leaf.scale), x)
     w = leaf["w"]

@@ -116,7 +116,10 @@ class Engine:
         sync_every: int = 8,
     ):
         self.cfg = cfg
-        # Freeze to ROM form once; never reloaded afterwards.
+        # Freeze to ROM form once (packed trits + fused wqkv/wgu projection
+        # groups, models/pack.py); never reloaded afterwards. The decode hot
+        # loop then runs the packed fast path (core/bitlinear.packed_matmul:
+        # Pallas fused-epilogue kernel on TPU via BitNetConfig.impl="auto").
         self.params = pack_lib.pack_params(params, cfg) if pack else params
         self.mode = "packed" if pack else "qat"
         self.hot_cap = hot_cap

@@ -15,6 +15,8 @@ from repro.core import packing
 from repro.core.ternary import act_quant, weight_quant_absmean
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.kernel_parity
+
 
 def _random_case(seed, m, k, n):
     kx, kw = jax.random.split(jax.random.PRNGKey(seed))

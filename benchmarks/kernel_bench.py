@@ -9,6 +9,11 @@ Sections (all emit ``name,us_per_call,derived`` rows):
     historical pad-M-to-256 baseline at decode shapes.
   * ``fused_epilogue`` — epilogue-fused kernel (scales applied in VMEM, no
     (M, N) int32 intermediate in HBM) vs raw kernel + separate XLA rescale.
+  * ``fused_prologue`` — two-phase act-quant-prologue kernel (raw bf16/f32
+    in, int8 quantization inside the kernel's phase-0 K sweep) vs the
+    separate act_quant + known-scale fused kernel, decode rows M ∈ {1,8,32}.
+  * ``expert_eloop`` — ONE E-loop launch over all experts (fused gate‖up)
+    vs E vmapped per-expert XLA launches, decode-ish capacities C ∈ {1,8,32}.
   * ``fused_projection`` — one fused wq‖wk‖wv launch vs three separate
     projections (falcon3-7b-ish dims), including act-quant.
   * ``packing_density`` / ``serving_token_rate`` — unchanged ledgers.
@@ -126,6 +131,64 @@ def fused_epilogue() -> list:
             f"kernel/fused_epilogue_m{m}", t_f,
             f"unfused_us={t_u:.1f} int32_hbm_intermediate_bytes=0 "
             f"(unfused={4*m*n}) impl={_note('pallas')}"))
+    return rows
+
+
+def fused_prologue() -> list:
+    """Act-quant prologue fusion: raw floats into the two-phase kernel vs
+    the separate act_quant pass + known-scale fused kernel. The eliminated
+    HBM traffic per call: one (M, K) int8 write + read."""
+    from repro.core.ternary import act_quant
+
+    rows = []
+    k, n, codec = 2048, 2048, "pack2"
+    packed = _random_packed(k, n, codec)
+    cs = jax.random.uniform(jax.random.PRNGKey(2), (n,)) + 0.5
+    for m in (1, 8, 32):
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+        fused = jax.jit(lambda xx: ops.ternary_matmul_actq(
+            xx, packed, cs, k=k, codec=codec, impl="pallas"))
+        two_pass = jax.jit(lambda xx: (lambda q: ops.ternary_matmul_fused(
+            q.xq, packed, q.scale, cs, k=k, codec=codec, impl="pallas"
+        ))(act_quant(xx)))
+        t_f = time_us(lambda: jax.block_until_ready(fused(x)),
+                      iters=_iters("pallas"))
+        t_u = time_us(lambda: jax.block_until_ready(two_pass(x)),
+                      iters=_iters("pallas"))
+        rows.append(row(
+            f"kernel/fused_prologue_m{m}", t_f,
+            f"two_pass_us={t_u:.1f} int8_hbm_intermediate_bytes=0 "
+            f"(two_pass={m*k}) impl={_note('pallas')}"))
+    return rows
+
+
+def expert_eloop() -> list:
+    """E-loop expert kernel: ONE launch over all experts (pack-time-fused
+    gate‖up, act-quant prologue) vs the vmapped per-expert XLA path —
+    decode-ish capacities on mixtral-ish expert dims (scaled down to keep
+    interpret-mode wall time bounded)."""
+    from repro.models.pack import _pack_weight, fuse_packed
+
+    rows = []
+    e, d, ff, codec = 4, 1024, 1024, "pack2"
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    w_g = jax.random.normal(keys[0], (e, d, ff)) * d**-0.5
+    w_u = jax.random.normal(keys[1], (e, d, ff)) * d**-0.5
+    fused_leaf = fuse_packed([_pack_weight(w_g, codec), _pack_weight(w_u, codec)])
+    for c in (1, 8, 32):
+        x = jax.random.normal(keys[2], (e, c, d))
+        f_one = jax.jit(lambda xx: bitlinear.expert_packed_matmul(
+            fused_leaf, xx, impl="pallas"))
+        f_vmap = jax.jit(lambda xx: bitlinear.expert_packed_matmul(
+            fused_leaf, xx, impl="xla"))
+        t_f = time_us(lambda: jax.block_until_ready(f_one(x)),
+                      iters=_iters("pallas"))
+        t_v = time_us(lambda: jax.block_until_ready(f_vmap(x)),
+                      iters=_iters("pallas"))
+        rows.append(row(
+            f"kernel/expert_eloop_c{c}", t_f,
+            f"vmapped_xla_us={t_v:.1f} launches=1_vs_{e} experts={e} "
+            f"impl={_note('pallas')}"))
     return rows
 
 

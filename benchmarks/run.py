@@ -49,6 +49,8 @@ def main() -> None:
         ("kernel/matmul", kernel_bench.ternary_matmul_shapes),
         ("kernel/decode_blocking", kernel_bench.decode_blocking),
         ("kernel/fused_epilogue", kernel_bench.fused_epilogue),
+        ("kernel/fused_prologue", kernel_bench.fused_prologue),
+        ("kernel/expert_eloop", kernel_bench.expert_eloop),
         ("kernel/fused_qkv", kernel_bench.fused_projection),
         ("serving", kernel_bench.serving_token_rate),
         ("serving/continuous", serving_bench.serving_throughput),

@@ -66,9 +66,15 @@ class BitNetConfig:
     # epilogue kernel on TPU (single-device) and the XLA unpack+dot path on
     # CPU / under GSPMD sharding hints; "pallas" / "xla" force a path.
     impl: str = "auto"
-    # fuse wq|wk|wv and gate|up into one packed projection at pack time
-    # (one act-quant + one kernel launch per group; see models/pack.py)
+    # fuse wq|wk|wv, gate|up, w_dq|w_dkv and per-expert w_gate|w_up into one
+    # packed projection at pack time (one act-quant + one kernel launch per
+    # group; see models/pack.py)
     fuse_proj: bool = True
+    # fuse the int8 act-quant (per-row absmax + scale) into the Pallas
+    # kernel prologue (two-phase K sweep; kernels/ternary_matmul.py) —
+    # False falls back to the separate act-quant + known-scale epilogue
+    # kernel. Ignored on the XLA impl (always separate, same numerics).
+    fuse_act_quant: bool = True
     lora_rank: int = 0  # 0 disables adapters
     lora_targets: Tuple[str, ...] = ("v", "o", "down")
     lora_bits: int = 6

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.core import lora as lora_lib
 from repro.core import packing
 from repro.core.ternary import (
+    QuantizedActivation,
     act_quant,
     fake_quant_linear,
     weight_quant_absmean,
@@ -115,25 +116,43 @@ def quantize_pack(params: dict, codec: str = "pack2") -> PackedLinear:
 
 def packed_matmul(
     pw,
-    x: jax.Array,
+    x,
     act_bits: int = 8,
     impl: str = "xla",
+    fuse_actq: bool = True,
 ) -> jax.Array:
     """The ONE packed ternary fast path: act-quant -> matmul -> rescale.
 
     Shared by every consumer (qops.linear, apply_packed, and through them
     the models, the serving engine and the LoRA add-on). ``pw`` is a
     ``PackedLinear`` (scalar absmean scale) or ``FusedPackedLinear``
-    (per-column scale); ``x`` is (..., K) float. Returns the *float32*
-    projection output (callers cast to the activation dtype). On the
-    Pallas path the rescale happens in the kernel epilogue (no (M, N)
-    int32 intermediate in HBM); the XLA path performs the numerically
-    identical dot + elementwise rescale.
+    (per-column scale); ``x`` is (..., K) raw float — or an already-
+    quantized ``QuantizedActivation`` when the producing op knows the
+    scale, which skips the absmax pass entirely (the carried-scale
+    fallback). Returns the *float32* projection output (callers cast to
+    the activation dtype).
+
+    Path selection on ``impl="pallas"``:
+      * raw ``x`` + ``fuse_actq`` (the default, ``BitNetConfig.
+        fuse_act_quant``) -> act-quant-PROLOGUE-fused kernel: the int8
+        quantization happens inside the kernel's phase-0 K sweep, so
+        neither the (M, K) int8 activations nor the (M, N) int32
+        accumulator ever exist in HBM — one launch goes raw bf16/f32 ->
+        scaled float out;
+      * ``QuantizedActivation`` x, or ``fuse_actq=False`` -> the known-
+        scale epilogue-fused kernel (act-quant as a separate XLA op).
+    The XLA impl always runs the separate quantize-then-matmul pipeline
+    (numerically identical ops; bit-exact against the fused prologue).
     """
     from repro.kernels import ops  # lazy: kernels depend on core.packing
 
-    xq = act_quant(x, bits=act_bits)
     scale = jnp.asarray(pw.scale, jnp.float32)
+    if impl == "pallas" and fuse_actq and not isinstance(x, QuantizedActivation):
+        col = jnp.broadcast_to(scale.reshape(-1), (pw.packed.shape[-1],))
+        return ops.ternary_matmul_actq(
+            x, pw.packed, col, k=pw.k, codec=pw.codec, act_bits=act_bits,
+        )
+    xq = x if isinstance(x, QuantizedActivation) else act_quant(x, bits=act_bits)
     if impl == "pallas":
         # the kernel wants an explicit (N,) per-column vector; the XLA path
         # keeps the scale's natural shape — a scalar scale must divide by
@@ -145,6 +164,49 @@ def packed_matmul(
         xq.xq, pw.packed, xq.scale, scale,
         k=pw.k, codec=pw.codec, impl=impl,
     )
+
+
+def expert_packed_matmul(
+    pw,
+    x: jax.Array,
+    act_bits: int = 8,
+    impl: str = "xla",
+    fuse_actq: bool = True,
+) -> jax.Array:
+    """Expert-batched packed fast path: x (E, C, K) @ packed (E, K/g, N).
+
+    On the Pallas path this is ONE E-loop kernel launch over all experts
+    (leading expert grid dimension, act-quant prologue fused) — the
+    ``pallas_call`` batching rule the vmapped per-expert path never had.
+    Everything else (XLA impl, ``fuse_actq=False``) runs the vmapped
+    per-expert ``packed_matmul`` on the XLA path, bit-identical numerics.
+    ``pw`` is an expert-stacked ``PackedLinear`` (scale (E,)) or
+    ``FusedPackedLinear`` (per-column scale (E, N), e.g. pack-time-fused
+    w_gate‖w_up). Returns (E, C, N) float32.
+    """
+    from repro.kernels import ops  # lazy: kernels depend on core.packing
+
+    if impl == "pallas" and fuse_actq:
+        scale = jnp.asarray(pw.scale, jnp.float32)
+        n = pw.packed.shape[-1]
+        if scale.ndim == 1:  # (E,) scalar absmean per expert -> per-column
+            scale = jnp.broadcast_to(scale[:, None], (scale.shape[0], n))
+        return ops.ternary_matmul_expert(
+            x, pw.packed, scale, k=pw.k, codec=pw.codec, act_bits=act_bits,
+        )
+
+    def one(packed_e, scale_e, x_e):
+        if isinstance(pw, FusedPackedLinear):
+            leaf = FusedPackedLinear(packed=packed_e, scale=scale_e, k=pw.k,
+                                     codec=pw.codec, splits=pw.splits)
+        else:
+            leaf = PackedLinear(packed=packed_e, scale=scale_e, k=pw.k,
+                                codec=pw.codec)
+        # impl pinned to "xla": a vmapped pallas_call has no batching rule
+        # on this jax version — the E-loop branch above is the Pallas path.
+        return packed_matmul(leaf, x_e, act_bits=act_bits, impl="xla")
+
+    return jax.vmap(one)(pw.packed, jnp.asarray(pw.scale, jnp.float32), x)
 
 
 def apply_packed(

@@ -37,15 +37,25 @@ block_n / block_k are additionally capped by the (padded) N / K of the
 operand and block_k is aligned down to the codec group (4 or 5 trits per
 byte).
 
-Fused epilogue
---------------
-``ternary_matmul_fused`` is the production entry point used by the model
-fast path (core/bitlinear.packed_matmul): it takes the per-row activation
-scale and per-column weight scale and returns the *scaled float* output in
-one kernel launch (Pallas) or one dot + one elementwise rescale (XLA
-fallback, numerically identical ops to the historical unfused path). The
-per-column weight scale is what makes fused QKV / gate-up projections
-(one launch for wq‖wk‖wv) exact: each segment keeps its own absmean scale.
+Fused epilogue / fused act-quant prologue
+-----------------------------------------
+``ternary_matmul_fused`` is the *known-scale* entry point: it takes already
+int8-quantized activations with their per-row scale and the per-column
+weight scale and returns the *scaled float* output in one kernel launch
+(Pallas) or one dot + one elementwise rescale (XLA fallback, numerically
+identical ops to the historical unfused path). The per-column weight scale
+is what makes fused QKV / gate-up projections (one launch for wq‖wk‖wv)
+exact: each segment keeps its own absmean scale.
+
+``ternary_matmul_actq`` is the production entry point
+(core/bitlinear.packed_matmul): it takes the RAW bf16/f32 activations and
+fuses the int8 act-quant (per-row absmax + scale) into the kernel prologue
+via the two-phase grid, so neither the int8 activations nor the int32
+accumulator ever exist in HBM. ``ternary_matmul_expert`` is its E-loop
+variant for expert-batched MoE weights (E, K/g, N): ONE launch with a
+leading expert grid dimension replaces E vmapped per-expert launches
+(which were impossible on the Pallas path anyway — ``pallas_call`` has no
+batching rule on this jax version, so the vmapped path was pinned to XLA).
 """
 
 from __future__ import annotations
@@ -57,6 +67,7 @@ import jax.numpy as jnp
 
 from repro.core import packing
 from repro.kernels.ternary_matmul import (
+    ternary_matmul_actq_pallas,
     ternary_matmul_fused_pallas,
     ternary_matmul_pallas,
 )
@@ -66,27 +77,57 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-# Static block table: (max_m, block_m, block_n, block_k). See module doc.
-_BLOCK_TABLE = (
-    (32, 32, 512, 1024),
-    (64, 64, 256, 512),
-    (128, 128, 256, 512),
-    (None, 256, 256, 512),
-)
+# Static block tables, keyed by grid kind: (max_m, block_m, block_n, block_k).
+#
+#   * "fused"  — the known-scale int8 grids (raw + epilogue-fused kernels);
+#     see the module doc for the decode/prefill regime rationale.
+#   * "actq"   — the two-phase act-quant-prologue grid. The x tile streams
+#     RAW bf16/f32 (2-4 bytes/elem instead of int8) and is read twice
+#     (absmax sweep + quantized accumulate), so the decode row halves
+#     block_k (1024 -> 512) to keep the double-buffered VMEM footprint at
+#     the known-scale level; prefill tiers keep the MXU-aligned 256/256/512.
+#   * "expert" — the E-loop grid. Identical per-step footprint, but the
+#     leading E dimension multiplies the number of streamed weight tiles,
+#     so the decode row narrows block_n (512 -> 256) to shorten each
+#     expert's pipeline ramp (capacity C is usually small: C ~ tokens *
+#     top_k / E, frequently < 32 rows per expert at decode).
+_BLOCK_TABLES = {
+    "fused": (
+        (32, 32, 512, 1024),
+        (64, 64, 256, 512),
+        (128, 128, 256, 512),
+        (None, 256, 256, 512),
+    ),
+    "actq": (
+        (32, 32, 512, 512),
+        (64, 64, 256, 512),
+        (128, 128, 256, 512),
+        (None, 256, 256, 512),
+    ),
+    "expert": (
+        (32, 32, 256, 512),
+        (64, 64, 256, 512),
+        (128, 128, 256, 512),
+        (None, 256, 256, 512),
+    ),
+}
 
 
-def select_blocks(m: int, n: int, k: int, codec: str) -> tuple:
+def select_blocks(m: int, n: int, k: int, codec: str, kind: str = "fused") -> tuple:
     """(M, N, K) -> (block_m, block_n, block_k) from the static table.
 
-    Caps block_n / block_k at the padded operand extent and aligns block_k
-    to the codec group so a block never spans a partial packed byte. For
-    pack243 the group (5) is coprime with the 128-lane tile, so block_k
-    additionally snaps to multiples of lcm(5, 128) = 640 whenever K allows
-    — otherwise the (bm, bk) x tile and (bk/5, bn) packed tile would be
-    lane-misaligned on real TPU (interpret mode doesn't care, Mosaic does).
+    ``kind`` picks the grid's table: "fused" (known-scale int8 grids),
+    "actq" (two-phase act-quant prologue) or "expert" (E-loop MoE grid) —
+    see the table comment for how the rows differ. Caps block_n / block_k
+    at the padded operand extent and aligns block_k to the codec group so
+    a block never spans a partial packed byte. For pack243 the group (5)
+    is coprime with the 128-lane tile, so block_k additionally snaps to
+    multiples of lcm(5, 128) = 640 whenever K allows — otherwise the
+    (bm, bk) x tile and (bk/5, bn) packed tile would be lane-misaligned on
+    real TPU (interpret mode doesn't care, Mosaic does).
     """
     group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
-    for max_m, bm, bn, bk in _BLOCK_TABLE:
+    for max_m, bm, bn, bk in _BLOCK_TABLES[kind]:
         if max_m is None or m <= max_m:
             break
     bn = min(bn, _round_up(max(n, 1), 128))
@@ -136,20 +177,35 @@ def _pad_operands(xq, packed, codec, block_m, block_n, block_k):
     x2 = jnp.pad(
         x2, ((0, mp - m), (0, kpp - xq.shape[-1]))
     )  # pad K with zero activations
-    wp = jnp.pad(packed, ((0, kpp // group - packed.shape[0]), (0, np_ - n)))
-    if codec == "pack243" and (kpp // group > packed.shape[0] or np_ > n):
-        # byte 0 decodes to trits (-1,-1,-1,-1,-1) under pack243; rewrite
-        # padded bytes to the all-zero-trit code 121 = sum((0+1) * 3^i).
-        zero_code = 121
-        mask_r = jnp.arange(kpp // group) >= packed.shape[0]
-        mask_c = jnp.arange(np_) >= n
-        mask = mask_r[:, None] | mask_c[None, :]
-        wp = jnp.where(mask, jnp.uint8(zero_code), wp)
+    wp = _pad_packed(packed, kpp // group, np_, codec)
     return x2, wp, lead, m, n
 
 
-def _resolve_blocks(m, n, k, codec, block_m, block_n, block_k):
-    auto = select_blocks(m, n, k, codec)
+def _pad_packed(packed, rows: int, cols: int, codec: str):
+    """Zero-pad a packed array to (…, rows, cols) and repair the padding
+    to the codec's all-zero-trit code.
+
+    byte 0 decodes to trits (-1,-1,-1,-1,-1) under pack243; rewrite padded
+    bytes to the all-zero-trit code 121 = sum((0+1) * 3^i). The repair is
+    only ever needed for pack243, for *either* K-row or N-column padding;
+    pack2's zero code is 0x00, which jnp.pad already produces. Works for
+    2-D (K/g, N) and expert-stacked 3-D (E, K/g, N) packed arrays (leading
+    dims pass through; the repair mask broadcasts over them).
+    """
+    valid_rows, valid_cols = packed.shape[-2], packed.shape[-1]
+    pad = ((0, 0),) * (packed.ndim - 2) + (
+        (0, rows - valid_rows), (0, cols - valid_cols))
+    wp = jnp.pad(packed, pad)
+    if codec != "pack243" or (rows == valid_rows and cols == valid_cols):
+        return wp
+    mask_r = jnp.arange(rows) >= valid_rows
+    mask_c = jnp.arange(cols) >= valid_cols
+    mask = mask_r[:, None] | mask_c[None, :]
+    return jnp.where(mask, jnp.uint8(121), wp)
+
+
+def _resolve_blocks(m, n, k, codec, block_m, block_n, block_k, kind="fused"):
+    auto = select_blocks(m, n, k, codec, kind=kind)
     bm = block_m if block_m is not None else auto[0]
     bn = block_n if block_n is not None else auto[1]
     bk = block_k if block_k is not None else auto[2]
@@ -257,3 +313,134 @@ def ternary_matmul_fused(
         out_dtype=out_dtype, interpret=interpret,
     )
     return out[:m, :n].reshape(lead + (n,))
+
+
+def _actq_xla(x, packed, col_scale, k, codec, act_bits, out_dtype):
+    """Quantize-then-matmul reference path: separate act-quant + dot +
+    rescale, numerically identical ops to the fused prologue."""
+    from repro.core.ternary import act_quant
+
+    q = act_quant(x, bits=act_bits)
+    acc = _xla_path(q.xq, packed, k, codec)
+    y = acc.astype(jnp.float32) * (col_scale / q.scale)
+    return y.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "codec", "act_bits", "impl", "out_dtype",
+                     "block_m", "block_n", "block_k"),
+)
+def ternary_matmul_actq(
+    x: jax.Array,
+    packed: jax.Array,
+    col_scale: jax.Array,
+    *,
+    k: int,
+    codec: str = "pack2",
+    act_bits: int = 8,
+    impl: str = "pallas",
+    out_dtype=jnp.float32,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """Act-quant-prologue-fused ternary matmul: RAW float (..., K) -> (..., N).
+
+    The production fast path: per-row absmax int8 quantization happens in
+    the kernel prologue (two-phase grid, see ternary_matmul.py), so no
+    (M, K) int8 intermediate and no (M, N) int32 accumulator ever touch
+    HBM. ``col_scale``: (N,) f32 per-column weight scale. The XLA fallback
+    runs the separate quantize-then-matmul pipeline with numerically
+    identical ops.
+    """
+    n = packed.shape[1]
+    if impl == "xla":
+        return _actq_xla(x, packed, col_scale, k, codec, act_bits, out_dtype)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    bm, bn, bk = _resolve_blocks(
+        m, n, packed.shape[0] * group, codec, block_m, block_n, block_k,
+        kind="actq",
+    )
+    x2, wp, lead, m, n = _pad_operands(x, packed, codec, bm, bn, bk)
+    ws = jnp.pad(
+        col_scale.reshape(1, n).astype(jnp.float32),
+        ((0, 0), (0, wp.shape[1] - n)),
+    )
+
+    interpret = jax.default_backend() == "cpu"
+    out = ternary_matmul_actq_pallas(
+        x2[None], wp[None], ws[None], codec=codec, act_bits=act_bits,
+        block_m=bm, block_n=bn, block_k=bk, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[0, :m, :n].reshape(lead + (n,))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "codec", "act_bits", "impl", "out_dtype",
+                     "block_m", "block_n", "block_k"),
+)
+def ternary_matmul_expert(
+    x: jax.Array,
+    packed: jax.Array,
+    col_scale: jax.Array,
+    *,
+    k: int,
+    codec: str = "pack2",
+    act_bits: int = 8,
+    impl: str = "pallas",
+    out_dtype=jnp.float32,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """E-loop expert matmul: raw (E, C, K) float x packed (E, K/g, N) ->
+    (E, C, N) float, act-quant prologue + epilogue fused.
+
+    ONE kernel launch covers every expert (leading expert grid dimension)
+    instead of E vmapped per-expert launches — the ``pallas_call`` batching
+    rule the vmapped path lacked. ``col_scale``: (E, N) f32 per-column
+    weight scale (an expert's scalar absmean repeated, or per-segment
+    scales for pack-time-fused gate‖up). The XLA fallback vmaps the
+    separate quantize-then-matmul pipeline per expert.
+    """
+    e, c, _ = x.shape
+    ep, kp, n = packed.shape
+    assert ep == e, (ep, e)
+    assert col_scale.shape == (e, n), (col_scale.shape, e, n)
+    if impl == "xla":
+        return jax.vmap(
+            lambda xx, pp, ss: _actq_xla(xx, pp, ss, k, codec, act_bits,
+                                         out_dtype)
+        )(x, packed, col_scale)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    bm, bn, bk = _resolve_blocks(
+        c, n, kp * group, codec, block_m, block_n, block_k, kind="expert"
+    )
+    mp = _round_up(max(c, 1), bm)
+    np_ = _round_up(n, bn)
+    kpp = _round_up(kp * group, bk)
+    x2 = jnp.pad(x, ((0, 0), (0, mp - c), (0, kpp - x.shape[-1])))
+    wp = _pad_packed(packed, kpp // group, np_, codec)
+    ws = jnp.pad(
+        col_scale.astype(jnp.float32), ((0, 0), (0, np_ - n))
+    )[:, None, :]
+
+    interpret = jax.default_backend() == "cpu"
+    out = ternary_matmul_actq_pallas(
+        x2, wp, ws, codec=codec, act_bits=act_bits,
+        block_m=bm, block_n=bn, block_k=bk, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[:, :c, :n]

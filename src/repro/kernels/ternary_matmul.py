@@ -21,11 +21,11 @@ sized so the packed rows stay lane-aligned). VMEM footprint per step:
   + decoded (bk, bn) int8 + acc (bm, bn) int32
 e.g. bm=bn=256, bk=512 (pack2): 128K + 32K + 128K + 256K = 544 KiB << 16 MiB VMEM.
 
-Two entry points:
+Three entry points:
 
   * ``ternary_matmul_pallas`` — raw int32 accumulator out (kept for the
     bit-exactness oracle tests and as the building block);
-  * ``ternary_matmul_fused_pallas`` — the production fast path: the same
+  * ``ternary_matmul_fused_pallas`` — the *known-scale* fast path: the same
     integer pipeline plus a *fused epilogue*. The int32 local accumulator
     lives in VMEM scratch; on the final K step it is rescaled in VMEM by
     the per-column weight scale and per-row activation scale and written
@@ -35,6 +35,20 @@ Two entry points:
     (rather than per-tensor) weight scales are what lets fused QKV /
     gate-up projections (models/pack.py::fuse_packed) ride the same
     kernel: each output segment keeps its own absmean scale.
+  * ``ternary_matmul_actq_pallas`` — the production fast path: epilogue
+    fusion PLUS a *fused act-quant prologue*. The kernel consumes RAW
+    bf16/f32 activations; a two-phase grid first sweeps K accumulating the
+    per-row absmax into VMEM scratch (phase 0), converts it to the int8
+    scale on the last phase-0 step, then re-streams the K tiles and runs
+    the quantized int8 x ternary accumulate (phase 1) with the epilogue
+    rescale on its final step. The separate XLA act-quant pass — one HBM
+    read of the bf16 activations plus a write AND re-read of the (M, K)
+    int8 intermediate per projection — disappears entirely; the int8
+    activations only ever exist in VMEM, mirroring BitROM's fully-fused
+    CiROM datapath where the quantizer sits in front of the ROM read
+    pipeline. A leading batch grid dimension makes the same kernel the
+    E-loop *expert* kernel: one launch covers all E experts of an MoE
+    layer (grid (E, gm, gn, 2, gk)) instead of E vmapped launches.
 """
 
 from __future__ import annotations
@@ -47,6 +61,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import packing
+from repro.core.ternary import EPS
 
 
 def _decode2_block(wp: jax.Array) -> jax.Array:
@@ -210,3 +225,142 @@ def ternary_matmul_fused_pallas(
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
         interpret=interpret,
     )(xq, packed, x_scale.astype(jnp.float32), col_scale.astype(jnp.float32))
+
+
+def _actq_kernel(x_ref, w_ref, ws_ref, o_ref, scale_ref, acc_ref, *,
+                 codec: str, k_steps: int, qmax: float, qmin: float):
+    """Two-phase body: absmax K-sweep (phase 0), quantized accumulate +
+    epilogue (phase 1).
+
+    Grid is (B, gm, gn, 2, gk); ``scale_ref`` is (bm, 1) f32 VMEM scratch
+    that holds the running per-row absmax during phase 0 and the finished
+    int8 scale (``qmax / max(absmax, EPS)`` — the exact ``act_quant``
+    rule) from the last phase-0 step onward. Scratch persists across grid
+    steps, so the absmax sweep runs ONCE per row tile — at j == 0 — and
+    every later output-column tile j > 0 reuses the finished scale (its
+    phase-0 steps are no-ops with the x BlockSpec parked, see the entry
+    point). Quantization happens on the re-streamed raw tile in phase 1,
+    so the int8 activations never exist outside VMEM. Zero-padded rows
+    quantize to all-zero int8 rows (absmax 0 -> huge scale ->
+    round(0 * scale) = 0), so no separate pad-scale repair is needed.
+    """
+    j = pl.program_id(2)
+    p = pl.program_id(3)
+    kk = pl.program_id(4)
+    sweep = (p == 0) & (j == 0)
+
+    @pl.when(sweep & (kk == 0))
+    def _init_absmax():
+        scale_ref[...] = jnp.zeros_like(scale_ref)
+
+    @pl.when(sweep)
+    def _absmax_sweep():
+        x = x_ref[0].astype(jnp.float32)
+        scale_ref[...] = jnp.maximum(
+            scale_ref[...], jnp.max(jnp.abs(x), axis=1, keepdims=True)
+        )
+
+    @pl.when(sweep & (kk == k_steps - 1))
+    def _finalize_scale():
+        # act_quant convention: scale = qmax / max(absmax, EPS); dequant
+        # divides by it, so the epilogue below divides too.
+        scale_ref[...] = qmax / jnp.maximum(scale_ref[...], EPS)
+
+    @pl.when((p == 1) & (kk == 0))
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(p == 1)
+    def _quantized_accumulate():
+        x = x_ref[0].astype(jnp.float32)
+        xq = jnp.clip(jnp.round(x * scale_ref[...]), qmin, qmax).astype(jnp.int8)
+        decode = _decode2_block if codec == "pack2" else _decode243_block
+        trits = decode(w_ref[0])  # (bk, bn) int8 in {-1,0,+1}
+        acc_ref[...] += jax.lax.dot_general(
+            xq,
+            trits,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+    @pl.when((p == 1) & (kk == k_steps - 1))
+    def _epilogue():
+        y = acc_ref[...].astype(jnp.float32) * (ws_ref[0] / scale_ref[...])
+        o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codec", "act_bits", "block_m", "block_n", "block_k",
+                     "out_dtype", "interpret"),
+)
+def ternary_matmul_actq_pallas(
+    x: jax.Array,
+    packed: jax.Array,
+    col_scale: jax.Array,
+    *,
+    codec: str = "pack2",
+    act_bits: int = 8,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B, M, K) raw float x packed (B, K/g, N) uint8 -> (B, M, N) float.
+
+    Act-quant-prologue + epilogue fused (see module docstring). ``x`` is the
+    RAW bf16/f32 activation (already zero-padded to block multiples —
+    ops.py handles padding); ``col_scale`` is (B, 1, N) f32 per-column
+    weight scale. B = 1 for ordinary projections; B = E runs the E-loop
+    expert grid (one launch over all experts, each with its own packed
+    weights and column scales).
+    """
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    assert block_k % group == 0, (block_k, group)
+    b, m, k = x.shape
+    bb, kp, n = packed.shape
+    assert bb == b and kp * group == k, (bb, b, kp, group, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (m, n, k)
+    assert col_scale.shape == (b, 1, n), col_scale.shape
+    if act_bits == 8:
+        qmax, qmin = 127.0, -128.0
+    elif act_bits == 4:
+        qmax, qmin = 7.0, -8.0
+    else:  # mirror act_quant so pallas and xla reject identically
+        raise ValueError(f"unsupported activation bits: {act_bits}")
+
+    grid = (b, m // block_m, n // block_n, 2, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_actq_kernel, codec=codec, k_steps=grid[4],
+                          qmax=qmax, qmin=qmin),
+        grid=grid,
+        in_specs=[
+            # x streams its K blocks only when the step does real work:
+            # phase 1 (quantized accumulate) and the single absmax sweep
+            # (phase 0 at j == 0). All other phase-0 steps park on block
+            # (b, i, 0) — the pipeline elides copies when consecutive
+            # steps map to the same block — so the raw activations cross
+            # HBM gn+1 times, not 2*gn.
+            pl.BlockSpec(
+                (1, block_m, block_k),
+                lambda b, i, j, p, kk: (
+                    b, i, jnp.where((p == 1) | (j == 0), kk, 0)
+                ),
+            ),
+            # same trick for the packed weights, parked during ALL of
+            # phase 0: the trits stream through HBM once (phase 1), not
+            # twice — the absmax sweep only ever reads x.
+            pl.BlockSpec((1, block_k // group, block_n),
+                         lambda b, i, j, p, kk: (b, kk * p, j)),
+            pl.BlockSpec((1, 1, block_n), lambda b, i, j, p, kk: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda b, i, j, p, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, 1), jnp.float32),
+            pltpu.VMEM((block_m, block_n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, packed, col_scale.astype(jnp.float32))

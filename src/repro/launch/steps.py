@@ -57,7 +57,8 @@ def param_specs(cfg: ModelConfig, packed: bool):
         # fuse=False: the multi-pod lowering shards per-projection leaves by
         # name (launch/sharding.py) and runs the XLA packed path anyway
         # (qops.resolve_impl returns "xla" under sharding hints); the fused
-        # wqkv/wgu fast path is the single-device TPU serving feature.
+        # wqkv/wgu/w_dqkv/w_gu fast path is the single-device TPU serving
+        # feature (see models/pack.py::pack_params).
         return pack_lib.pack_params(p, cfg, fuse=False) if packed else p
 
     return jax.eval_shape(build, jax.random.PRNGKey(0))

@@ -269,28 +269,44 @@ def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
     return p
 
 
-def _mla_queries(p, hidden, cfg: ModelConfig, mode, positions):
-    """-> q_nope (b,t,h,dn), q_rope (b,t,h,dr) with RoPE applied.
+def _mla_down(p, hidden, cfg: ModelConfig, mode):
+    """Both MLA down-projections of the shared hidden: -> (dq, dkv).
+
+    With the pack-time-fused leaf (models/pack.py: w_dq‖w_dkv ->
+    "w_dqkv") this is ONE act-quant + ONE kernel launch; the per-branch
+    norms (q_ln on dq, kv_ln on the latent half of dkv) interleave AFTER
+    the split, in ``_mla_queries`` / ``_mla_latent``, so fused == separate
+    bit-for-bit.
+    """
+    if "w_dqkv" in p:
+        return qops.fused_linear(p["w_dqkv"], hidden, cfg)
+    return (
+        qops.linear(p["w_dq"], hidden, cfg, mode),
+        qops.linear(p["w_dkv"], hidden, cfg, mode),
+    )
+
+
+def _mla_queries(p, dq, cfg: ModelConfig, mode, positions):
+    """dq (b,t,q_rank) -> q_nope (b,t,h,dn), q_rope (b,t,h,dr) with RoPE.
 
     ``positions`` is batch-broadcastable: (1, s) for a shared full
     sequence, (b, 1) for per-slot decode positions.
     """
     m, h = cfg.mla, cfg.n_heads
     qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
-    cq = rms_norm(qops.linear(p["w_dq"], hidden, cfg, mode), p["q_ln"], cfg.norm_eps)
+    cq = rms_norm(dq, p["q_ln"], cfg.norm_eps)
     q = qops.linear(p["w_uq"], cq, cfg, mode, out_shape=(h, qk_head))
     q_nope = q[..., : m.qk_nope_head_dim]
     q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
     return q_nope, q_rope
 
 
-def _mla_latent(p, hidden, cfg: ModelConfig, mode, positions):
-    """-> latent c_kv (b,t,dl) [normed], k_rope (b,t,dr) with RoPE.
+def _mla_latent(p, dkv, cfg: ModelConfig, positions):
+    """dkv (b,t,dl+dr) -> latent c_kv (b,t,dl) [normed], k_rope with RoPE.
 
     ``positions`` is batch-broadcastable, as in ``_mla_queries``.
     """
     m = cfg.mla
-    dkv = qops.linear(p["w_dkv"], hidden, cfg, mode)
     c_kv = rms_norm(dkv[..., : m.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
     k_rope = apply_rope(
         dkv[..., m.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta
@@ -303,8 +319,9 @@ def mla_full(p, x, cfg: ModelConfig, mode, positions, *, return_kv: bool = False
     m, h = cfg.mla, cfg.n_heads
     b, s, _ = x.shape
     hidden = rms_norm(x, p["ln"], cfg.norm_eps)
-    q_nope, q_rope = _mla_queries(p, hidden, cfg, mode, positions[None])
-    c_kv, k_rope = _mla_latent(p, hidden, cfg, mode, positions[None])
+    dq, dkv = _mla_down(p, hidden, cfg, mode)
+    q_nope, q_rope = _mla_queries(p, dq, cfg, mode, positions[None])
+    c_kv, k_rope = _mla_latent(p, dkv, cfg, positions[None])
     k_nope = qops.linear(p["w_uk"], c_kv, cfg, mode, out_shape=(h, m.qk_nope_head_dim))
     v = qops.linear(
         p["w_uv"], c_kv, cfg, mode, out_shape=(h, m.v_head_dim), lora_leaf=p.get("lora_v")
@@ -338,8 +355,9 @@ def mla_decode(p, x, cfg: ModelConfig, mode, cache: kvc.TieredKVCache,
     b, _ = x.shape
     hidden = rms_norm(x[:, None, :], p["ln"], cfg.norm_eps)
     pos = cache.lengths[:, None]  # (b, 1)
-    q_nope, q_rope = _mla_queries(p, hidden, cfg, mode, pos)  # (b,1,h,·)
-    c_kv, k_rope = _mla_latent(p, hidden, cfg, mode, pos)
+    dq, dkv = _mla_down(p, hidden, cfg, mode)
+    q_nope, q_rope = _mla_queries(p, dq, cfg, mode, pos)  # (b,1,h,·)
+    c_kv, k_rope = _mla_latent(p, dkv, cfg, pos)
     lat_new = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0]  # (b, dl+dr)
     cache = kvc.append_decode(cache, lat_new, jnp.zeros((b, 0), lat_new.dtype),
                               active=active)

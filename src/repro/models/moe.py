@@ -59,10 +59,14 @@ def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
     return max(min(c, n_tokens), 1)
 
 
-def _route_tokens(p: dict, h: jax.Array, cfg: ModelConfig, mode: str, cap: int):
+def _route_tokens(p: dict, h: jax.Array, cfg: ModelConfig, mode: str, cap: int,
+                  impl: str | None = None):
     """Dispatch+compute+combine for one token group. h: (T, d).
 
     Returns (y (T, d) f32, probs (T, E) f32, top1 one-hot (T, E)).
+    ``impl`` pins the expert-GEMM execution path — the grouped-dispatch
+    caller runs this function under ``jax.vmap``, where the E-loop
+    pallas_call cannot appear, so it pins "xla".
     """
     mo = cfg.moe
     n_tok, d = h.shape
@@ -79,10 +83,15 @@ def _route_tokens(p: dict, h: jax.Array, cfg: ModelConfig, mode: str, cap: int):
     if shard_ctx.has_expert_axes():
         xe = shard_ctx.constrain(xe, "EXPERT", None, None)
 
-    g = qops.expert_linear(p["w_gate"], xe, cfg, mode)
-    u = qops.expert_linear(p["w_up"], xe, cfg, mode)
+    if "w_gu" in p:
+        # pack-time-fused per-expert gate‖up (models/pack.py::fuse_packed):
+        # one E-loop launch serves all experts and both GLU halves.
+        g, u = qops.expert_fused_linear(p["w_gu"], xe, cfg, impl=impl)
+    else:
+        g = qops.expert_linear(p["w_gate"], xe, cfg, mode, impl=impl)
+        u = qops.expert_linear(p["w_up"], xe, cfg, mode, impl=impl)
     a = jax.nn.silu(g) * u
-    ye = qops.expert_linear(p["w_down"], a, cfg, mode)  # (E, C, d)
+    ye = qops.expert_linear(p["w_down"], a, cfg, mode, impl=impl)  # (E, C, d)
     if shard_ctx.has_expert_axes():
         ye = shard_ctx.constrain(ye, "EXPERT", None, None)
 
@@ -112,7 +121,7 @@ def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig, mode: str):
         hg = shard_ctx.constrain(hg, "BATCH", None, None)
         cap = _capacity(hg.shape[1], cfg)
         yg, probs, top1 = jax.vmap(
-            lambda hh: _route_tokens(p, hh, cfg, mode, cap)
+            lambda hh: _route_tokens(p, hh, cfg, mode, cap, impl="xla")
         )(hg)
         yg = shard_ctx.constrain(yg, "BATCH", None, None)
         y = yg.reshape(b * t, d)

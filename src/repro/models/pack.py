@@ -9,10 +9,20 @@ after it, inference never touches a float weight for these projections.
 A second pass (``cfg.bitnet.fuse_proj``, on by default) merges sibling
 projections that consume the same input into one ``FusedPackedLinear``
 via ``fuse_packed``: wq‖wk‖wv -> "wqkv", gate‖up -> "wgu",
-shared_gate‖shared_up -> "shared_gu". One act-quant + one kernel launch
+shared_gate‖shared_up -> "shared_gu", MLA w_dq‖w_dkv -> "w_dqkv" (the
+per-branch norms q_ln / kv_ln apply to the segments *after* the split, so
+the shared-input projection itself fuses cleanly), and per-expert
+w_gate‖w_up -> "w_gu" (expert-stacked: the leading E dim passes through
+the codec and the fused leaf feeds the E-loop expert kernel — one launch
+over all experts AND both GLU halves). One act-quant + one kernel launch
 then serves the whole group, and the in-VMEM trit decode of each K tile is
 amortized across 3x (resp. 2x) more output columns. Segment scales stay
 exact: the fused leaf carries a per-column scale vector.
+
+Callers consume fused leaves by name ("wqkv" in attention._project_qkv,
+"wgu" in layers.apply_mlp, "w_dqkv"/"w_gu"/"shared_gu" in attention/moe);
+trees packed with ``fuse=False`` keep the original per-projection names —
+that is what the launch/dry-run path relies on (see ``pack_params``).
 
 Not packed (and why):
   * embed / lm_head / frontend — BitNet keeps them high-precision;
@@ -22,9 +32,10 @@ Not packed (and why):
   * norms / conv / SSM scalars / LoRA (LoRA is SRAM, 6-bit, by design).
 
 Not fused (and why):
-  * expert weights (E, K, N) — dispatched through vmapped expert GEMMs;
-  * MLA down-projections (w_dq / w_dkv share an input but interleave with
-    per-branch norms) — candidate for a later PR.
+  * w_down / shared_down / wo / out_proj — they consume a *different*
+    input (the GLU product / attention context), so there is no shared
+    act-quant to amortize and nothing to concatenate along N;
+  * w_uq — consumes the q_ln-normed dq segment, not the shared hidden.
 """
 
 from __future__ import annotations
@@ -74,6 +85,12 @@ FUSE_GROUPS = (
     (("wq", "wk", "wv"), "wqkv"),
     (("gate", "up"), "wgu"),
     (("shared_gate", "shared_up"), "shared_gu"),
+    # MLA down-projections: both consume the attention-ln hidden; the
+    # interleaved per-branch norms (q_ln / kv_ln) apply post-split.
+    (("w_dq", "w_dkv"), "w_dqkv"),
+    # expert-stacked (E, ...) leaves: fuse_packed passes the leading E dim
+    # through; the fused leaf runs on the E-loop expert kernel.
+    (("w_gate", "w_up"), "w_gu"),
 )
 
 
@@ -123,8 +140,21 @@ def pack_params(params, cfg: ModelConfig, codec: str | None = None,
                 fuse: bool | None = None):
     """Convert a QAT parameter tree to the packed-inference tree.
 
+    Inputs: a (possibly nested) dict tree whose quantizable projection
+    leaves are ``{"w": float (..., K, N)}`` under the names in
+    ``PACK_KEYS``. Output: the same tree with those leaves replaced by
+    ``PackedLinear`` (and, when ``fuse``, sibling groups collapsed into
+    ``FusedPackedLinear`` under the fused names in ``FUSE_GROUPS``); all
+    other leaves pass through untouched.
+
     ``fuse`` (default: ``cfg.bitnet.fuse_proj``) controls the fused-
-    projection pass (wqkv / wgu / shared_gu); see the module docstring.
+    projection pass (wqkv / wgu / shared_gu / w_dqkv / w_gu); see the
+    module docstring. The launch/dry-run path packs with ``fuse=False``
+    on purpose: its GSPMD sharding rules are keyed on the ORIGINAL
+    per-projection names (launch/sharding.py), and a hand-written fused
+    kernel would block GSPMD propagation — sharded lowering runs the XLA
+    impl over unfused leaves. Do not flip that default without mirroring
+    the fused names into the sharding-rule table.
     """
     from repro.core.bitlinear import quantize_int8
 

@@ -17,9 +17,11 @@ applied uniformly:
 
 Weights are always stored contraction-first (K, N) — inputs with multiple
 contracted dims are flattened to (..., K) — so the packed codecs and the
-Pallas kernel apply everywhere. Expert-batched weights (E, K, N) vmap the
-same primitive per expert (per-expert absmean scale, as the paper's
-per-macro scaling suggests).
+Pallas kernel apply everywhere. Expert-batched weights (E, K, N) run as a
+single E-loop Pallas launch when packed (``expert_linear`` /
+``expert_fused_linear`` via ``bitlinear.expert_packed_matmul``; per-expert
+absmean scale, as the paper's per-macro scaling suggests) and vmap the
+same primitive per expert otherwise.
 """
 
 from __future__ import annotations
@@ -110,7 +112,8 @@ def linear(
     if isinstance(leaf, (PackedLinear, FusedPackedLinear)):
         x2, lead = _flatten_x(x, leaf.k)
         y = bitlinear.packed_matmul(
-            leaf, x2, act_bits=act_bits, impl=impl or resolve_impl(cfg)
+            leaf, x2, act_bits=act_bits, impl=impl or resolve_impl(cfg),
+            fuse_actq=cfg.bitnet.fuse_act_quant,
         )
         y = y.astype(x.dtype)
         n = leaf.packed.shape[-1]
@@ -156,7 +159,8 @@ def fused_linear(
     """
     x2, lead = _flatten_x(x, leaf.k)
     y = bitlinear.packed_matmul(
-        leaf, x2, act_bits=cfg.bitnet.act_bits, impl=resolve_impl(cfg)
+        leaf, x2, act_bits=cfg.bitnet.act_bits, impl=resolve_impl(cfg),
+        fuse_actq=cfg.bitnet.fuse_act_quant,
     ).astype(x.dtype)
     parts = []
     off = 0
@@ -171,19 +175,22 @@ def fused_linear(
     return tuple(parts)
 
 
-def expert_linear(leaf, x: jax.Array, cfg: ModelConfig, mode: str = "qat") -> jax.Array:
-    """Per-expert linear: x (E, C, K) @ W (E, K, N) -> (E, C, N)."""
-    if isinstance(leaf, PackedLinear):
-        # impl pinned to "xla": the expert GEMMs are vmapped over E, and a
-        # vmapped pallas_call has no batching rule on this jax version.
-        fn = lambda px, xx: linear(  # noqa: E731
-            PackedLinear(packed=px[0], scale=px[1], k=leaf.k, codec=leaf.codec),
-            xx,
-            cfg,
-            mode,
-            impl="xla",
-        )
-        return jax.vmap(fn)((leaf.packed, leaf.scale), x)
+def expert_linear(leaf, x: jax.Array, cfg: ModelConfig, mode: str = "qat",
+                  impl: Optional[str] = None) -> jax.Array:
+    """Per-expert linear: x (E, C, K) @ W (E, K, N) -> (E, C, N).
+
+    Packed leaves route through ``bitlinear.expert_packed_matmul``: ONE
+    E-loop Pallas launch over all experts (act-quant prologue fused) when
+    the resolved impl is "pallas", else the vmapped per-expert XLA path.
+    ``impl`` overrides the config-resolved path (the grouped-dispatch MoE
+    branch runs under ``jax.vmap``, where a pallas_call cannot appear).
+    """
+    if isinstance(leaf, (PackedLinear, FusedPackedLinear)):
+        return bitlinear.expert_packed_matmul(
+            leaf, x, act_bits=cfg.bitnet.act_bits,
+            impl=impl or resolve_impl(cfg),
+            fuse_actq=cfg.bitnet.fuse_act_quant,
+        ).astype(x.dtype)
     w = leaf["w"]
     if mode == "qat":
         from repro.models import shard_ctx
@@ -195,6 +202,28 @@ def expert_linear(leaf, x: jax.Array, cfg: ModelConfig, mode: str = "qat") -> ja
         if shard_ctx.has_expert_axes() and w.ndim == 3:
             w = shard_ctx.constrain(w, "EXPERT", None, None)
     return jax.vmap(lambda ww, xx: linear({"w": ww}, xx, cfg, mode))(w, x)
+
+
+def expert_fused_linear(
+    leaf: FusedPackedLinear,
+    x: jax.Array,
+    cfg: ModelConfig,
+    impl: Optional[str] = None,
+) -> tuple:
+    """Fused expert projection group (pack-time w_gate‖w_up -> "w_gu"):
+    ONE E-loop launch serves every expert AND both GLU halves, split out.
+
+    x: (E, C, K); returns one (E, C, width) array per segment. Segment
+    scales stay exact (per-column scale vector per expert), so fused ==
+    separate bit-for-bit on either impl.
+    """
+    y = expert_linear(leaf, x, cfg, "packed", impl=impl)
+    parts = []
+    off = 0
+    for w in leaf.splits:
+        parts.append(jax.lax.slice_in_dim(y, off, off + w, axis=-1))
+        off += w
+    return tuple(parts)
 
 
 def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):

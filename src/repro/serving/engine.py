@@ -38,6 +38,10 @@ the analytic prompt-phase ledger (``prompt_traffic_tokens``) is added at
 admission. Per sequence, the total reconciles exactly with
 ``dr_edram.closed_form_reduction(seq_len, hot_cap)`` — including in
 mixed-length batches, which is asserted in tests.
+
+docs/serving.md walks the full request lifecycle (slots, admission
+groups, ``sync_every`` semantics, the reconciliation contract);
+docs/kernels.md covers the packed fast path the decode loop runs on.
 """
 
 from __future__ import annotations
@@ -116,10 +120,12 @@ class Engine:
         sync_every: int = 8,
     ):
         self.cfg = cfg
-        # Freeze to ROM form once (packed trits + fused wqkv/wgu projection
-        # groups, models/pack.py); never reloaded afterwards. The decode hot
-        # loop then runs the packed fast path (core/bitlinear.packed_matmul:
-        # Pallas fused-epilogue kernel on TPU via BitNetConfig.impl="auto").
+        # Freeze to ROM form once (packed trits + fused wqkv/wgu/w_dqkv/w_gu
+        # projection groups, models/pack.py); never reloaded afterwards. The
+        # decode hot loop then runs the packed fast path (core/bitlinear.
+        # packed_matmul: act-quant-prologue + epilogue-fused Pallas kernel on
+        # TPU via BitNetConfig.impl="auto" — raw bf16 in, scaled float out,
+        # no int8/int32 HBM intermediates; E-loop expert kernel for MoE).
         self.params = pack_lib.pack_params(params, cfg) if pack else params
         self.mode = "packed" if pack else "qat"
         self.hot_cap = hot_cap

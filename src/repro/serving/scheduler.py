@@ -25,6 +25,10 @@ length ride along in the same prefill dispatch (one XLA compilation per
 (group_size, prompt_len) shape). This keeps admission pad-free — padded
 prompt tokens would pollute the causal KV cache — while still batching
 prefill work when traffic has repeated shapes.
+
+docs/serving.md documents the full lifecycle this module drives
+(admission -> decode chunks -> retirement) and the ``sync_every``
+semantics of the engine loop around it.
 """
 
 from __future__ import annotations
@@ -90,13 +94,16 @@ class SlotScheduler:
 
     # -- queue ----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Append ``req`` to the FIFO admission queue (host-side only)."""
         self.queue.append(req)
 
     # -- slot table -----------------------------------------------------
     def free_slots(self) -> List[int]:
+        """Slot indices with no live request (admission targets)."""
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
     def active_slots(self) -> List[int]:
+        """Slot indices currently holding a live request."""
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
     # -- admission ------------------------------------------------------
@@ -134,10 +141,14 @@ class SlotScheduler:
 
     # -- retirement -----------------------------------------------------
     def retire(self, slot: int) -> Request:
+        """Free ``slot`` and return the request that occupied it (the
+        engine harvests its outputs before the slot is reused)."""
         req = self.slot_req[slot]
         assert req is not None, f"retiring free slot {slot}"
         self.slot_req[slot] = None
         return req
 
     def idle(self) -> bool:
+        """True when nothing is queued and no slot is occupied — the
+        engine's serving-loop exit condition."""
         return not self.queue and all(r is None for r in self.slot_req)

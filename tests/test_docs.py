@@ -1,0 +1,69 @@
+"""Docs lane: markdown links resolve, examples at least compile.
+
+Backs the CI docs job (.github/workflows/ci.yml): documentation is part
+of the contract now — README.md / docs/*.md cross-link each other and
+point into the source tree, and those pointers must not rot as modules
+move. Example *execution* smoke (quickstart) stays in CI only; here we
+keep the fast checks so `pytest -x -q` catches a broken link locally.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import py_compile
+import re
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# every tracked markdown doc: repo root + docs/
+MD_FILES = sorted(REPO.glob("*.md")) + sorted((REPO / "docs").glob("*.md"))
+
+# [text](target) — markdown inline links, excluding images' alt-text edge
+# cases we don't use; reference-style links are not used in this repo.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _links(path: pathlib.Path):
+    for target in _LINK_RE.findall(path.read_text()):
+        yield target
+
+
+def test_docs_exist_and_cross_link():
+    """README and both design docs exist and link to each other."""
+    readme = REPO / "README.md"
+    kernels = REPO / "docs" / "kernels.md"
+    serving = REPO / "docs" / "serving.md"
+    for p in (readme, kernels, serving):
+        assert p.exists(), p
+    assert any("docs/kernels.md" in t for t in _links(readme))
+    assert any("docs/serving.md" in t for t in _links(readme))
+    assert any("serving.md" in t for t in _links(kernels))
+    assert any("kernels.md" in t for t in _links(serving))
+
+
+@pytest.mark.parametrize("md", MD_FILES, ids=lambda p: str(p.relative_to(REPO)))
+def test_markdown_links_resolve(md):
+    """Every relative link in every tracked .md points at a real file."""
+    broken = []
+    for target in _links(md):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, https:, mailto:
+            continue
+        path = target.split("#", 1)[0]
+        if not path:  # pure in-page anchor
+            continue
+        if not (md.parent / path).exists():
+            broken.append(target)
+    assert not broken, f"{md}: broken links {broken}"
+
+
+@pytest.mark.parametrize(
+    "example",
+    sorted((REPO / "examples").glob("*.py")),
+    ids=lambda p: p.name,
+)
+def test_examples_compile(example):
+    """Every examples/*.py is at least syntactically valid (the CI docs
+    lane additionally executes the quickstart end to end)."""
+    py_compile.compile(str(example), doraise=True)

@@ -1,8 +1,13 @@
 """Fused ternary fast path: epilogue-fused kernel, fused projections, blocks.
 
-Covers the production path end to end (ISSUE 2):
+Covers the production path end to end (ISSUE 2 + ISSUE 3):
   * epilogue-fused Pallas kernel vs the XLA dot+rescale (interpret on CPU),
     including the int-exact accumulator (unit scales) and odd shapes;
+  * two-phase act-quant PROLOGUE kernel vs the quantize-then-matmul
+    reference — bit-exact, both codecs, M=1/odd shapes, A8 and A4;
+  * E-loop expert kernel (one launch over all experts) vs the vmapped
+    per-expert forward — bit-exact, incl. the fused gate‖up MoE path;
+  * MLA down-projection fusion (w_dq‖w_dkv -> "w_dqkv", post-split norms);
   * shape-aware block selection (decode-shaped auto blocks stay exact);
   * pack2/pack243 zero-code padding repair regression (operator precedence);
   * fuse_packed / FusedPackedLinear: fused QKV and gate-up vs separate
@@ -107,6 +112,242 @@ def test_fused_epilogue_batched_leading_dims():
 
 
 # ---------------------------------------------------------------------------
+# Two-phase act-quant prologue kernel
+# ---------------------------------------------------------------------------
+
+
+def _raw_case(seed, m, k, n, codec):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k))
+    wq = jax.random.randint(kw, (k, n), -1, 2, dtype=jnp.int8)
+    return x, _pack(wq, codec)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("m,k,n", ODD_SHAPES)
+def test_actq_prologue_matches_quantize_then_matmul(codec, m, k, n):
+    """The tentpole guarantee: in-kernel act-quant (absmax K-sweep + int8
+    quantize in VMEM) is BIT-EXACT against the two-pass reference —
+    act_quant as a separate op feeding the known-scale fused kernel, and
+    the XLA quantize+dot+rescale path."""
+    from repro.core.ternary import act_quant
+
+    x, packed = _raw_case(m * 37 + k * 5 + n, m, k, n, codec)
+    cs = jax.random.uniform(jax.random.PRNGKey(3), (n,)) + 0.5
+    got = ops.ternary_matmul_actq(x, packed, cs, k=k, codec=codec,
+                                  impl="pallas")
+    q = act_quant(x)
+    want_fused = ops.ternary_matmul_fused(q.xq, packed, q.scale, cs, k=k,
+                                          codec=codec, impl="pallas")
+    want_xla = ops.ternary_matmul_actq(x, packed, cs, k=k, codec=codec,
+                                       impl="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_fused))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_xla))
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_actq_prologue_a4(codec):
+    """A4 activations (BitNet a4.8 / TriMLA-native) quantize identically
+    in the prologue: qmax 7 / qmin -8 threads through."""
+    m, k, n = 5, 130, 40
+    x, packed = _raw_case(21, m, k, n, codec)
+    cs = jnp.ones((n,))
+    got = ops.ternary_matmul_actq(x, packed, cs, k=k, codec=codec,
+                                  act_bits=4, impl="pallas")
+    want = ops.ternary_matmul_actq(x, packed, cs, k=k, codec=codec,
+                                   act_bits=4, impl="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_actq_prologue_batched_leading_dims_and_bf16():
+    """Leading batch dims flatten through, and bf16 inputs quantize to the
+    same int8 values as act_quant's f32 upcast does."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 64)).astype(jnp.bfloat16)
+    wq = jax.random.randint(jax.random.PRNGKey(2), (64, 32), -1, 2,
+                            dtype=jnp.int8)
+    packed = packing.pack2(wq)
+    cs = jax.random.uniform(jax.random.PRNGKey(4), (32,)) + 0.5
+    got = ops.ternary_matmul_actq(x, packed, cs, k=64, codec="pack2",
+                                  impl="pallas")
+    want = ops.ternary_matmul_actq(x, packed, cs, k=64, codec="pack2",
+                                   impl="xla")
+    assert got.shape == (2, 3, 32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_actq_prologue_scale_persists_across_column_tiles(codec):
+    """The absmax sweep runs only at the first output-column tile (j == 0)
+    and the finished scale in VMEM scratch serves every later j — pin it
+    with a grid that has several j AND several i tiles."""
+    m, k, n = 40, 96, 120  # blocks below force gm=2, gn=4, gk=2
+    x, packed = _raw_case(77, m, k, n, codec)
+    cs = jax.random.uniform(jax.random.PRNGKey(9), (n,)) + 0.5
+    got = ops.ternary_matmul_actq(
+        x, packed, cs, k=k, codec=codec, impl="pallas",
+        block_m=32, block_n=32, block_k=40,
+    )
+    want = ops.ternary_matmul_actq(x, packed, cs, k=k, codec=codec,
+                                   impl="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_actq_prologue_rejects_unsupported_bits():
+    """pallas and xla reject unsupported act_bits identically."""
+    x, packed = _raw_case(1, 4, 64, 32, "pack2")
+    cs = jnp.ones((32,))
+    for impl in ("pallas", "xla"):
+        with pytest.raises(ValueError, match="unsupported activation bits"):
+            ops.ternary_matmul_actq(x, packed, cs, k=64, act_bits=6,
+                                    impl=impl)
+
+
+def test_actq_prologue_zero_row():
+    """An all-zero activation row must produce an all-zero output (EPS
+    guard in the in-kernel scale), not NaN/Inf."""
+    m, k, n = 4, 64, 32
+    x, packed = _raw_case(30, m, k, n, "pack2")
+    x = x.at[1].set(0.0)
+    cs = jnp.ones((n,))
+    got = ops.ternary_matmul_actq(x, packed, cs, k=k, codec="pack2",
+                                  impl="pallas")
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_array_equal(np.asarray(got[1]), 0.0)
+
+
+def test_packed_matmul_carried_scale_fallback():
+    """packed_matmul accepts an already-quantized activation (the
+    carried-scale fallback): same result as handing it the raw floats."""
+    from repro.core.ternary import act_quant
+
+    pw = bitlinear.quantize_pack(
+        {"w": jax.random.normal(jax.random.PRNGKey(5), (96, 48))})
+    x = jax.random.normal(jax.random.PRNGKey(6), (3, 96))
+    y_raw = bitlinear.packed_matmul(pw, x, impl="pallas")
+    y_carried = bitlinear.packed_matmul(pw, act_quant(x), impl="pallas")
+    y_unfused = bitlinear.packed_matmul(pw, x, impl="pallas", fuse_actq=False)
+    np.testing.assert_array_equal(np.asarray(y_raw), np.asarray(y_carried))
+    np.testing.assert_array_equal(np.asarray(y_raw), np.asarray(y_unfused))
+
+
+def test_linear_fuse_act_quant_config_threading():
+    """BitNetConfig.fuse_act_quant=False pins the separate-act-quant path;
+    results stay identical either way (same numerics, different fusion)."""
+    import dataclasses as dc
+
+    from repro.models import qops
+
+    cfg = get_smoke_config("falcon3-1b")
+    cfg_p = dc.replace(cfg, bitnet=dc.replace(cfg.bitnet, impl="pallas"))
+    cfg_np = dc.replace(
+        cfg, bitnet=dc.replace(cfg.bitnet, impl="pallas", fuse_act_quant=False)
+    )
+    leaf = bitlinear.quantize_pack(
+        _random_linear(jax.random.PRNGKey(3), 64, 48))
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 64))
+    y_f = qops.linear(leaf, x, cfg_p, "packed")
+    y_s = qops.linear(leaf, x, cfg_np, "packed")
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_s))
+
+
+# ---------------------------------------------------------------------------
+# E-loop expert kernel (one launch over all experts)
+# ---------------------------------------------------------------------------
+
+
+def _expert_case(seed, e, c, k, n, codec):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (e, c, k))
+    wq = jax.random.randint(kw, (e, k, n), -1, 2, dtype=jnp.int8)
+    pack = packing.pack2 if codec == "pack2" else packing.pack243
+    return x, jax.vmap(pack)(wq)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("c", [1, 5, 16])
+def test_expert_eloop_matches_vmapped(codec, c):
+    """One E-loop launch (leading expert grid dim) == the vmapped
+    per-expert quantize-then-matmul, bit-for-bit."""
+    e, k, n = 4, 96, 72
+    x, packed = _expert_case(c * 11 + 1, e, c, k, n, codec)
+    cs = jax.random.uniform(jax.random.PRNGKey(3), (e, n)) + 0.5
+    got = ops.ternary_matmul_expert(x, packed, cs, k=k, codec=codec,
+                                    impl="pallas")
+    want = ops.ternary_matmul_expert(x, packed, cs, k=k, codec=codec,
+                                     impl="xla")
+    assert got.shape == (e, c, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_expert_packed_matmul_paths_agree(codec):
+    """bitlinear.expert_packed_matmul: E-loop pallas == vmapped xla for
+    both leaf kinds (scalar-scale PackedLinear, per-column fused)."""
+    from repro.models.pack import fuse_packed
+
+    e, c, k, ff = 3, 4, 64, 32
+    keys = jax.random.split(jax.random.PRNGKey(17), 3)
+    w_g = jax.random.normal(keys[0], (e, k, ff)) * k**-0.5
+    w_u = jax.random.normal(keys[1], (e, k, ff)) * k**-0.5
+    from repro.models.pack import _pack_weight
+
+    pg = _pack_weight(w_g, codec)
+    pu = _pack_weight(w_u, codec)
+    fused = fuse_packed([pg, pu])
+    assert fused.packed.ndim == 3 and fused.scale.shape == (e, 2 * ff)
+    x = jax.random.normal(keys[2], (e, c, k))
+    for leaf in (pg, fused):
+        y_p = bitlinear.expert_packed_matmul(leaf, x, impl="pallas")
+        y_x = bitlinear.expert_packed_matmul(leaf, x, impl="xla")
+        np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_x))
+
+
+def test_moe_fused_gate_up_eloop_exact():
+    """apply_moe with the pack-time-fused w_gu leaf == the unfused tree,
+    on the XLA path AND the E-loop Pallas path (bit-exact end to end)."""
+    import dataclasses as dc
+
+    from repro.models import moe as moe_lib
+    from repro.models import pack as pack_lib
+
+    cfg = get_smoke_config("mixtral-8x22b")
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    pf = pack_lib.pack_params(p, cfg)
+    pu = pack_lib.pack_params(p, cfg, fuse=False)
+    assert "w_gu" in pf and "w_gate" in pu
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 6, cfg.d_model))
+    y_u, _ = moe_lib.apply_moe(pu, x, cfg, "packed")
+    y_f, _ = moe_lib.apply_moe(pf, x, cfg, "packed")
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+    cfg_p = dc.replace(cfg, bitnet=dc.replace(cfg.bitnet, impl="pallas"))
+    y_p, _ = moe_lib.apply_moe(pf, x, cfg_p, "packed")
+    np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_u))
+
+
+# ---------------------------------------------------------------------------
+# MLA down-projection fusion (w_dq‖w_dkv -> "w_dqkv")
+# ---------------------------------------------------------------------------
+
+
+def test_mla_fused_down_projection_exact():
+    """mla_full with the fused w_dqkv leaf == separate w_dq/w_dkv (the
+    per-branch q_ln/kv_ln norms apply post-split), bit-exact."""
+    from repro.models import attention as attn
+    from repro.models import pack as pack_lib
+
+    cfg = get_smoke_config("deepseek-v3-671b")
+    p = attn.init_mla(jax.random.PRNGKey(0), cfg)
+    pf = pack_lib.pack_params(p, cfg)
+    pu = pack_lib.pack_params(p, cfg, fuse=False)
+    assert "w_dqkv" in pf and "w_dq" in pu
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 5, cfg.d_model))
+    pos = jnp.arange(5)
+    y_f = attn.mla_full(pf, x, cfg, "packed", pos)
+    y_u = attn.mla_full(pu, x, cfg, "packed", pos)
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+
+
+# ---------------------------------------------------------------------------
 # Shape-aware block selection
 # ---------------------------------------------------------------------------
 
@@ -126,6 +367,19 @@ def test_select_blocks_decode_vs_prefill():
     for m in (1, 32, 4096):
         bk243 = ops.select_blocks(m, 2048, 2048, "pack243")[2]
         assert bk243 == 640, bk243
+
+
+def test_select_blocks_kinds():
+    """The two-phase and E-loop grids get their own table rows: the actq
+    decode row halves block_k (raw-float x tile, read twice); the expert
+    decode row narrows block_n."""
+    assert ops.select_blocks(1, 2048, 2048, "pack2", kind="actq") == (32, 512, 512)
+    assert ops.select_blocks(1, 2048, 2048, "pack2", kind="expert") == (32, 256, 512)
+    # prefill tier is shared across kinds
+    for kind in ("fused", "actq", "expert"):
+        assert ops.select_blocks(4096, 4096, 4096, "pack2", kind=kind) == (256, 256, 512)
+    # pack243 lane alignment applies to every table
+    assert ops.select_blocks(1, 2048, 2048, "pack243", kind="actq")[2] == 640
 
 
 @pytest.mark.parametrize("codec", CODECS)

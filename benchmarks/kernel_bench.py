@@ -16,6 +16,20 @@ Sections (all emit ``name,us_per_call,derived`` rows):
     vs E vmapped per-expert XLA launches, decode-ish capacities C ∈ {1,8,32}.
   * ``fused_projection`` — one fused wq‖wk‖wv launch vs three separate
     projections (falcon3-7b-ish dims), including act-quant.
+  * ``flash_decode`` — streaming flash-decode attention over the tiered KV
+    cache, capacity × length sweep. Three timings per row: the
+    length-predicated kernel at the target length, the SAME kernel at full
+    occupancy (lengths = capacity — the unpredicated ceiling, the
+    pallas-vs-pallas proxy structure of ``decode_blocking``), and the
+    masked full-capacity XLA path. The quantity the kernel optimizes —
+    KV tokens streamed per step — is recorded per row
+    (``kv_tokens_streamed`` vs the capacity the XLA path always touches):
+    that ratio is what the per-slot BlockSpec parking converts into
+    elided HBM copies on real TPU. CPU interpret wall time can NOT show
+    it: the interpreter pays a fixed per-grid-step cost and executes
+    parked copies anyway, so ``predication_win`` hovers near 1x on CPU
+    and the xla column wins wall-clock outright — see the honest-proxy
+    note in docs/kernels.md.
   * ``packing_density`` / ``serving_token_rate`` — unchanged ledgers.
 """
 
@@ -218,6 +232,56 @@ def fused_projection() -> list:
             f"kernel/fused_qkv_m{m}", t_f,
             f"separate_us={t_s:.1f} speedup={t_s/t_f:.2f}x launches=1_vs_3 "
             f"impl={_note(impl)}"))
+    return rows
+
+
+def flash_decode() -> list:
+    """Flash-decode attention over (capacity, length) decode shapes.
+
+    All slots sit at ``length`` so each row isolates the predication
+    effect: the kernel touches ``ceil(hot_valid/bs) + ceil(cold_valid/bs)``
+    live S-blocks per slot and parks the rest, the full-occupancy run of
+    the SAME kernel is the unpredicated ceiling, and the XLA path pays
+    the padded capacity regardless of length."""
+    from repro.core import kv_cache as kvc
+    from repro.kernels import flash_decode as fd
+    from repro.kernels.ops import select_blocks
+
+    def filled(cap, length):
+        cache = kvc.init_cache(b, hot, cap - hot, (g, d), jnp.bfloat16)
+        ks = jax.random.normal(jax.random.PRNGKey(0), (b, length, g, d))
+        vs = jax.random.normal(jax.random.PRNGKey(1), (b, length, g, d))
+        return kvc.append(cache, ks, vs)
+
+    rows = []
+    b, g, rep, d, hot = 4, 4, 4, 128, 32
+    for cap, length in ((128, 16), (128, 96), (512, 32), (2048, 48)):
+        cache = filled(cap, length)
+        full = filled(cap, cap)  # every S-block live: unpredicated ceiling
+        q = jax.random.normal(jax.random.PRNGKey(2), (b, g * rep, d),
+                              jnp.bfloat16)
+        f_p = jax.jit(lambda qq, cc: fd.flash_decode_attention(
+            qq, cc, impl="pallas"))
+        f_x = jax.jit(lambda qq, cc: fd.flash_decode_attention(
+            qq, cc, impl="xla"))
+        t_p = time_us(lambda: jax.block_until_ready(f_p(q, cache)),
+                      iters=_iters("pallas"))
+        t_f = time_us(lambda: jax.block_until_ready(f_p(q, full)),
+                      iters=_iters("pallas"))
+        t_x = time_us(lambda: jax.block_until_ready(f_x(q, cache)),
+                      iters=_iters("pallas"))
+        bs = select_blocks(rep, d, cap, "pack2", kind="decode_attn")[2]
+        bs_hot, bs_cold = min(bs, hot), min(bs, cap - hot)
+        total = -(-hot // bs_hot) + -(-(cap - hot) // bs_cold)
+        live_h = -(-min(length, hot) // bs_hot)
+        live_c = -(-max(length - hot, 0) // bs_cold)
+        streamed = live_h * bs_hot + live_c * bs_cold
+        rows.append(row(
+            f"kernel/flash_decode_cap{cap}_len{length}", t_p,
+            f"full_occupancy_us={t_f:.1f} predication_win={t_f/t_p:.2f}x "
+            f"xla_us={t_x:.1f} s_blocks_streamed={live_h + live_c}/{total} "
+            f"kv_tokens_streamed={streamed}_vs_capacity={cap} "
+            f"block_s={bs} impl={_note('pallas')}"))
     return rows
 
 

@@ -9,7 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   fig6a/*   LoRA quantization-bit ablation (measured)    (Fig. 6a)
   kernel/*  ternary matmul + packing microbenchmarks: impl axis
             (xla vs pallas), decode-shaped rows, shape-aware blocking vs
-            pad-to-256, fused epilogue, fused QKV projections
+            pad-to-256, fused epilogue, fused QKV projections, and the
+            flash-decode attention capacity × length sweep
   serving/* packed decode + DR traffic (measured), plus the
             continuous-batching vs lock-step throughput comparison
 
@@ -52,6 +53,7 @@ def main() -> None:
         ("kernel/fused_prologue", kernel_bench.fused_prologue),
         ("kernel/expert_eloop", kernel_bench.expert_eloop),
         ("kernel/fused_qkv", kernel_bench.fused_projection),
+        ("kernel/flash_decode", kernel_bench.flash_decode),
         ("serving", kernel_bench.serving_token_rate),
         ("serving/continuous", serving_bench.serving_throughput),
     ]

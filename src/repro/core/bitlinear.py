@@ -176,23 +176,35 @@ def expert_packed_matmul(
     """Expert-batched packed fast path: x (E, C, K) @ packed (E, K/g, N).
 
     On the Pallas path this is ONE E-loop kernel launch over all experts
-    (leading expert grid dimension, act-quant prologue fused) — the
-    ``pallas_call`` batching rule the vmapped per-expert path never had.
-    Everything else (XLA impl, ``fuse_actq=False``) runs the vmapped
-    per-expert ``packed_matmul`` on the XLA path, bit-identical numerics.
-    ``pw`` is an expert-stacked ``PackedLinear`` (scale (E,)) or
-    ``FusedPackedLinear`` (per-column scale (E, N), e.g. pack-time-fused
-    w_gate‖w_up). Returns (E, C, N) float32.
+    (leading expert grid dimension) — the ``pallas_call`` batching rule
+    the vmapped per-expert path never had. With raw ``x`` and
+    ``fuse_actq`` (the default) the act-quant prologue fuses into the
+    launch; with a pre-quantized ``QuantizedActivation`` x or
+    ``fuse_actq=False`` the *carried-scale* E-loop kernel runs instead
+    (act-quant as a separate XLA op, known-scale epilogue-fused launch) —
+    experts no longer fall back to the vmapped XLA path in that mode.
+    The XLA impl runs the vmapped per-expert ``packed_matmul``,
+    bit-identical numerics. ``pw`` is an expert-stacked ``PackedLinear``
+    (scale (E,)) or ``FusedPackedLinear`` (per-column scale (E, N), e.g.
+    pack-time-fused w_gate‖w_up). Returns (E, C, N) float32.
     """
     from repro.kernels import ops  # lazy: kernels depend on core.packing
 
-    if impl == "pallas" and fuse_actq:
+    if impl == "pallas":
         scale = jnp.asarray(pw.scale, jnp.float32)
         n = pw.packed.shape[-1]
         if scale.ndim == 1:  # (E,) scalar absmean per expert -> per-column
             scale = jnp.broadcast_to(scale[:, None], (scale.shape[0], n))
-        return ops.ternary_matmul_expert(
-            x, pw.packed, scale, k=pw.k, codec=pw.codec, act_bits=act_bits,
+        if fuse_actq and not isinstance(x, QuantizedActivation):
+            return ops.ternary_matmul_expert(
+                x, pw.packed, scale, k=pw.k, codec=pw.codec,
+                act_bits=act_bits,
+            )
+        q = x if isinstance(x, QuantizedActivation) else act_quant(
+            x, bits=act_bits
+        )
+        return ops.ternary_matmul_expert_fused(
+            q.xq, pw.packed, q.scale, scale, k=pw.k, codec=pw.codec,
         )
 
     def one(packed_e, scale_e, x_e):

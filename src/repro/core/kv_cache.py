@@ -236,17 +236,18 @@ def tiered_decode_attention(
     q: jax.Array,
     cache: TieredKVCache,
     scale: float | None = None,
-    ring: bool = False,
 ) -> jax.Array:
     """One-token attention over both tiers. q: (b, h, d) -> (b, h, d).
 
     Validity is per slot (``cache.lengths``), so mixed-length batches each
     attend to exactly their own prefix. A slot with length 0 (unadmitted)
-    returns zeros. ``ring`` marks a ring-buffer cold tier (SWA); the
-    clamped validity formula covers both layouts, the flag is kept for
-    call-site clarity.
+    returns zeros. Ring-buffer cold tiers (SWA) need no flag: the clamped
+    validity formula in ``_valid_masks`` covers the wrapped layout, and
+    attention is permutation-invariant over KV positions — call sites
+    that want to state their layout use the flash-decode entry points
+    (``kernels/flash_decode.py``), for which this function is the XLA
+    reference path.
     """
-    del ring  # validity formula below covers both layouts
     d = q.shape[-1]
     scale = scale if scale is not None else d**-0.5
     hot_valid, cold_valid = _valid_masks(cache)

@@ -3,10 +3,14 @@
   ternary_matmul — packed-trit decode + local-then-global accumulation;
                    raw int32 variant + the production epilogue-fused
                    variant (scales applied in VMEM, float out)
+  flash_decode   — streaming online-softmax decode attention over the
+                   tiered DR KV cache (per-slot length predication,
+                   hot+cold merged in one launch)
   ops            — jit'd dispatch (pallas | xla) with padding/batching
                    and the shape-aware block-selection table
-                   (select_blocks: skinny-M decode vs MXU-aligned prefill)
+                   (select_blocks: skinny-M decode vs MXU-aligned prefill
+                   vs decode_attn S-blocks)
   ref            — pure-jnp oracles
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import flash_decode, ops, ref  # noqa: F401

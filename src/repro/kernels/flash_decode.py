@@ -1,0 +1,447 @@
+"""Pallas flash-decode attention over the tiered DR KV cache (paper §IV).
+
+The decode-side twin of the packed-ternary matmul fast path: with the
+projections fused end to end, decode attention was the last XLA-shaped hot
+path in the continuous-batching engine. The XLA reference
+(``core/kv_cache.tiered_decode_attention``) materializes full
+``(b, g, rep, capacity)`` logits over the *padded* hot+cold capacity every
+step, upcasts entire fp8 tiers, and masks instead of skipping — a slot at
+length 37 pays for the whole cache. This kernel streams instead:
+
+  * **grid (batch, kv_group, s_blocks)** — the S dimension walks the hot
+    tier's blocks first, then the cold tier's, carrying the online-softmax
+    state (running max / denominator / numerator) in VMEM scratch, so both
+    tiers merge *in one launch* with no two-pass HBM merge and no
+    concatenated copy of the tiers (the DR structure stays intact);
+  * **per-slot length predication** — ``cache.lengths`` rides in as a
+    scalar-prefetch operand: fully-invalid S-blocks are skipped in the
+    body (``pl.when``) and their BlockSpec indices *park* on the last
+    valid block (the actq-prologue trick — consecutive steps that map to
+    the same block elide the HBM→VMEM copy), so a slot streams only the
+    KV bytes its own prefix occupies;
+  * **per-block fp8 dequant** — fp8(e4m3) tiers are upcast tile-by-tile
+    in VMEM; the bf16 copy of the whole tier that the XLA path
+    materializes never exists;
+  * **GQA folded into the q block** — the ``rep`` query heads of a kv
+    group form the (rep, d) q tile of one grid row, so grouped heads
+    share each streamed KV tile.
+
+Three entry points, mirroring the attention variants:
+
+  * ``flash_decode_attention``        — GQA/MQA over (k, v) tiers;
+  * ``flash_decode_attention_latent`` — MLA absorbed form: the cache
+    k-slot holds (c_kv ‖ k_rope); values are the latent *prefix* of the
+    k-slot (first ``value_dim`` dims), sliced per block in VMEM;
+  * ``flash_decode_attention_ring``   — ring/SWA cold tier. The math is
+    identical (the clamped validity formula covers the wrapped layout:
+    attention is permutation-invariant over KV positions, and once the
+    window wraps every ring slot is valid); the entry point exists so
+    call sites state their layout.
+
+All dispatch through ``impl`` ("auto" → Pallas on TPU, XLA elsewhere —
+the same rule as ``qops.resolve_impl``); the XLA fallbacks are the
+existing ``kv_cache`` paths, bit-*tolerant* (fp32-reference parity to
+tight tolerance — the merge order differs, so exact bit equality is not
+the contract here, unlike the integer matmul kernels). S-block sizes come
+from the kind-keyed table ``kernels/ops.select_blocks(kind="decode_attn")``.
+
+Numerical edge cases share the XLA path's conventions: a slot with
+length 0 (unadmitted) returns zeros; masked logits use ``finfo(f32).min``;
+the final division guards with 1e-30. Out-of-range rows of a partial
+S-block are masked *before* the PV matmul (Pallas pads partial blocks
+with uninitialized values — 0·NaN would poison the accumulator).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import kv_cache as kvc
+from repro.kernels import ops
+
+NEG_INF = jnp.finfo(jnp.float32).min
+
+
+def _resolve(impl: str) -> str:
+    """"auto" → pallas on TPU, xla elsewhere (qops.resolve_impl's rule,
+    minus the sharding hint — decode attention never runs under GSPMD
+    hints; model code passes the config-resolved impl explicitly)."""
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _interpret(interpret) -> bool:
+    return jax.default_backend() == "cpu" if interpret is None else interpret
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _online_update(q, k_tile, v_tile, start, n_valid, scale,
+                   m_scr, l_scr, acc_scr):
+    """One S-block step of the streaming softmax.
+
+    q: (bm, dk) f32; k_tile: (bs, dk) f32; v_tile: (bs, dv) f32;
+    ``start`` is the block's first absolute position within its tier,
+    ``n_valid`` the tier's per-slot valid length. Scratch: m/l (bm, 1),
+    acc (bm, dv) — carried across the S grid dimension.
+    """
+    logits = jax.lax.dot_general(
+        q, k_tile, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (bm, bs)
+    pos = start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid = pos < n_valid  # (bm, bs) — identical across rows
+    logits = jnp.where(valid, logits, NEG_INF)
+    m_prev = m_scr[...]  # (bm, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new) * valid.astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)  # (bm, 1); 0 on the first valid block
+    # mask v BEFORE the dot: a partial block's out-of-range rows are
+    # uninitialized (NaN in interpret mode) and 0 * NaN = NaN
+    pos_col = start + jax.lax.broadcasted_iota(
+        jnp.int32, (v_tile.shape[0], 1), 0
+    )
+    v_safe = jnp.where(pos_col < n_valid, v_tile, 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v_safe, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+
+def _kernel_gqa(lens_ref, q_ref, hk_ref, hv_ref, ck_ref, cv_ref, o_ref,
+                m_scr, l_scr, acc_scr, *, scale, n_hot_blocks,
+                hot_cap, cold_cap):
+    """Grid (b, g, s_blocks): hot blocks [0, n_hot_blocks), cold after."""
+    b_i = pl.program_id(0)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lens_ref[b_i]
+    n_hot_valid = jnp.minimum(length, hot_cap)
+    # clamped at cold_cap: covers both the linear layout (lengths never
+    # exceed capacity) and the ring layout (wrapped window = all valid)
+    n_cold_valid = jnp.clip(length - hot_cap, 0, cold_cap)
+    q = q_ref[0, 0].astype(jnp.float32)  # (rep, dk)
+
+    bs_hot = hk_ref.shape[1]
+    start_hot = kk * bs_hot
+
+    @pl.when((kk < n_hot_blocks) & (start_hot < n_hot_valid))
+    def _hot():
+        _online_update(
+            q, hk_ref[0].astype(jnp.float32), hv_ref[0].astype(jnp.float32),
+            start_hot, n_hot_valid, scale, m_scr, l_scr, acc_scr,
+        )
+
+    bs_cold = ck_ref.shape[1]
+    start_cold = (kk - n_hot_blocks) * bs_cold
+
+    @pl.when((kk >= n_hot_blocks) & (start_cold < n_cold_valid))
+    def _cold():
+        _online_update(
+            q, ck_ref[0].astype(jnp.float32), cv_ref[0].astype(jnp.float32),
+            start_cold, n_cold_valid, scale, m_scr, l_scr, acc_scr,
+        )
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _finalize():
+        # length-0 slot: l stays 0 -> output 0, matching the XLA path
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def _kernel_latent(lens_ref, q_ref, hk_ref, ck_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, n_hot_blocks,
+                   hot_cap, cold_cap, value_dim):
+    """MLA absorbed form, grid (b, s_blocks): values = k-slot latent prefix."""
+    b_i = pl.program_id(0)
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lens_ref[b_i]
+    n_hot_valid = jnp.minimum(length, hot_cap)
+    n_cold_valid = jnp.clip(length - hot_cap, 0, cold_cap)
+    q = q_ref[0].astype(jnp.float32)  # (h, D)
+
+    bs_hot = hk_ref.shape[1]
+    start_hot = kk * bs_hot
+
+    @pl.when((kk < n_hot_blocks) & (start_hot < n_hot_valid))
+    def _hot():
+        k_tile = hk_ref[0].astype(jnp.float32)
+        _online_update(q, k_tile, k_tile[:, :value_dim], start_hot,
+                       n_hot_valid, scale, m_scr, l_scr, acc_scr)
+
+    bs_cold = ck_ref.shape[1]
+    start_cold = (kk - n_hot_blocks) * bs_cold
+
+    @pl.when((kk >= n_hot_blocks) & (start_cold < n_cold_valid))
+    def _cold():
+        k_tile = ck_ref[0].astype(jnp.float32)
+        _online_update(q, k_tile, k_tile[:, :value_dim], start_cold,
+                       n_cold_valid, scale, m_scr, l_scr, acc_scr)
+
+    @pl.when(kk == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Launch helpers
+# ---------------------------------------------------------------------------
+
+
+def _tier_blocks(buf, cap: int, block_s: int, dummy_shape, dummy_dtype):
+    """Per-tier S blocking. A zero-capacity tier (SWA hot, max_len <=
+    hot_cap cold) becomes a 1-token zeros dummy whose single block is
+    never valid (the real cap still drives the validity formula), so the
+    kernel arity stays fixed."""
+    if cap == 0:
+        return jnp.zeros(dummy_shape, dummy_dtype), 1, 1
+    bs = min(block_s, cap)
+    return buf, bs, pl.cdiv(cap, bs)
+
+
+def _park_maps(hot_cap: int, cold_cap: int, bs_hot: int, bs_cold: int,
+               n_hot: int):
+    """Index maps for the tier refs: walk valid blocks, then park on the
+    last valid one (consecutive identical indices elide the copy) for the
+    rest of the S sweep — the block-level predication."""
+
+    def hot_map(b_i, kk, lens):
+        n_valid = jnp.minimum(lens[b_i], hot_cap)
+        nvb = jnp.maximum(pl.cdiv(n_valid, bs_hot), 1)
+        return b_i, jnp.minimum(kk, nvb - 1)
+
+    def cold_map(b_i, kk, lens):
+        n_valid = jnp.clip(lens[b_i] - hot_cap, 0, cold_cap)
+        nvb = jnp.maximum(pl.cdiv(n_valid, bs_cold), 1)
+        kc = jnp.maximum(kk - n_hot, 0)
+        return b_i, jnp.minimum(kc, nvb - 1)
+
+    return hot_map, cold_map
+
+
+def _flash_gqa(q, cache, scale, block_s, interpret):
+    b, h, dk = q.shape
+    g = cache.hot_k.shape[2]
+    rep = h // g
+    assert rep * g == h, (h, g)
+    dv = cache.hot_v.shape[-1]
+    hot_cap, cold_cap = cache.hot_cap, cache.cold_cap
+    if block_s is None:
+        block_s = ops.select_blocks(
+            rep, max(dk, dv), cache.capacity, "pack2", kind="decode_attn"
+        )[2]
+
+    # (b, s, g, d) -> (b, s, g*d): trailing-dim reshape (no copy), so the
+    # (1, bs, d) BlockSpec tiles land (sublane=s, lane=d)-aligned with the
+    # group picked by the block index along the fused g*d axis.
+    def flat(t, d):
+        return t.reshape(b, t.shape[1], g * d)
+
+    dt = cache.hot_k.dtype
+    hk, bs_hot, n_hot = _tier_blocks(
+        flat(cache.hot_k, dk), hot_cap, block_s, (b, 1, g * dk), dt)
+    hv, _, _ = _tier_blocks(
+        flat(cache.hot_v, dv), hot_cap, block_s, (b, 1, g * dv), dt)
+    ck, bs_cold, n_cold = _tier_blocks(
+        flat(cache.cold_k, dk), cold_cap, block_s, (b, 1, g * dk), dt)
+    cv, _, _ = _tier_blocks(
+        flat(cache.cold_v, dv), cold_cap, block_s, (b, 1, g * dv), dt)
+
+    hot_map2, cold_map2 = _park_maps(hot_cap, cold_cap, bs_hot, bs_cold, n_hot)
+
+    def with_g(m):  # lift the (b, s) tier maps onto the (b, g, s) grid
+        return lambda b_i, g_i, kk, lens: (*m(b_i, kk, lens), g_i)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, g, n_hot + n_cold),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, dk), lambda b_i, g_i, kk, lens: (b_i, g_i, 0, 0)),
+            pl.BlockSpec((1, bs_hot, dk), with_g(hot_map2)),
+            pl.BlockSpec((1, bs_hot, dv), with_g(hot_map2)),
+            pl.BlockSpec((1, bs_cold, dk), with_g(cold_map2)),
+            pl.BlockSpec((1, bs_cold, dv), with_g(cold_map2)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, rep, dv), lambda b_i, g_i, kk, lens: (b_i, g_i, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel_gqa, scale=scale, n_hot_blocks=n_hot,
+            hot_cap=hot_cap, cold_cap=cold_cap,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, g, rep, dv), q.dtype),
+        interpret=interpret,
+    )(cache.lengths.astype(jnp.int32), q.reshape(b, g, rep, dk), hk, hv, ck, cv)
+    return out.reshape(b, h, dv)
+
+
+def _flash_latent(q, cache, value_dim, scale, block_s, interpret):
+    b, h, dd = q.shape
+    hot_cap, cold_cap = cache.hot_cap, cache.cold_cap
+    if block_s is None:
+        block_s = ops.select_blocks(
+            h, dd, cache.capacity, "pack2", kind="decode_attn"
+        )[2]
+    dt = cache.hot_k.dtype
+    hk, bs_hot, n_hot = _tier_blocks(
+        cache.hot_k, hot_cap, block_s, (b, 1, dd), dt)
+    ck, bs_cold, n_cold = _tier_blocks(
+        cache.cold_k, cold_cap, block_s, (b, 1, dd), dt)
+    hot_map, cold_map = _park_maps(hot_cap, cold_cap, bs_hot, bs_cold, n_hot)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_hot + n_cold),
+        in_specs=[
+            pl.BlockSpec((1, h, dd), lambda b_i, kk, lens: (b_i, 0, 0)),
+            pl.BlockSpec((1, bs_hot, dd),
+                         lambda b_i, kk, lens: (*hot_map(b_i, kk, lens), 0)),
+            pl.BlockSpec((1, bs_cold, dd),
+                         lambda b_i, kk, lens: (*cold_map(b_i, kk, lens), 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, h, value_dim), lambda b_i, kk, lens: (b_i, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, value_dim), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel_latent, scale=scale, n_hot_blocks=n_hot,
+            hot_cap=hot_cap, cold_cap=cold_cap, value_dim=value_dim,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, value_dim), jnp.float32),
+        interpret=interpret,
+    )(cache.lengths.astype(jnp.int32), q, hk, ck)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "impl", "block_s", "interpret")
+)
+def flash_decode_attention(
+    q: jax.Array,  # (b, h, d)
+    cache: kvc.TieredKVCache,
+    scale: float | None = None,
+    *,
+    impl: str = "auto",
+    block_s: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One-token GQA attention over both tiers. q: (b, h, d) -> (b, h, d).
+
+    ``impl``: "pallas" runs the streaming kernel (interpret mode on CPU),
+    "xla" the masked full-capacity reference
+    (``kv_cache.tiered_decode_attention``), "auto" picks by backend.
+    ``block_s`` overrides the ``select_blocks(kind="decode_attn")``
+    S-block. Per-slot ``cache.lengths`` drive validity, so mixed-length
+    batches each attend to exactly their own prefix and a length-0
+    (unadmitted) slot returns zeros.
+    """
+    impl = _resolve(impl)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if impl == "xla":
+        return kvc.tiered_decode_attention(q, cache, scale)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    return _flash_gqa(q, cache, float(scale), block_s, _interpret(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "impl", "block_s", "interpret")
+)
+def flash_decode_attention_ring(
+    q: jax.Array,
+    cache: kvc.TieredKVCache,
+    scale: float | None = None,
+    *,
+    impl: str = "auto",
+    block_s: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """GQA decode attention over a *ring-buffer* cold tier (SWA archs).
+
+    Numerically identical to ``flash_decode_attention``: attention is
+    permutation-invariant over KV positions, and the validity clamp
+    ``clip(length - hot_cap, 0, cold_cap)`` marks the whole window valid
+    once it wraps — ring order never matters. The dedicated entry point
+    keeps call sites explicit about their layout (and is where a
+    windowed-predication variant would land if SWA ever tiers).
+    """
+    return flash_decode_attention(
+        q, cache, scale, impl=impl, block_s=block_s, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("value_dim", "scale", "impl", "block_s", "interpret"),
+)
+def flash_decode_attention_latent(
+    q: jax.Array,  # (b, h, D) — D = latent + rope dims
+    cache: kvc.TieredKVCache,
+    value_dim: int,
+    scale: float,
+    *,
+    impl: str = "auto",
+    block_s: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """MLA absorbed-form attention over a tiered *latent* cache.
+
+    The cache k-slot holds (c_kv ‖ k_rope) per token; the v-slot is empty
+    — values are the first ``value_dim`` dims of the k-slot, sliced per
+    S-block in VMEM (the latent is stored exactly once and streamed
+    once). Returns the per-head latent context (b, h, value_dim) f32.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return kvc.tiered_decode_attention_latent(q, cache, value_dim, scale)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    return _flash_latent(
+        q, cache, value_dim, float(scale), block_s, _interpret(interpret)
+    )

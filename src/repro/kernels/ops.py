@@ -56,6 +56,15 @@ variant for expert-batched MoE weights (E, K/g, N): ONE launch with a
 leading expert grid dimension replaces E vmapped per-expert launches
 (which were impossible on the Pallas path anyway — ``pallas_call`` has no
 batching rule on this jax version, so the vmapped path was pinned to XLA).
+``ternary_matmul_expert_fused`` is the *carried-scale* E-loop form: when
+the activations arrive pre-quantized (``fuse_act_quant=False`` / a
+``QuantizedActivation`` producer), experts still run as one launch via
+the batched known-scale kernel instead of falling back to the vmapped
+XLA path.
+
+``select_blocks(kind="decode_attn")`` serves a different grid entirely:
+the flash-decode attention kernel (kernels/flash_decode.py) keys its
+S-block size off the same static-table machinery.
 """
 
 from __future__ import annotations
@@ -68,6 +77,7 @@ import jax.numpy as jnp
 from repro.core import packing
 from repro.kernels.ternary_matmul import (
     ternary_matmul_actq_pallas,
+    ternary_matmul_fused_batched_pallas,
     ternary_matmul_fused_pallas,
     ternary_matmul_pallas,
 )
@@ -110,6 +120,19 @@ _BLOCK_TABLES = {
         (128, 128, 256, 512),
         (None, 256, 256, 512),
     ),
+    # decode_attn keys on the flash-decode grid (kernels/flash_decode.py):
+    # M = q rows per kv group (GQA rep, or all h heads for the MLA latent
+    # form), N = the head/latent lane width, K = cache *capacity*, and the
+    # returned block_k is the S-block the kernel streams per grid step.
+    # GQA rows (rep <= 16): S = 256 — a (256, 128) bf16 KV tile pair is
+    # ~128 KiB double-buffered, and wider S amortizes each tile's copy
+    # across more softmax columns. The MLA row halves S: the latent tile
+    # is ~4.5x wider (576 lanes) and the (h, value_dim) f32 accumulator
+    # already holds ~256 KiB of VMEM.
+    "decode_attn": (
+        (16, 16, 128, 256),
+        (None, 128, 128, 128),
+    ),
 }
 
 
@@ -117,19 +140,27 @@ def select_blocks(m: int, n: int, k: int, codec: str, kind: str = "fused") -> tu
     """(M, N, K) -> (block_m, block_n, block_k) from the static table.
 
     ``kind`` picks the grid's table: "fused" (known-scale int8 grids),
-    "actq" (two-phase act-quant prologue) or "expert" (E-loop MoE grid) —
-    see the table comment for how the rows differ. Caps block_n / block_k
-    at the padded operand extent and aligns block_k to the codec group so
-    a block never spans a partial packed byte. For pack243 the group (5)
-    is coprime with the 128-lane tile, so block_k additionally snaps to
-    multiples of lcm(5, 128) = 640 whenever K allows — otherwise the
-    (bm, bk) x tile and (bk/5, bn) packed tile would be lane-misaligned on
-    real TPU (interpret mode doesn't care, Mosaic does).
+    "actq" (two-phase act-quant prologue), "expert" (E-loop MoE grid) or
+    "decode_attn" (flash-decode S blocks; M/N/K are the q rows per kv
+    group, head width and cache capacity — block_k is the S-block) — see
+    the table comment for how the rows differ. The matmul kinds cap
+    block_n / block_k at the padded operand extent and align block_k to
+    the codec group so a block never spans a partial packed byte. For
+    pack243 the group (5) is coprime with the 128-lane tile, so block_k
+    additionally snaps to multiples of lcm(5, 128) = 640 whenever K
+    allows — otherwise the (bm, bk) x tile and (bk/5, bn) packed tile
+    would be lane-misaligned on real TPU (interpret mode doesn't care,
+    Mosaic does). ``decode_attn`` has no packed operand, so ``codec`` is
+    ignored and block_k caps at the capacity directly (the flash kernel
+    handles partial S-blocks by masking).
     """
-    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
     for max_m, bm, bn, bk in _BLOCK_TABLES[kind]:
         if max_m is None or m <= max_m:
             break
+    if kind == "decode_attn":
+        bn = min(bn, _round_up(max(n, 1), 128))
+        return bm, bn, min(bk, max(k, 1))
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
     bn = min(bn, _round_up(max(n, 1), 128))
     kp = _round_up(max(k, 1), group)
     bk = min(bk, kp)
@@ -440,6 +471,77 @@ def ternary_matmul_expert(
     interpret = jax.default_backend() == "cpu"
     out = ternary_matmul_actq_pallas(
         x2, wp, ws, codec=codec, act_bits=act_bits,
+        block_m=bm, block_n=bn, block_k=bk, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[:, :c, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "codec", "impl", "out_dtype",
+                     "block_m", "block_n", "block_k"),
+)
+def ternary_matmul_expert_fused(
+    xq: jax.Array,
+    packed: jax.Array,
+    x_scale: jax.Array,
+    col_scale: jax.Array,
+    *,
+    k: int,
+    codec: str = "pack2",
+    impl: str = "pallas",
+    out_dtype=jnp.float32,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """Carried-scale E-loop expert matmul: int8 (E, C, K) x packed
+    (E, K/g, N) -> (E, C, N) float, epilogue fused.
+
+    The ``fuse_act_quant=False`` / ``QuantizedActivation`` twin of
+    ``ternary_matmul_expert``: the caller already quantized the
+    activations (``x_scale``: (E, C, 1) f32 per-row scale), so the kernel
+    skips the absmax phase and still covers every expert in ONE launch.
+    ``col_scale``: (E, N) f32 per-column weight scale. The XLA fallback
+    vmaps the unpack-dot + rescale per expert (numerically identical
+    ops — bit-exact against the kernel).
+    """
+    e, c, _ = xq.shape
+    ep, kp, n = packed.shape
+    assert ep == e, (ep, e)
+    assert x_scale.shape == (e, c, 1), (x_scale.shape, e, c)
+    assert col_scale.shape == (e, n), (col_scale.shape, e, n)
+    if impl == "xla":
+        acc = jax.vmap(lambda xx, pp: _xla_path(xx, pp, k, codec))(xq, packed)
+        y = acc.astype(jnp.float32) * (
+            col_scale[:, None, :] / x_scale.astype(jnp.float32)
+        )
+        return y.astype(out_dtype)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    bm, bn, bk = _resolve_blocks(
+        c, n, kp * group, codec, block_m, block_n, block_k, kind="expert"
+    )
+    mp = _round_up(max(c, 1), bm)
+    np_ = _round_up(n, bn)
+    kpp = _round_up(kp * group, bk)
+    x2 = jnp.pad(xq, ((0, 0), (0, mp - c), (0, kpp - xq.shape[-1])))
+    wp = _pad_packed(packed, kpp // group, np_, codec)
+    # padded rows divide by 1 (not 0); padded columns scale to exactly 0
+    xs = jnp.pad(
+        x_scale.astype(jnp.float32), ((0, 0), (0, mp - c), (0, 0)),
+        constant_values=1.0,
+    )
+    ws = jnp.pad(
+        col_scale.astype(jnp.float32), ((0, 0), (0, np_ - n))
+    )[:, None, :]
+
+    interpret = jax.default_backend() == "cpu"
+    out = ternary_matmul_fused_batched_pallas(
+        x2, wp, xs, ws, codec=codec,
         block_m=bm, block_n=bn, block_k=bk, out_dtype=out_dtype,
         interpret=interpret,
     )

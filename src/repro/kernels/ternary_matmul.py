@@ -227,6 +227,90 @@ def ternary_matmul_fused_pallas(
     )(xq, packed, x_scale.astype(jnp.float32), col_scale.astype(jnp.float32))
 
 
+def _fused_batched_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *,
+                          codec: str, k_steps: int):
+    """Known-scale fused body on the E-loop grid (B, gm, gn, gk): the
+    carried-scale twin of the two-phase expert kernel — same integer
+    pipeline and epilogue as ``_fused_kernel``, leading batch dimension
+    like ``_actq_kernel``, no absmax phase (the caller already owns the
+    per-row scale)."""
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    decode = _decode2_block if codec == "pack2" else _decode243_block
+    trits = decode(w_ref[0])  # (bk, bn) int8 in {-1,0,+1}
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0],
+        trits,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(kk == k_steps - 1)
+    def _epilogue():
+        y = acc_ref[...].astype(jnp.float32) * (ws_ref[0] / xs_ref[0])
+        o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codec", "block_m", "block_n", "block_k", "out_dtype",
+                     "interpret"),
+)
+def ternary_matmul_fused_batched_pallas(
+    xq: jax.Array,
+    packed: jax.Array,
+    x_scale: jax.Array,
+    col_scale: jax.Array,
+    *,
+    codec: str = "pack2",
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B, M, K) int8 x packed (B, K/g, N) uint8 -> (B, M, N) float.
+
+    The *carried-scale* E-loop kernel: one launch covers every batch row
+    (B = E experts) with epilogue fusion, taking already-quantized int8
+    activations plus their per-row scale — the ``fuse_act_quant=False`` /
+    ``QuantizedActivation`` form of ``ternary_matmul_actq_pallas``.
+    ``x_scale``: (B, M, 1) f32; ``col_scale``: (B, 1, N) f32. Shapes must
+    already be padded to block multiples (ops.py handles padding; padded
+    x_scale rows must be nonzero).
+    """
+    group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
+    assert block_k % group == 0, (block_k, group)
+    b, m, k = xq.shape
+    bb, kp, n = packed.shape
+    assert bb == b and kp * group == k, (bb, b, kp, group, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (m, n, k)
+    assert x_scale.shape == (b, m, 1), x_scale.shape
+    assert col_scale.shape == (b, 1, n), col_scale.shape
+
+    grid = (b, m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_fused_batched_kernel, codec=codec, k_steps=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k), lambda b, i, j, kk: (b, i, kk)),
+            pl.BlockSpec((1, block_k // group, block_n),
+                         lambda b, i, j, kk: (b, kk, j)),
+            pl.BlockSpec((1, block_m, 1), lambda b, i, j, kk: (b, i, 0)),
+            pl.BlockSpec((1, 1, block_n), lambda b, i, j, kk: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda b, i, j, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(xq, packed, x_scale.astype(jnp.float32), col_scale.astype(jnp.float32))
+
+
 def _actq_kernel(x_ref, w_ref, ws_ref, o_ref, scale_ref, acc_ref, *,
                  codec: str, k_steps: int, qmax: float, qmin: float):
     """Two-phase body: absmax K-sweep (phase 0), quantized accumulate +

@@ -8,7 +8,11 @@ is O(chunk²) instead of O(S²), which is what makes the 32k prefill and the
 
 Decode uses the two-tier DR KV cache (core/kv_cache.py) — hot early-token
 buffer + cold tail — or a ring buffer for sliding-window archs (SWA evicts
-early tokens, so DR tiering is N/A there; see DESIGN.md §4).
+early tokens, so DR tiering is N/A there; see DESIGN.md §4). The attention
+read itself goes through kernels/flash_decode.py: a streaming online-
+softmax Pallas kernel (both tiers merged in one launch, per-slot lengths
+predicating the S-blocks) on TPU, with the masked full-capacity XLA path
+in core/kv_cache.py as the reference fallback.
 
 MLA (DeepSeek-V3) caches the compressed latent (c_kv ‖ k_rope, 576 B/token)
 and decodes in *absorbed* form (W_uk folded into the query, W_uv folded out
@@ -22,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import kv_cache as kvc
+from repro.kernels import flash_decode as fd
 from repro.models import qops
 from repro.models.layers import apply_rope, init_rms_norm, rms_norm
 
@@ -212,7 +217,11 @@ def attention_decode(
 
     RoPE positions come from the per-slot ``cache.lengths``, so slots at
     different sequence lengths decode side by side (continuous batching);
-    ``active`` gates the KV append per slot.
+    ``active`` gates the KV append per slot. Attention runs the flash-
+    decode fast path (``kernels/flash_decode.py``): the streaming Pallas
+    kernel on TPU, the masked full-capacity XLA reference elsewhere
+    (``qops.resolve_impl`` — the same dispatch rule as the packed
+    matmuls).
     """
     b, _ = x.shape
     h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -221,12 +230,13 @@ def attention_decode(
     q = apply_rope(q, pos, cfg.rope_theta)[:, 0]  # (b,h,hd)
     k = apply_rope(k, pos, cfg.rope_theta)[:, 0]  # (b,g,hd)
     v = v[:, 0]
+    impl = qops.resolve_impl(cfg)
     if cfg.attn_type == "swa":
         cache = kvc.append_decode_ring(cache, k, v, active=active)
-        o = kvc.tiered_decode_attention(q, cache, ring=True)
+        o = fd.flash_decode_attention_ring(q, cache, impl=impl)
     else:
         cache = kvc.append_decode(cache, k, v, active=active)
-        o = kvc.tiered_decode_attention(q, cache)
+        o = fd.flash_decode_attention(q, cache, impl=impl)
     y = qops.linear(
         p["wo"], o.reshape(b, h * hd), cfg, mode, lora_leaf=p.get("lora_o")
     )
@@ -387,8 +397,9 @@ def mla_decode(p, x, cfg: ModelConfig, mode, cache: kvc.TieredKVCache,
         att_cache = cache
 
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
-    ctx = kvc.tiered_decode_attention_latent(
-        q_full, att_cache, value_dim=m.kv_lora_rank, scale=scale
+    ctx = fd.flash_decode_attention_latent(
+        q_full, att_cache, value_dim=m.kv_lora_rank, scale=scale,
+        impl=qops.resolve_impl(cfg),
     )  # (b,h,dl)
 
     w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)

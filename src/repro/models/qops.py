@@ -180,10 +180,12 @@ def expert_linear(leaf, x: jax.Array, cfg: ModelConfig, mode: str = "qat",
     """Per-expert linear: x (E, C, K) @ W (E, K, N) -> (E, C, N).
 
     Packed leaves route through ``bitlinear.expert_packed_matmul``: ONE
-    E-loop Pallas launch over all experts (act-quant prologue fused) when
-    the resolved impl is "pallas", else the vmapped per-expert XLA path.
-    ``impl`` overrides the config-resolved path (the grouped-dispatch MoE
-    branch runs under ``jax.vmap``, where a pallas_call cannot appear).
+    E-loop Pallas launch over all experts when the resolved impl is
+    "pallas" — act-quant-prologue-fused by default, or the carried-scale
+    known-scale kernel under ``fuse_act_quant=False`` — else the vmapped
+    per-expert XLA path. ``impl`` overrides the config-resolved path (the
+    grouped-dispatch MoE branch runs under ``jax.vmap``, where a
+    pallas_call cannot appear).
     """
     if isinstance(leaf, (PackedLinear, FusedPackedLinear)):
         return bitlinear.expert_packed_matmul(

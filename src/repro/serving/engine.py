@@ -27,8 +27,12 @@ reads the small ``done``/``allocated`` masks, retires finished slots,
 harvests their outputs and per-slot ledgers, and admits queued prompts
 into the freed slots via a prefill dispatch + cache scatter
 (``serving/scheduler.py`` decides who goes where). Slots at different
-sequence lengths decode side by side; per-slot validity masks inside
-``core/kv_cache.py`` keep each sequence's attention exact.
+sequence lengths decode side by side; per-slot lengths keep each
+sequence's attention exact — on TPU via the flash-decode Pallas kernel
+(``kernels/flash_decode.py``: hot and cold tier merged in one streaming
+launch, S-blocks predicated per slot so a sequence streams only its own
+prefix — the compute-side counterpart of the DR-traffic ledger below),
+elsewhere via the masked validity paths in ``core/kv_cache.py``.
 
 Traffic accounting
 ------------------
@@ -125,7 +129,9 @@ class Engine:
         # decode hot loop then runs the packed fast path (core/bitlinear.
         # packed_matmul: act-quant-prologue + epilogue-fused Pallas kernel on
         # TPU via BitNetConfig.impl="auto" — raw bf16 in, scaled float out,
-        # no int8/int32 HBM intermediates; E-loop expert kernel for MoE).
+        # no int8/int32 HBM intermediates; E-loop expert kernel for MoE) and
+        # the flash-decode attention kernel (kernels/flash_decode.py) over
+        # the tiered KV cache, dispatched by the same impl="auto" rule.
         self.params = pack_lib.pack_params(params, cfg) if pack else params
         self.mode = "packed" if pack else "qat"
         self.hot_cap = hot_cap

@@ -6,7 +6,9 @@ Covers the production path end to end (ISSUE 2 + ISSUE 3):
   * two-phase act-quant PROLOGUE kernel vs the quantize-then-matmul
     reference — bit-exact, both codecs, M=1/odd shapes, A8 and A4;
   * E-loop expert kernel (one launch over all experts) vs the vmapped
-    per-expert forward — bit-exact, incl. the fused gate‖up MoE path;
+    per-expert forward — bit-exact, incl. the fused gate‖up MoE path and
+    the carried-scale (fuse_act_quant=False) form, which no longer falls
+    back to the vmapped XLA path;
   * MLA down-projection fusion (w_dq‖w_dkv -> "w_dqkv", post-split norms);
   * shape-aware block selection (decode-shaped auto blocks stay exact);
   * pack2/pack243 zero-code padding repair regression (operator precedence);
@@ -300,6 +302,56 @@ def test_expert_packed_matmul_paths_agree(codec):
         y_p = bitlinear.expert_packed_matmul(leaf, x, impl="pallas")
         y_x = bitlinear.expert_packed_matmul(leaf, x, impl="xla")
         np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_x))
+
+
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("c", [1, 5, 16])
+def test_expert_carried_scale_eloop_matches_vmapped(codec, c):
+    """The carried-scale E-loop kernel (fuse_act_quant=False form:
+    pre-quantized int8 x + per-row scale, no absmax phase) == the vmapped
+    per-expert known-scale pipeline, bit-for-bit."""
+    from repro.core.ternary import act_quant
+
+    e, k, n = 4, 96, 72
+    x, packed = _expert_case(c * 13 + 5, e, c, k, n, codec)
+    cs = jax.random.uniform(jax.random.PRNGKey(4), (e, n)) + 0.5
+    q = act_quant(x)
+    got = ops.ternary_matmul_expert_fused(
+        q.xq, packed, q.scale, cs, k=k, codec=codec, impl="pallas")
+    want = ops.ternary_matmul_expert_fused(
+        q.xq, packed, q.scale, cs, k=k, codec=codec, impl="xla")
+    assert got.shape == (e, c, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and both equal the prologue-fused kernel (same int ops end to end)
+    fused = ops.ternary_matmul_expert(x, packed, cs, k=k, codec=codec,
+                                      impl="pallas")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(fused))
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_expert_packed_matmul_carried_scale_no_xla_fallback(codec):
+    """ROADMAP gap closed: with fuse_actq=False (or a QuantizedActivation
+    producer) the Pallas path runs the carried-scale E-loop kernel and
+    stays bit-identical to the vmapped XLA path for both leaf kinds."""
+    from repro.core.ternary import act_quant
+    from repro.models.pack import _pack_weight, fuse_packed
+
+    e, c, k, ff = 3, 4, 64, 32
+    keys = jax.random.split(jax.random.PRNGKey(19), 3)
+    w_g = jax.random.normal(keys[0], (e, k, ff)) * k**-0.5
+    w_u = jax.random.normal(keys[1], (e, k, ff)) * k**-0.5
+    pg = _pack_weight(w_g, codec)
+    fused = fuse_packed([pg, _pack_weight(w_u, codec)])
+    x = jax.random.normal(keys[2], (e, c, k))
+    for leaf in (pg, fused):
+        want = bitlinear.expert_packed_matmul(leaf, x, impl="xla",
+                                              fuse_actq=False)
+        got = bitlinear.expert_packed_matmul(leaf, x, impl="pallas",
+                                             fuse_actq=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        got_q = bitlinear.expert_packed_matmul(leaf, act_quant(x),
+                                               impl="pallas")
+        np.testing.assert_array_equal(np.asarray(got_q), np.asarray(want))
 
 
 def test_moe_fused_gate_up_eloop_exact():

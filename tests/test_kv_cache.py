@@ -160,7 +160,7 @@ def test_ring_cold_tier_wraparound_per_slot():
     # validity clamps at cold_cap: all 4 positions valid for the wrapped
     # slot, 3 for the unwrapped one
     q = jax.random.normal(jax.random.PRNGKey(13), (b, 1, 4))
-    got = kv_cache.tiered_decode_attention(q, cache, ring=True)
+    got = kv_cache.tiered_decode_attention(q, cache)
     ks0 = cache.cold_k[0:1]  # ring content (order irrelevant to attention)
     want = _oracle_attention(q[0:1], ks0, ks0)
     np.testing.assert_allclose(np.asarray(got[0:1]), np.asarray(want), rtol=2e-5, atol=2e-5)

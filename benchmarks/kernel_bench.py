@@ -30,6 +30,13 @@ Sections (all emit ``name,us_per_call,derived`` rows):
     parked copies anyway, so ``predication_win`` hovers near 1x on CPU
     and the xla column wins wall-clock outright — see the honest-proxy
     note in docs/kernels.md.
+  * ``flash_prefill`` — streaming flash-prefill attention: fresh-prompt
+    causal sweep (the upper-triangle kv blocks a q block never needs are
+    parked — ``kv_blocks_streamed`` out of the full q×kv grid is the
+    causal-skip ledger) and a chunked continuation over a populated
+    tiered cache (streams the slots' prefixes, not the capacity). Same
+    honest-proxy caveat as flash_decode: the ledgers, not CPU interpret
+    wall time, are the signal.
   * ``packing_density`` / ``serving_token_rate`` — unchanged ledgers.
 """
 
@@ -282,6 +289,82 @@ def flash_decode() -> list:
             f"xla_us={t_x:.1f} s_blocks_streamed={live_h + live_c}/{total} "
             f"kv_tokens_streamed={streamed}_vs_capacity={cap} "
             f"block_s={bs} impl={_note('pallas')}"))
+    return rows
+
+
+def flash_prefill() -> list:
+    """Flash-prefill attention: fresh-prompt causal sweep + a chunked
+    continuation row over a populated tiered cache.
+
+    The quantity the kernel optimizes is the causal-skip / predication
+    ledger — ``kv_blocks_streamed`` out of the full q×kv grid for fresh
+    prompts (upper-triangle blocks park), and cache S-blocks touched vs
+    capacity for the continuation (a chunk at offset 448 streams ~448
+    cached tokens, not the 1024-token capacity). CPU interpret wall time
+    can NOT show either win (fixed per-grid-step interpreter cost,
+    parked copies still execute — the same honest-proxy caveat as
+    flash_decode in docs/kernels.md); the xla column is the production
+    CPU path (blockwise / tiered_chunk_attention composition).
+    """
+    from repro.core import kv_cache as kvc
+    from repro.kernels import flash_prefill as fpk
+
+    rows = []
+    b, h, g, d, theta = 2, 8, 4, 64, 1e6
+    # -- fresh prompts: causal skip across the q-block x kv-block grid --
+    for s, bq, bs in ((256, 64, 64), (512, 128, 128)):
+        ks = jax.random.split(jax.random.PRNGKey(s), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, s, g, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, s, g, d), jnp.bfloat16)
+        f_p = jax.jit(lambda q, k, v, bq=bq, bs=bs: fpk.flash_prefill_attention(
+            q, k, v, None, rope_theta=theta, impl="pallas",
+            block_q=bq, block_s=bs))
+        f_x = jax.jit(lambda q, k, v, bq=bq, bs=bs: fpk.flash_prefill_attention(
+            q, k, v, None, rope_theta=theta, impl="xla",
+            block_q=bq, block_s=bs))
+        t_p = time_us(lambda: jax.block_until_ready(f_p(q, k, v)[0]),
+                      iters=_iters("pallas"))
+        t_x = time_us(lambda: jax.block_until_ready(f_x(q, k, v)[0]),
+                      iters=_iters("pallas"))
+        nq, n_new = -(-s // bq), -(-s // bs)
+        live = sum(
+            min((qi * bq + bq - 1) // bs, n_new - 1) + 1 for qi in range(nq)
+        )
+        rows.append(row(
+            f"kernel/flash_prefill_s{s}", t_p,
+            f"xla_us={t_x:.1f} kv_blocks_streamed={live}/{nq * n_new} "
+            f"causal_skip={1 - live / (nq * n_new):.2f} "
+            f"block_q={bq} block_s={bs} impl={_note('pallas')}"))
+    # -- chunked continuation: a 64-token chunk at offset 448 of a
+    # 1024-capacity cache streams only the slots' own prefixes ---------
+    cap, hot, off, c = 1024, 32, 448, 64
+    cache = kvc.init_cache(b, hot, cap - hot, (g, d), jnp.bfloat16)
+    hist_k = jax.random.normal(jax.random.PRNGKey(7), (b, off, g, d))
+    hist_v = jax.random.normal(jax.random.PRNGKey(8), (b, off, g, d))
+    cache = kvc.append(cache, hist_k, hist_v)
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (b, c, h, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, c, g, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, c, g, d), jnp.bfloat16)
+    f_p = jax.jit(lambda q, k, v, cc: fpk.flash_prefill_attention(
+        q, k, v, cc, rope_theta=theta, impl="pallas"))
+    f_x = jax.jit(lambda q, k, v, cc: fpk.flash_prefill_attention(
+        q, k, v, cc, rope_theta=theta, impl="xla"))
+    t_p = time_us(lambda: jax.block_until_ready(f_p(q, k, v, cache)[0]),
+                  iters=_iters("pallas"))
+    t_x = time_us(lambda: jax.block_until_ready(f_x(q, k, v, cache)[0]),
+                  iters=_iters("pallas"))
+    bs = ops.select_blocks(h // g, d, c, "pack2", kind="prefill_attn")[2]
+    bs_hot, bs_cold = min(bs, hot), min(bs, cap - hot)
+    streamed = (
+        -(-min(off, hot) // bs_hot) * bs_hot
+        + -(-max(off - hot, 0) // bs_cold) * bs_cold + c
+    )
+    rows.append(row(
+        f"kernel/flash_prefill_chunk{c}_off{off}", t_p,
+        f"xla_us={t_x:.1f} kv_tokens_streamed={streamed}_vs_capacity={cap + c} "
+        f"block_s={bs} impl={_note('pallas')}"))
     return rows
 
 

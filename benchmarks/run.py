@@ -54,8 +54,10 @@ def main() -> None:
         ("kernel/expert_eloop", kernel_bench.expert_eloop),
         ("kernel/fused_qkv", kernel_bench.fused_projection),
         ("kernel/flash_decode", kernel_bench.flash_decode),
+        ("kernel/flash_prefill", kernel_bench.flash_prefill),
         ("serving", kernel_bench.serving_token_rate),
         ("serving/continuous", serving_bench.serving_throughput),
+        ("serving/admission", serving_bench.chunked_admission),
     ]
     if not args.fast:
         sections.append(("fig6a", paper_tables.fig6a))

@@ -106,6 +106,11 @@ class ModelConfig:
     frontend: str = "none"  # none | audio | vision
     frontend_dim: int = 0
     n_patches: int = 0  # VLM: image patches per sample
+    # decode headroom: when transformer.prefill is called without an
+    # explicit max_len, the cache is sized prompt_len + decode_headroom —
+    # this is the hard cap on how many tokens can then be decoded (the
+    # historical hard-wired "+128"; see docs/serving.md "Knobs").
+    decode_headroom: int = 128
     mla: Optional[MLAConfig] = None
     moe: Optional[MoEConfig] = None
     ssm: Optional[SSMConfig] = None

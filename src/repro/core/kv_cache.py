@@ -79,17 +79,39 @@ def _active_mask(cache: TieredKVCache, active: Optional[jax.Array]) -> jax.Array
     return active.astype(bool)
 
 
-def append(cache: TieredKVCache, k_new: jax.Array, v_new: jax.Array) -> TieredKVCache:
-    """Append ``t_new`` tokens (batch, t_new, ...). Early positions land hot.
+def append(
+    cache: TieredKVCache,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    valid: Optional[jax.Array] = None,
+    ring: bool = False,
+) -> TieredKVCache:
+    """Append up to ``t_new`` tokens (batch, t_new, ...). Early positions
+    land hot.
 
     Each slot appends starting at its own ``lengths[b]``, so the same call
-    serves aligned prefill (all lengths equal) and per-slot refill. Routing
-    is data-independent given the traced lengths: every new token goes to
-    the hot tier if its absolute position < hot_cap, else cold.
+    serves aligned prefill (all lengths equal), per-slot refill and the
+    chunked-prefill placement (serving/engine.py): ``valid`` (b,) int32
+    caps how many of the ``t_new`` rows are real per slot — rows past a
+    slot's valid count (chunk padding) are neither written nor counted,
+    and lengths advance by ``valid``. Routing is data-independent given
+    the traced lengths: every new token goes to the hot tier if its
+    absolute position < hot_cap, else cold — or, with ``ring=True``
+    (sliding-window archs), to cold slot (pos - hot_cap) % cold_cap. In
+    ring mode only each slot's last ``cold_cap`` valid tokens write (the
+    earlier ones would be evicted within this very call; keeping a single
+    writer per ring slot keeps the one-hot scatter exact).
     """
     t_new = k_new.shape[1]
     start = cache.lengths  # (b,)
-    pos = start[:, None] + jnp.arange(t_new, dtype=jnp.int32)[None]  # (b, t)
+    t_idx = jnp.arange(t_new, dtype=jnp.int32)[None]  # (1, t)
+    pos = start[:, None] + t_idx  # (b, t)
+    if valid is None:
+        vmask = jnp.ones(pos.shape, bool)
+        n_new = jnp.full_like(start, t_new)
+    else:
+        n_new = valid.astype(jnp.int32)
+        vmask = t_idx < n_new[:, None]
 
     def scatter(tier_k, tier_v, tier_pos, in_tier):
         # tier_pos: (b, t) position within the tier (clipped); in_tier: bool
@@ -107,10 +129,16 @@ def append(cache: TieredKVCache, k_new: jax.Array, v_new: jax.Array) -> TieredKV
         mask = written.reshape(written.shape + (1,) * (tier_k.ndim - 2))
         return jnp.where(mask, upd_k, tier_k), jnp.where(mask, upd_v, tier_v)
 
-    in_hot = pos < cache.hot_cap
+    in_hot = (pos < cache.hot_cap) & vmask
     hot_k, hot_v = scatter(cache.hot_k, cache.hot_v, pos, in_hot)
-    cold_k, cold_v = scatter(cache.cold_k, cache.cold_v, pos - cache.hot_cap, ~in_hot)
-    return TieredKVCache(hot_k, hot_v, cold_k, cold_v, start + t_new)
+    in_cold = (pos >= cache.hot_cap) & vmask
+    cold_pos = pos - cache.hot_cap
+    if ring and cache.cold_cap:
+        cold_pos = cold_pos % cache.cold_cap
+        # single writer per ring slot: only the last cold_cap valid rows
+        in_cold &= (n_new[:, None] - 1 - t_idx) < cache.cold_cap
+    cold_k, cold_v = scatter(cache.cold_k, cache.cold_v, cold_pos, in_cold)
+    return TieredKVCache(hot_k, hot_v, cold_k, cold_v, start + n_new)
 
 
 def _append_one(
@@ -305,6 +333,167 @@ def tiered_decode_attention_latent(
     num = n1 * a1[..., None] + n2 * a2[..., None]
     den = d1 * a1 + d2 * a2
     return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+def fill_fresh(
+    cache: TieredKVCache,
+    k_new: jax.Array,  # (b, s, ...) — already rotated + tier-dtype-ready
+    v_new: jax.Array,
+    ring: bool = False,
+) -> TieredKVCache:
+    """Place an aligned full-prompt k/v (offset 0, every slot s tokens)
+    into a *fresh* cache with static slices — no one-hot scatter.
+
+    Content-identical to ``append`` on a zero cache (the flash-prefill
+    kernel already emitted k/v in position order and tier dtype, so
+    placement degenerates to two slice-assignments), and to the ring
+    realign of the legacy SWA fill when ``s > cold_cap``.
+    """
+    b, s = k_new.shape[:2]
+    if ring and s > cache.cold_cap:
+        w = cache.cold_cap
+        # slot of token p is p % w; realign so slots match positions
+        idx = jnp.arange(s - w, s) % w
+        order = jnp.argsort(idx)
+        return cache._replace(
+            cold_k=k_new[:, s - w:][:, order].astype(cache.cold_k.dtype),
+            cold_v=v_new[:, s - w:][:, order].astype(cache.cold_v.dtype),
+            lengths=jnp.full_like(cache.lengths, s),
+        )
+    n_h = min(s, cache.hot_cap)
+    n_c = min(s - n_h, cache.cold_cap)
+    hot_k, hot_v = cache.hot_k, cache.hot_v
+    cold_k, cold_v = cache.cold_k, cache.cold_v
+    if n_h:
+        hot_k = hot_k.at[:, :n_h].set(k_new[:, :n_h].astype(hot_k.dtype))
+        hot_v = hot_v.at[:, :n_h].set(v_new[:, :n_h].astype(hot_v.dtype))
+    if n_c:
+        cold_k = cold_k.at[:, :n_c].set(
+            k_new[:, n_h : n_h + n_c].astype(cold_k.dtype))
+        cold_v = cold_v.at[:, :n_c].set(
+            v_new[:, n_h : n_h + n_c].astype(cold_v.dtype))
+    return TieredKVCache(
+        hot_k, hot_v, cold_k, cold_v, jnp.full_like(cache.lengths, s)
+    )
+
+
+def ring_slot_positions(offset: jax.Array, cold_cap: int) -> jax.Array:
+    """Absolute position held by each ring-buffer cold slot: (b, cold_cap).
+
+    With hot_cap = 0 (SWA layout) position p writes ring slot p % cold_cap,
+    so slot j holds the largest p < offset with p ≡ j (mod cold_cap) — or
+    nothing yet, reported as a negative value (mask on ``>= 0``). Decode
+    reads never need this (a wrapped window is fully valid and softmax is
+    permutation-invariant), but *prefill continuation* does: a chunk's
+    later q rows slide the window past the oldest ring entries, and only
+    the absolute position says which ones fell out.
+    """
+    j = jnp.arange(cold_cap, dtype=jnp.int32)[None]  # (1, cap)
+    off = offset.astype(jnp.int32)[:, None]  # (b, 1)
+    return off - 1 - ((off - 1 - j) % cold_cap)
+
+
+def tiered_chunk_attention(
+    q: jax.Array,  # (b, C, h, dk) — RoPE already applied
+    k_new: jax.Array,  # (b, C, g, dk) — RoPE already applied
+    v_new: jax.Array,  # (b, C, g, dv)
+    cache: Optional[TieredKVCache],
+    valid: Optional[jax.Array] = None,  # (b,) valid chunk rows (default C)
+    scale: float | None = None,
+    window: int = 0,
+    ring: bool = False,
+) -> jax.Array:
+    """Causal chunk attention over [tiered cache prefix ‖ own chunk].
+
+    The XLA reference for the flash-prefill kernel's *continuation* form
+    (kernels/flash_prefill.py): each chunk row attends to the slot's
+    cached prefix (per-slot ``cache.lengths`` tokens, both tiers) plus
+    the causally-earlier rows of its own chunk. ``valid`` marks how many
+    chunk rows are real per slot (chunk padding rows produce garbage
+    output and attend nothing). ``window`` applies SWA masking by
+    absolute position — with ``ring=True`` the cold tier is the wrapped
+    ring layout and slot positions come from ``ring_slot_positions``.
+    Partials over (hot, cold, chunk) merge with the same streaming
+    softmax as the decode read; tiers are never concatenated.
+    """
+    b, C, h, dk = q.shape
+    g = k_new.shape[2]
+    rep = h // g
+    dv = v_new.shape[-1]
+    scale = scale if scale is not None else dk**-0.5
+    offset = (
+        cache.lengths.astype(jnp.int32)
+        if cache is not None
+        else jnp.zeros((b,), jnp.int32)
+    )
+    n_new = (
+        valid.astype(jnp.int32) if valid is not None
+        else jnp.full((b,), C, jnp.int32)
+    )
+    q_pos = offset[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # (b, C)
+    qg = jnp.moveaxis(q.reshape(b, C, g, rep, dk), 1, 3)  # (b, g, rep, C, dk)
+    neg = jnp.finfo(jnp.float32).min
+
+    def partial(kbuf, vbuf, kpos, kvalid):
+        # kbuf: (b, S, g, dk); vbuf: (b, S, g, dv); kpos/kvalid: (b, S)
+        s = kbuf.shape[1]
+        if s == 0:
+            return (
+                jnp.zeros((b, g, rep, C, dv), jnp.float32),
+                jnp.zeros((b, g, rep, C), jnp.float32),
+                jnp.full((b, g, rep, C), neg),
+            )
+        kf = _upcast(kbuf)
+        vf = _upcast(vbuf)
+        logits = jnp.einsum(
+            "bgrcd,bsgd->bgrcs", qg.astype(kf.dtype), kf,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        mask = kvalid[:, None, :] & (q_pos[:, :, None] >= kpos[:, None, :])
+        if window:
+            mask &= (q_pos[:, :, None] - kpos[:, None, :]) < window
+        mask = mask[:, None, None]  # (b, 1, 1, C, S)
+        logits = jnp.where(mask, logits, neg)
+        m = jnp.max(logits, axis=-1)
+        p = jnp.exp(logits - m[..., None]) * mask
+        denom = jnp.sum(p, axis=-1)
+        num = jnp.einsum(
+            "bgrcs,bsgd->bgrcd", p.astype(vf.dtype), vf,
+            preferred_element_type=jnp.float32,
+        )
+        return num.astype(jnp.float32), denom, m
+
+    parts = []
+    if cache is not None and cache.hot_cap:
+        hpos = jnp.broadcast_to(
+            jnp.arange(cache.hot_cap, dtype=jnp.int32)[None], (b, cache.hot_cap)
+        )
+        hvalid = hpos < jnp.minimum(offset, cache.hot_cap)[:, None]
+        parts.append(partial(cache.hot_k, cache.hot_v, hpos, hvalid))
+    if cache is not None and cache.cold_cap:
+        if ring:
+            cpos = ring_slot_positions(offset, cache.cold_cap)
+            cvalid = cpos >= 0
+        else:
+            j = jnp.arange(cache.cold_cap, dtype=jnp.int32)[None]
+            cpos = jnp.broadcast_to(cache.hot_cap + j, (b, cache.cold_cap))
+            n_cold = jnp.clip(offset - cache.hot_cap, 0, cache.cold_cap)
+            cvalid = j < n_cold[:, None]
+        parts.append(partial(cache.cold_k, cache.cold_v, cpos, cvalid))
+    npos = q_pos  # the chunk's own kv rows share the q positions
+    nvalid = jnp.arange(C, dtype=jnp.int32)[None] < n_new[:, None]
+    parts.append(partial(k_new, v_new, npos, nvalid))
+
+    num, den, m = parts[0]
+    for n2, d2, m2 in parts[1:]:
+        m_new = jnp.maximum(m, m2)
+        a1 = jnp.exp(m - m_new) * (den > 0)
+        a2 = jnp.exp(m2 - m_new) * (d2 > 0)
+        num = num * a1[..., None] + n2 * a2[..., None]
+        den = den * a1 + d2 * a2
+        m = m_new
+    out = num / jnp.maximum(den, 1e-30)[..., None]  # (b, g, rep, C, dv)
+    return jnp.moveaxis(out, 3, 1).reshape(b, C, h, dv).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -85,14 +85,39 @@ def _interpret(interpret) -> bool:
 # ---------------------------------------------------------------------------
 
 
+def _rope_rows(x, pos, rope_dims: int, theta: float):
+    """Rotate the trailing ``rope_dims`` dims of x (rows, d) f32 at ``pos``
+    (rows, 1) int32 — the in-kernel RoPE prologue shared by flash-decode
+    and flash-prefill. Reproduces ``layers.apply_rope`` bit-for-bit: the
+    freqs exponent numerator 2i is formed exactly, the rotation uses the
+    same half-split expressions, all in f32."""
+    d = x.shape[-1]
+    rd = rope_dims
+    half = rd // 2
+    base = x[:, d - rd:]
+    two_i = jax.lax.broadcasted_iota(jnp.float32, (1, half), 1) * 2.0
+    freqs = 1.0 / (theta ** (two_i / rd))  # (1, half)
+    ang = pos.astype(jnp.float32) * freqs  # (rows, half)
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    x1 = base[:, :half]
+    x2 = base[:, half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if rd == d:
+        return rot
+    return jnp.concatenate([x[:, : d - rd], rot], axis=-1)
+
+
 def _online_update(q, k_tile, v_tile, start, n_valid, scale,
-                   m_scr, l_scr, acc_scr):
+                   m_scr, l_scr, acc_scr, extra_mask=None):
     """One S-block step of the streaming softmax.
 
     q: (bm, dk) f32; k_tile: (bs, dk) f32; v_tile: (bs, dv) f32;
     ``start`` is the block's first absolute position within its tier,
     ``n_valid`` the tier's per-slot valid length. Scratch: m/l (bm, 1),
-    acc (bm, dv) — carried across the S grid dimension.
+    acc (bm, dv) — carried across the S grid dimension. ``extra_mask``
+    (1, bs) bool further restricts validity (the fused-RoPE decode path
+    masks the ring slot its append is about to evict).
     """
     logits = jax.lax.dot_general(
         q, k_tile, dimension_numbers=(((1,), (1,)), ((), ())),
@@ -100,6 +125,8 @@ def _online_update(q, k_tile, v_tile, start, n_valid, scale,
     ) * scale  # (bm, bs)
     pos = start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
     valid = pos < n_valid  # (bm, bs) — identical across rows
+    if extra_mask is not None:
+        valid &= extra_mask
     logits = jnp.where(valid, logits, NEG_INF)
     m_prev = m_scr[...]  # (bm, 1)
     m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
@@ -162,6 +189,91 @@ def _kernel_gqa(lens_ref, q_ref, hk_ref, hv_ref, ck_ref, cv_ref, o_ref,
     @pl.when(kk == pl.num_programs(2) - 1)
     def _finalize():
         # length-0 slot: l stays 0 -> output 0, matching the XLA path
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def _kernel_gqa_fused(lens_ref, act_ref, q_ref, hk_ref, hv_ref, ck_ref,
+                      cv_ref, kn_ref, vn_ref, o_ref, ko_ref, m_scr, l_scr,
+                      acc_scr, q_scr, *, scale, n_hot_blocks, hot_cap,
+                      cold_cap, ring, theta):
+    """The fused-RoPE twin of ``_kernel_gqa``: q and the pending token's
+    k arrive UNROTATED and rotate in the prologue at position
+    ``lens[b]``; the pending (k, v) joins the softmax as the final
+    stream element for active slots (the cache append then happens
+    *after* attention, consuming the rotated k this kernel emits). With
+    ``ring=True`` the cold slot the append is about to evict is masked —
+    the wrapped window [len-w+1, len] stays exact without pre-appending.
+    """
+    b_i = pl.program_id(0)
+    kk = pl.program_id(2)
+    length = lens_ref[b_i]
+    active = act_ref[b_i] != 0
+
+    @pl.when(kk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        q = q_ref[0, 0].astype(jnp.float32)  # (rep, dk)
+        pos = jnp.full((q.shape[0], 1), length, jnp.int32)
+        q_scr[...] = _rope_rows(q, pos, q.shape[-1], theta)
+
+    n_hot_valid = jnp.minimum(length, hot_cap)
+    n_cold_valid = jnp.clip(length - hot_cap, 0, cold_cap)
+    q = q_scr[...]
+
+    bs_hot = hk_ref.shape[1]
+    start_hot = kk * bs_hot
+
+    @pl.when((kk < n_hot_blocks) & (start_hot < n_hot_valid))
+    def _hot():
+        _online_update(
+            q, hk_ref[0].astype(jnp.float32), hv_ref[0].astype(jnp.float32),
+            start_hot, n_hot_valid, scale, m_scr, l_scr, acc_scr,
+        )
+
+    bs_cold = ck_ref.shape[1]
+    start_cold = (kk - n_hot_blocks) * bs_cold
+
+    @pl.when((kk >= n_hot_blocks) & (start_cold < n_cold_valid))
+    def _cold():
+        extra = None
+        if ring:
+            # the append (post-attention) will overwrite ring slot
+            # (length - hot_cap) % cold_cap; once the window has wrapped
+            # that slot holds position length - cold_cap — outside the
+            # window of the token being decoded — so mask it out.
+            j = start_cold + jax.lax.broadcasted_iota(
+                jnp.int32, (1, bs_cold), 1
+            )
+            evictee = (length - hot_cap) % cold_cap
+            wrapped = active & (length - hot_cap >= cold_cap)
+            extra = ~(wrapped & (j == evictee))
+        _online_update(
+            q, ck_ref[0].astype(jnp.float32), cv_ref[0].astype(jnp.float32),
+            start_cold, n_cold_valid, scale, m_scr, l_scr, acc_scr,
+            extra_mask=extra,
+        )
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _finalize():
+        k_rot = _rope_rows(
+            kn_ref[0].astype(jnp.float32),
+            jnp.full((1, 1), length, jnp.int32),
+            kn_ref.shape[-1], theta,
+        )  # (1, dk)
+        ko_ref[0] = k_rot.astype(ko_ref.dtype)
+
+        @pl.when(active)
+        def _pending():
+            # the pending token attends to itself, position `length`
+            _online_update(
+                q, k_rot, vn_ref[0].astype(jnp.float32),
+                0, 1, scale, m_scr, l_scr, acc_scr,
+            )
+
         o_ref[0, 0] = (
             acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
         ).astype(o_ref.dtype)
@@ -310,6 +422,88 @@ def _flash_gqa(q, cache, scale, block_s, interpret):
     return out.reshape(b, h, dv)
 
 
+def _flash_gqa_fused(q, cache, k_new, v_new, active, scale, theta, ring,
+                     block_s, interpret):
+    """Launch the fused-RoPE decode kernel: unrotated q/k_new in, rotated
+    k_new out alongside the attention output."""
+    b, h, dk = q.shape
+    g = cache.hot_k.shape[2]
+    rep = h // g
+    assert rep * g == h, (h, g)
+    dv = cache.hot_v.shape[-1]
+    hot_cap, cold_cap = cache.hot_cap, cache.cold_cap
+    if block_s is None:
+        block_s = ops.select_blocks(
+            rep, max(dk, dv), cache.capacity, "pack2", kind="decode_attn"
+        )[2]
+
+    def flat(t, d):
+        return t.reshape(b, t.shape[1], g * d)
+
+    dt = cache.hot_k.dtype
+    hk, bs_hot, n_hot = _tier_blocks(
+        flat(cache.hot_k, dk), hot_cap, block_s, (b, 1, g * dk), dt)
+    hv, _, _ = _tier_blocks(
+        flat(cache.hot_v, dv), hot_cap, block_s, (b, 1, g * dv), dt)
+    ck, bs_cold, n_cold = _tier_blocks(
+        flat(cache.cold_k, dk), cold_cap, block_s, (b, 1, g * dk), dt)
+    cv, _, _ = _tier_blocks(
+        flat(cache.cold_v, dv), cold_cap, block_s, (b, 1, g * dv), dt)
+
+    hot_map2, cold_map2 = _park_maps(hot_cap, cold_cap, bs_hot, bs_cold, n_hot)
+
+    def with_g(m):  # lift the (b, s) tier maps onto the (b, g, s) grid
+        return lambda b_i, g_i, kk, lens, act: (*m(b_i, kk, lens), g_i)
+
+    pin = lambda b_i, g_i, kk, lens, act: (b_i, 0, g_i)  # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, g, n_hot + n_cold),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, dk),
+                         lambda b_i, g_i, kk, lens, act: (b_i, g_i, 0, 0)),
+            pl.BlockSpec((1, bs_hot, dk), with_g(hot_map2)),
+            pl.BlockSpec((1, bs_hot, dv), with_g(hot_map2)),
+            pl.BlockSpec((1, bs_cold, dk), with_g(cold_map2)),
+            pl.BlockSpec((1, bs_cold, dv), with_g(cold_map2)),
+            pl.BlockSpec((1, 1, dk), pin),
+            pl.BlockSpec((1, 1, dv), pin),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep, dv),
+                         lambda b_i, g_i, kk, lens, act: (b_i, g_i, 0, 0)),
+            pl.BlockSpec((1, 1, dk), pin),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, dv), jnp.float32),
+            pltpu.VMEM((rep, dk), jnp.float32),
+        ],
+    )
+    act = (
+        jnp.ones((b,), jnp.int32) if active is None
+        else active.astype(jnp.int32)
+    )
+    out, k_rot = pl.pallas_call(
+        functools.partial(
+            _kernel_gqa_fused, scale=scale, n_hot_blocks=n_hot,
+            hot_cap=hot_cap, cold_cap=cold_cap, ring=ring, theta=theta,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, g, rep, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, 1, g * dk), k_new.dtype),
+        ],
+        interpret=interpret,
+    )(
+        cache.lengths.astype(jnp.int32), act, q.reshape(b, g, rep, dk),
+        hk, hv, ck, cv, k_new.reshape(b, 1, g * dk),
+        v_new.reshape(b, 1, g * dv),
+    )
+    return out.reshape(b, h, dv), k_rot.reshape(b, g, dk)
+
+
 def _flash_latent(q, cache, value_dim, scale, block_s, interpret):
     b, h, dd = q.shape
     hot_cap, cold_cap = cache.hot_cap, cache.cold_cap
@@ -359,8 +553,40 @@ def _flash_latent(q, cache, value_dim, scale, block_s, interpret):
 # ---------------------------------------------------------------------------
 
 
+def _decode_entry(q, cache, scale, impl, block_s, interpret, k_new, v_new,
+                  active, rope_theta, ring):
+    impl = _resolve(impl)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if k_new is None:
+        if impl == "xla":
+            return kvc.tiered_decode_attention(q, cache, scale)
+        if impl != "pallas":
+            raise ValueError(f"unknown impl {impl!r}")
+        return _flash_gqa(q, cache, float(scale), block_s,
+                          _interpret(interpret))
+    # fused-RoPE form: q and k_new are UNROTATED, the cache holds the
+    # PRE-append state; returns (o, rotated k_new) — the caller appends.
+    assert rope_theta is not None, "fused decode needs rope_theta"
+    if impl == "pallas":
+        return _flash_gqa_fused(
+            q, cache, k_new, v_new, active, float(scale),
+            float(rope_theta), ring, block_s, _interpret(interpret),
+        )
+    if impl != "xla":
+        raise ValueError(f"unknown impl {impl!r}")
+    from repro.models.layers import apply_rope
+
+    pos = cache.lengths.astype(jnp.int32)[:, None]  # (b, 1)
+    q_rot = apply_rope(q[:, None], pos, rope_theta)[:, 0]
+    k_rot = apply_rope(k_new[:, None], pos, rope_theta)[:, 0]
+    app = kvc.append_decode_ring if ring else kvc.append_decode
+    attended = app(cache, k_rot, v_new, active=active)
+    return kvc.tiered_decode_attention(q_rot, attended, scale), k_rot
+
+
 @functools.partial(
-    jax.jit, static_argnames=("scale", "impl", "block_s", "interpret")
+    jax.jit, static_argnames=("scale", "impl", "block_s", "interpret",
+                              "rope_theta")
 )
 def flash_decode_attention(
     q: jax.Array,  # (b, h, d)
@@ -370,6 +596,10 @@ def flash_decode_attention(
     impl: str = "auto",
     block_s: int | None = None,
     interpret: bool | None = None,
+    k_new: jax.Array | None = None,  # (b, g, d) — UNROTATED pending token
+    v_new: jax.Array | None = None,  # (b, g, dv)
+    active: jax.Array | None = None,  # (b,) bool — slots really decoding
+    rope_theta: float | None = None,
 ) -> jax.Array:
     """One-token GQA attention over both tiers. q: (b, h, d) -> (b, h, d).
 
@@ -380,18 +610,22 @@ def flash_decode_attention(
     S-block. Per-slot ``cache.lengths`` drive validity, so mixed-length
     batches each attend to exactly their own prefix and a length-0
     (unadmitted) slot returns zeros.
+
+    **Fused-RoPE form** (``k_new``/``v_new``/``rope_theta`` given): q and
+    the pending token's k arrive UNROTATED and rotate in the kernel
+    prologue at position ``cache.lengths[b]``; the pending (k, v) joins
+    the stream as the final softmax element for ``active`` slots, and the
+    call returns ``(o, k_rot)`` so the caller's cache append consumes the
+    kernel-rotated k — the decode step's separate XLA ``apply_rope``
+    passes disappear. The cache argument is the PRE-append state.
     """
-    impl = _resolve(impl)
-    scale = scale if scale is not None else q.shape[-1] ** -0.5
-    if impl == "xla":
-        return kvc.tiered_decode_attention(q, cache, scale)
-    if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
-    return _flash_gqa(q, cache, float(scale), block_s, _interpret(interpret))
+    return _decode_entry(q, cache, scale, impl, block_s, interpret,
+                         k_new, v_new, active, rope_theta, ring=False)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scale", "impl", "block_s", "interpret")
+    jax.jit, static_argnames=("scale", "impl", "block_s", "interpret",
+                              "rope_theta")
 )
 def flash_decode_attention_ring(
     q: jax.Array,
@@ -401,19 +635,23 @@ def flash_decode_attention_ring(
     impl: str = "auto",
     block_s: int | None = None,
     interpret: bool | None = None,
+    k_new: jax.Array | None = None,
+    v_new: jax.Array | None = None,
+    active: jax.Array | None = None,
+    rope_theta: float | None = None,
 ) -> jax.Array:
     """GQA decode attention over a *ring-buffer* cold tier (SWA archs).
 
-    Numerically identical to ``flash_decode_attention``: attention is
-    permutation-invariant over KV positions, and the validity clamp
-    ``clip(length - hot_cap, 0, cold_cap)`` marks the whole window valid
-    once it wraps — ring order never matters. The dedicated entry point
-    keeps call sites explicit about their layout (and is where a
-    windowed-predication variant would land if SWA ever tiers).
+    In the plain (pre-rotated, post-append) form this is numerically
+    identical to ``flash_decode_attention``: attention is permutation-
+    invariant over KV positions, and the validity clamp ``clip(length -
+    hot_cap, 0, cold_cap)`` marks the whole window valid once it wraps.
+    The fused-RoPE form (``k_new``/``rope_theta``; pre-append cache) is
+    where the layout matters: the kernel masks the ring slot the
+    upcoming append will evict, keeping the wrapped window exact.
     """
-    return flash_decode_attention(
-        q, cache, scale, impl=impl, block_s=block_s, interpret=interpret
-    )
+    return _decode_entry(q, cache, scale, impl, block_s, interpret,
+                         k_new, v_new, active, rope_theta, ring=True)
 
 
 @functools.partial(

@@ -133,6 +133,21 @@ _BLOCK_TABLES = {
         (16, 16, 128, 256),
         (None, 128, 128, 128),
     ),
+    # prefill_attn keys on the flash-prefill grid (kernels/flash_prefill.py):
+    # M = GQA rep when rep > 1, else the head count (MLA / plain MHA —
+    # the same convention as decode_attn's latent form), N = the head
+    # lane width, K = the chunk / prompt length. block_m is the Q-BLOCK
+    # in *tokens* (the kernel folds rep query heads into each token row,
+    # so a q tile is (block_m * rep, head)), block_k the streamed KV
+    # S-block. GQA (rep <= 16): 128-token q blocks against 256-token kv
+    # blocks keep the f32 (bq*rep, dv) accumulator + double-buffered
+    # tiles within VMEM; many-head rep-1 forms (MLA's ~192-lane heads,
+    # 128 of them) halve both — per-head grid rows keep each tile small,
+    # but the wider lanes double every streamed k/v copy.
+    "prefill_attn": (
+        (16, 128, 128, 256),
+        (None, 64, 128, 128),
+    ),
 }
 
 
@@ -140,25 +155,30 @@ def select_blocks(m: int, n: int, k: int, codec: str, kind: str = "fused") -> tu
     """(M, N, K) -> (block_m, block_n, block_k) from the static table.
 
     ``kind`` picks the grid's table: "fused" (known-scale int8 grids),
-    "actq" (two-phase act-quant prologue), "expert" (E-loop MoE grid) or
+    "actq" (two-phase act-quant prologue), "expert" (E-loop MoE grid),
     "decode_attn" (flash-decode S blocks; M/N/K are the q rows per kv
-    group, head width and cache capacity — block_k is the S-block) — see
-    the table comment for how the rows differ. The matmul kinds cap
-    block_n / block_k at the padded operand extent and align block_k to
-    the codec group so a block never spans a partial packed byte. For
-    pack243 the group (5) is coprime with the 128-lane tile, so block_k
-    additionally snaps to multiples of lcm(5, 128) = 640 whenever K
-    allows — otherwise the (bm, bk) x tile and (bk/5, bn) packed tile
-    would be lane-misaligned on real TPU (interpret mode doesn't care,
-    Mosaic does). ``decode_attn`` has no packed operand, so ``codec`` is
-    ignored and block_k caps at the capacity directly (the flash kernel
-    handles partial S-blocks by masking).
+    group, head width and cache capacity — block_k is the S-block) or
+    "prefill_attn" (flash-prefill; M/N/K are the q rows per token and kv
+    group, head width and chunk length — block_m is the q block in
+    tokens, block_k the S-block) — see the table comment for how the
+    rows differ. The matmul kinds cap block_n / block_k at the padded
+    operand extent and align block_k to the codec group so a block never
+    spans a partial packed byte. For pack243 the group (5) is coprime
+    with the 128-lane tile, so block_k additionally snaps to multiples
+    of lcm(5, 128) = 640 whenever K allows — otherwise the (bm, bk) x
+    tile and (bk/5, bn) packed tile would be lane-misaligned on real TPU
+    (interpret mode doesn't care, Mosaic does). The attention kinds have
+    no packed operand, so ``codec`` is ignored and block_k caps at the
+    capacity / chunk length directly (the flash kernels handle partial
+    S-blocks by masking).
     """
     for max_m, bm, bn, bk in _BLOCK_TABLES[kind]:
         if max_m is None or m <= max_m:
             break
-    if kind == "decode_attn":
+    if kind in ("decode_attn", "prefill_attn"):
         bn = min(bn, _round_up(max(n, 1), 128))
+        if kind == "prefill_attn":
+            bm = min(bm, max(k, 1))
         return bm, bn, min(bk, max(k, 1))
     group = packing.PACK2_GROUP if codec == "pack2" else packing.PACK243_GROUP
     bn = min(bn, _round_up(max(n, 1), 128))

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import kv_cache as kvc
 from repro.kernels import flash_decode as fd
+from repro.kernels import flash_prefill as fprefill
 from repro.models import qops
 from repro.models.layers import apply_rope, init_rms_norm, rms_norm
 
@@ -40,12 +41,12 @@ DEFAULT_CHUNK = 512
 
 
 def _chunk(seq: int, target: int = DEFAULT_CHUNK) -> int:
-    if seq <= target:
-        return seq
-    c = target
-    while seq % c:
-        c //= 2
-    return max(c, 1)
+    """Chunk size for the blockwise scan: the target, capped at the
+    sequence. Non-dividing lengths are handled by padding + masking in
+    ``blockwise_attention`` — the historical behavior of halving until
+    the chunk divides collapsed to chunk=1 for prime/odd lengths (e.g.
+    257), turning the scan into a length-S loop of 1-token blocks."""
+    return min(seq, target)
 
 
 def blockwise_attention(
@@ -65,8 +66,15 @@ def blockwise_attention(
     scale = scale if scale is not None else dk**-0.5
     cq = q_chunk or _chunk(sq)
     ck = kv_chunk or _chunk(sk)
-    nq, nk = sq // cq, sk // ck
-    assert nq * cq == sq and nk * ck == sk, (sq, cq, sk, ck)
+    nq, nk = -(-sq // cq), -(-sk // ck)
+    # pad to chunk multiples and mask: padded kv columns are masked out of
+    # every row below (k_pos < sk), padded q rows are sliced off the output
+    if nq * cq != sq:
+        q = jnp.pad(q, ((0, 0),) * 3 + ((0, nq * cq - sq), (0, 0)))
+    if nk * ck != sk:
+        pad_k = ((0, 0), (0, 0), (0, nk * ck - sk), (0, 0))
+        k = jnp.pad(k, pad_k)
+        v = jnp.pad(v, pad_k)
 
     qs = jnp.moveaxis(q.reshape(b, g, r, nq, cq, dk), 3, 0)  # (nq, b,g,r,cq,dk)
     ks = jnp.moveaxis(k.reshape(b, g, nk, ck, dk), 2, 0)  # (nk, b,g,ck,dk)
@@ -91,7 +99,7 @@ def blockwise_attention(
             logits = jnp.einsum(
                 "bgrqd,bgkd->bgrqk", qc.astype(jnp.float32), kc.astype(jnp.float32)
             ) * scale
-            mask = jnp.ones((cq, ck), dtype=bool)
+            mask = (k_pos < sk)[None, :] & jnp.ones((cq, 1), dtype=bool)
             if causal:
                 mask &= q_pos[:, None] >= k_pos[None, :]
             if window:
@@ -117,7 +125,8 @@ def blockwise_attention(
         return None, out
 
     _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))  # (nq, b,g,r,cq,dv)
-    return jnp.moveaxis(outs, 0, 3).reshape(b, g, r, sq, dv).astype(q.dtype)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, g, r, nq * cq, dv)
+    return out[:, :, :, :sq].astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +214,103 @@ def attention_full(
     return y
 
 
+def attention_prefill(
+    p: dict,
+    x: jax.Array,  # (b, s, d_model) — the whole (aligned) prompt
+    cfg: ModelConfig,
+    mode: str,
+    cache: kvc.TieredKVCache,  # fresh per-layer cache rows (lengths 0)
+    impl: str | None = None,
+):
+    """Full-prompt prefill attention + tiered cache fill for one layer.
+
+    Returns (y, filled_cache). On the Pallas path the flash-prefill
+    kernel (kernels/flash_prefill.py) rotates q/k in its prologue,
+    streams causal attention with upper-triangle kv blocks skipped, and
+    emits the chunk's k/v already cast to the tier storage dtype (fp8
+    quantized per block in VMEM) — placement is then the static-slice
+    ``kv_cache.fill_fresh``, so the legacy whole-sequence one-hot fill
+    pass never runs. The XLA path composes the existing ops
+    (``apply_rope`` + ``blockwise_attention``) and fills the same way —
+    the two paths produce bit-identical caches.
+    """
+    b, s, _ = x.shape
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x, cfg, mode)  # (b,s,h,hd) / (b,s,g,hd)
+    impl = impl or qops.resolve_impl(cfg)
+    swa = cfg.attn_type == "swa"
+    window = cfg.swa_window if swa else 0
+    if impl == "pallas":
+        o, k_c, v_c = fprefill.flash_prefill_attention(
+            q, k, v, None,
+            window=window, rope_theta=cfg.rope_theta, emit_kv=True,
+            kv_dtype=cache.hot_k.dtype, impl="pallas",
+        )
+        o = o.reshape(b, s, h * hd)
+    else:
+        positions = jnp.arange(s, dtype=jnp.int32)[None]
+        qr = apply_rope(q, positions, cfg.rope_theta)
+        kr = apply_rope(k, positions, cfg.rope_theta)
+        rep = h // g
+        qg = jnp.moveaxis(qr.reshape(b, s, g, rep, hd), 1, 3)
+        o = blockwise_attention(
+            qg, jnp.moveaxis(kr, 1, 2), jnp.moveaxis(v, 1, 2),
+            causal=True, window=window,
+        )
+        o = jnp.moveaxis(o, 3, 1).reshape(b, s, h * hd)
+        k_c, v_c = kr, v
+    cache = kvc.fill_fresh(cache, k_c, v_c, ring=swa)
+    y = qops.linear(p["wo"], o, cfg, mode, lora_leaf=p.get("lora_o"))
+    return y, cache
+
+
+def attention_prefill_chunk(
+    p: dict,
+    x: jax.Array,  # (b, C, d_model) — one prompt chunk per slot
+    cfg: ModelConfig,
+    mode: str,
+    cache: kvc.TieredKVCache,  # live per-layer cache (per-slot lengths)
+    n_valid: jax.Array,  # (b,) valid chunk rows; 0 = slot not prefilling
+    impl: str | None = None,
+):
+    """Chunked-prefill continuation for one layer: the C chunk tokens of
+    each slot attend to the slot's cached prefix (``cache.lengths``
+    tokens, both tiers) plus the causally-earlier rows of the chunk,
+    then append their k/v at the slot's offset. Returns (y, cache).
+
+    Every shape is fixed by (slots, C) — per-slot offsets and valid
+    counts are data — which is what gives the serving engine its
+    one-compile chunked admission (docs/serving.md).
+    """
+    b, c, _ = x.shape
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x, cfg, mode)
+    impl = impl or qops.resolve_impl(cfg)
+    swa = cfg.attn_type == "swa"
+    window = cfg.swa_window if swa else 0
+    if impl == "pallas":
+        o, k_c, v_c = fprefill.flash_prefill_attention(
+            q, k, v, cache, valid=n_valid,
+            window=window, ring=swa, rope_theta=cfg.rope_theta,
+            emit_kv=True, impl="pallas",
+        )
+    else:
+        positions = cache.lengths.astype(jnp.int32)[:, None] + jnp.arange(
+            c, dtype=jnp.int32
+        )[None]
+        qr = apply_rope(q, positions, cfg.rope_theta)
+        kr = apply_rope(k, positions, cfg.rope_theta)
+        o = kvc.tiered_chunk_attention(
+            qr, kr, v, cache, n_valid, window=window, ring=swa
+        )
+        k_c, v_c = kr, v
+    cache = kvc.append(cache, k_c, v_c, valid=n_valid, ring=swa)
+    y = qops.linear(
+        p["wo"], o.reshape(b, c, h * hd), cfg, mode, lora_leaf=p.get("lora_o")
+    )
+    return y, cache
+
+
 def attention_decode(
     p: dict,
     x: jax.Array,  # (b, d_model) — one token per slot
@@ -218,25 +324,40 @@ def attention_decode(
     RoPE positions come from the per-slot ``cache.lengths``, so slots at
     different sequence lengths decode side by side (continuous batching);
     ``active`` gates the KV append per slot. Attention runs the flash-
-    decode fast path (``kernels/flash_decode.py``): the streaming Pallas
-    kernel on TPU, the masked full-capacity XLA reference elsewhere
+    decode fast path (``kernels/flash_decode.py``): on the Pallas impl
+    the *fused-RoPE* form — q and the new token's k rotate in the kernel
+    prologue, the pending (k, v) joins the softmax stream, and the cache
+    append consumes the kernel-rotated k, so no separate XLA
+    ``apply_rope`` passes run in the decode step. The XLA impl keeps the
+    historical rotate → append → masked full-capacity read pipeline
     (``qops.resolve_impl`` — the same dispatch rule as the packed
     matmuls).
     """
     b, _ = x.shape
     h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     q, k, v = _project_qkv(p, x[:, None, :], cfg, mode)  # (b,1,h,hd)
-    pos = cache.lengths[:, None]  # (b, 1) per-slot absolute position
-    q = apply_rope(q, pos, cfg.rope_theta)[:, 0]  # (b,h,hd)
-    k = apply_rope(k, pos, cfg.rope_theta)[:, 0]  # (b,g,hd)
-    v = v[:, 0]
     impl = qops.resolve_impl(cfg)
-    if cfg.attn_type == "swa":
-        cache = kvc.append_decode_ring(cache, k, v, active=active)
-        o = fd.flash_decode_attention_ring(q, cache, impl=impl)
+    swa = cfg.attn_type == "swa"
+    if impl == "pallas":
+        entry = fd.flash_decode_attention_ring if swa else fd.flash_decode_attention
+        o, k_rot = entry(
+            q[:, 0], cache, impl=impl,
+            k_new=k[:, 0], v_new=v[:, 0], active=active,
+            rope_theta=cfg.rope_theta,
+        )
+        app = kvc.append_decode_ring if swa else kvc.append_decode
+        cache = app(cache, k_rot, v[:, 0], active=active)
     else:
-        cache = kvc.append_decode(cache, k, v, active=active)
-        o = fd.flash_decode_attention(q, cache, impl=impl)
+        pos = cache.lengths[:, None]  # (b, 1) per-slot absolute position
+        q = apply_rope(q, pos, cfg.rope_theta)[:, 0]  # (b,h,hd)
+        k = apply_rope(k, pos, cfg.rope_theta)[:, 0]  # (b,g,hd)
+        v = v[:, 0]
+        if swa:
+            cache = kvc.append_decode_ring(cache, k, v, active=active)
+            o = fd.flash_decode_attention_ring(q, cache, impl=impl)
+        else:
+            cache = kvc.append_decode(cache, k, v, active=active)
+            o = fd.flash_decode_attention(q, cache, impl=impl)
     y = qops.linear(
         p["wo"], o.reshape(b, h * hd), cfg, mode, lora_leaf=p.get("lora_o")
     )
@@ -352,6 +473,62 @@ def mla_full(p, x, cfg: ModelConfig, mode, positions, *, return_kv: bool = False
         lat = jnp.concatenate([c_kv, k_rope], axis=-1)
         return y, (lat, jnp.zeros(lat.shape[:-1] + (0,), lat.dtype))
     return y
+
+
+def mla_prefill(p, x, cfg: ModelConfig, mode, cache: kvc.TieredKVCache,
+                impl: str | None = None):
+    """Full-prompt MLA prefill + latent cache fill for one layer.
+
+    The Pallas path runs the flash-prefill kernel attention-only
+    (``emit_kv=False``, ``rope_dims`` = the rope head dims): the per-head
+    (nope ‖ rope) k materializes *unrotated* and both q_rope and k_rope
+    rotate in the kernel prologue. The cached row is the latent
+    (c_kv ‖ k_rope) — not the per-head k — so the fill rotates the shared
+    (b, s, dr) rope vector once outside (negligible next to the (b, s,
+    h, ·) tensors the kernel no longer needs pre-rotated) and places it
+    with the static-slice ``fill_fresh``. The XLA path delegates to
+    ``mla_full``; both fill bit-identical caches.
+    """
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    impl = impl or qops.resolve_impl(cfg)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if impl != "pallas":
+        y, (lat, v_empty) = mla_full(p, x, cfg, mode, positions, return_kv=True)
+        return y, kvc.fill_fresh(cache, lat, v_empty)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    hidden = rms_norm(x, p["ln"], cfg.norm_eps)
+    dq, dkv = _mla_down(p, hidden, cfg, mode)
+    # same per-branch norms as _mla_queries/_mla_latent, minus their RoPE
+    cq = rms_norm(dq, p["q_ln"], cfg.norm_eps)
+    q = qops.linear(p["w_uq"], cq, cfg, mode, out_shape=(h, qk_head))
+    c_kv = rms_norm(dkv[..., : m.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope_raw = dkv[..., m.kv_lora_rank:]  # (b, s, dr) UNROTATED
+    k_nope = qops.linear(p["w_uk"], c_kv, cfg, mode, out_shape=(h, m.qk_nope_head_dim))
+    v = qops.linear(
+        p["w_uv"], c_kv, cfg, mode, out_shape=(h, m.v_head_dim),
+        lora_leaf=p.get("lora_v"),
+    )
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(
+            k_rope_raw[:, :, None, :], (b, s, h, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    o = fprefill.flash_prefill_attention(
+        q, k, v, None, rope_theta=cfg.rope_theta,
+        rope_dims=m.qk_rope_head_dim, emit_kv=False, impl="pallas",
+    )  # (b, s, h, v_head_dim)
+    y = qops.linear(
+        p["wo"], o.reshape(b, s, h * m.v_head_dim), cfg, mode,
+        lora_leaf=p.get("lora_o"),
+    )
+    k_rope = apply_rope(
+        k_rope_raw[:, :, None, :], positions[None], cfg.rope_theta
+    )[:, :, 0]
+    lat = jnp.concatenate([c_kv, k_rope], axis=-1)
+    return y, kvc.fill_fresh(
+        cache, lat, jnp.zeros(lat.shape[:-1] + (0,), lat.dtype)
+    )
 
 
 def mla_decode(p, x, cfg: ModelConfig, mode, cache: kvc.TieredKVCache,

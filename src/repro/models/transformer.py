@@ -416,26 +416,26 @@ def init_decode_cache(
 
 
 def _fill_attn_cache(cache_stack, kvs, cfg):
-    """Bulk-append prefill KV (L, b, s, ...) into a stacked tiered cache."""
+    """Bulk-place prefill KV (L, b, s, ...) into a stacked fresh tiered
+    cache — ``kv_cache.fill_fresh`` per layer (static slices; the ring
+    realign for SWA windows lives there, in exactly one place)."""
     ks, vs = kvs
-    if cfg.attn_type == "swa":
-        # keep only the last `window` tokens (ring semantics)
-        w = cache_stack.cold_k.shape[2]
-        s = ks.shape[2]
-        if s > w:
-            # slot of token p is p % w; realign so slots match positions
-            idx = (jnp.arange(s - w, s)) % w
-            order = jnp.argsort(idx)
-            ks_w = ks[:, :, s - w :][:, :, order]
-            vs_w = vs[:, :, s - w :][:, :, order]
-            filled = cache_stack._replace(
-                cold_k=ks_w.astype(cache_stack.cold_k.dtype),
-                cold_v=vs_w.astype(cache_stack.cold_v.dtype),
-                lengths=jnp.full_like(cache_stack.lengths, s),
-            )
-            return filled
-        return jax.vmap(lambda c, k, v: kvc.append(c, k, v))(cache_stack, ks, vs)
-    return jax.vmap(lambda c, k, v: kvc.append(c, k, v))(cache_stack, ks, vs)
+    ring = cfg.attn_type == "swa"
+    return jax.vmap(
+        lambda c, k, v: kvc.fill_fresh(c, k, v, ring=ring)
+    )(cache_stack, ks, vs)
+
+
+def _flash_prefill_capable(cfg: ModelConfig, impl: str) -> bool:
+    """The per-layer flash-prefill scan path covers the attention-cache
+    families; SSM/hybrid keep the collect-state forward (their cache is
+    recurrent state, not KV) and the XLA impl keeps the legacy path so
+    the GSPMD dry-run lowering is untouched."""
+    return (
+        impl == "pallas"
+        and cfg.family in ("dense", "vlm", "moe")
+        and cfg.attn_type in ("full", "swa", "mla")
+    )
 
 
 def prefill(
@@ -446,8 +446,21 @@ def prefill(
     max_len: Optional[int] = None,
     mode: str = "packed",
     remat: bool = False,
+    headroom: Optional[int] = None,
 ):
-    """Process the prompt; return (last-token logits, filled decode cache)."""
+    """Process the prompt; return (last-token logits, filled decode cache).
+
+    Cache capacity is ``max_len`` when given, else ``prompt_len +
+    headroom`` (defaulting to ``cfg.decode_headroom``) — the headroom is
+    the hard cap on how many tokens can subsequently be decoded, so
+    callers that rely on the default must size it deliberately.
+
+    On the Pallas impl (``qops.resolve_impl``) attention-cache families
+    run the per-layer flash-prefill scan (``attention_prefill`` /
+    ``mla_prefill``: fused RoPE + causal-skip streaming + tier-dtype
+    cache-fill epilogue, kernels/flash_prefill.py); otherwise the legacy
+    collect-KV forward + bulk fill runs, numerically as before.
+    """
     tokens = batch.get("tokens")
     if cfg.family == "vlm":
         s = tokens.shape[1] + cfg.n_patches
@@ -456,7 +469,13 @@ def prefill(
         raise ValueError("encoder-only arch has no decode/prefill phase")
     else:
         b, s = tokens.shape
-    max_len = max_len or s + 128
+    if max_len is None:
+        max_len = s + (headroom if headroom is not None else cfg.decode_headroom)
+
+    from repro.models import qops
+
+    if _flash_prefill_capable(cfg, qops.resolve_impl(cfg)):
+        return _prefill_flash(params, cfg, batch, b, s, hot_cap, max_len, mode)
 
     logits, aux, kvs = forward(params, cfg, batch, mode, remat=remat, collect_kv=True)
     cache = init_decode_cache(cfg, b, max_len, hot_cap, dtype=params["final_ln"].dtype)
@@ -477,6 +496,93 @@ def prefill(
         if "tail_ssm" in kvs:
             cache["tail"] = kvs["tail_ssm"]
     return logits[:, -1], cache
+
+
+def _attn_block_prefill(bp, x, cfg, mode, cache_layer, n_valid=None):
+    """One block of the flash-prefill scan: full-seq attention straight
+    into the tiered cache rows, then the MLP/MoE. ``n_valid`` switches
+    the chunked continuation form (serving engine)."""
+    if n_valid is not None:
+        y, cache_layer = attn.attention_prefill_chunk(
+            bp["attn"], x, cfg, mode, cache_layer, n_valid
+        )
+    elif cfg.attn_type == "mla":
+        y, cache_layer = attn.mla_prefill(bp["attn"], x, cfg, mode, cache_layer)
+    else:
+        y, cache_layer = attn.attention_prefill(bp["attn"], x, cfg, mode, cache_layer)
+    x = x + y
+    if "moe" in bp:
+        h, _ = moe_lib.apply_moe(bp["moe"], x, cfg, mode)
+    else:
+        h = apply_mlp(bp["mlp"], x, cfg, mode)
+    return x + h, cache_layer
+
+
+def _prefill_scan(params, cfg, x, cache, mode, n_valid=None):
+    """Scan the stacked attention blocks over (params, cache) pairs —
+    decode_step's structure at full sequence length."""
+
+    def scan_attn(x1, stack_params, cache_stack):
+        def step(h, xs):
+            bp, cl = xs
+            return _attn_block_prefill(bp, h, cfg, mode, cl, n_valid)
+
+        return jax.lax.scan(step, x1, (stack_params, cache_stack))
+
+    if cfg.family in ("dense", "vlm"):
+        x, cache["attn"] = scan_attn(x, params["blocks"], cache["attn"])
+    elif cfg.family == "moe":
+        if "attn_dense" in cache:
+            x, cache["attn_dense"] = scan_attn(
+                x, params["dense_blocks"], cache["attn_dense"]
+            )
+        x, cache["attn_moe"] = scan_attn(x, params["moe_blocks"], cache["attn_moe"])
+    else:  # pragma: no cover — guarded by _flash_prefill_capable / engine
+        raise ValueError(cfg.family)
+    return x, cache
+
+
+def _prefill_flash(params, cfg, batch, b, s, hot_cap, max_len, mode):
+    """Pallas prefill: per-layer flash-attention + cache-fill scan."""
+    dtype = params["final_ln"].dtype
+    if cfg.family == "vlm":
+        patches = _frontend_embed(params, cfg, batch["patches"].astype(dtype), mode)
+        text = _embed_tokens(params, cfg, batch["tokens"], dtype)
+        x = jnp.concatenate([patches, text], axis=1)
+    else:
+        x = _embed_tokens(params, cfg, batch["tokens"], dtype)
+    cache = init_decode_cache(cfg, b, max_len, hot_cap, dtype=dtype)
+    x, cache = _prefill_scan(params, cfg, x, cache, mode)
+    x_last = rms_norm(x[:, -1], params["final_ln"], cfg.norm_eps)
+    return _lm_logits(params, cfg, x_last), cache
+
+
+def prefill_chunk_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (slots, C) — one prompt chunk per slot
+    cache,
+    n_valid: jax.Array,  # (slots,) valid rows; 0 = slot not prefilling
+    mode: str = "packed",
+):
+    """One chunked-prefill dispatch over the live slot state.
+
+    Appends each slot's ``n_valid`` chunk tokens at its own
+    ``cache.lengths`` offset and returns (last-valid-row logits (slots,
+    V), cache). Every shape is fixed by (slots, C), so the serving
+    engine compiles this exactly once regardless of the prompt-length
+    mix (the compile-count assertion in tests/test_scheduler.py).
+    Supported for attention-cache families without a frontend — the
+    engine falls back to grouped whole-prompt admission elsewhere.
+    """
+    dtype = params["final_ln"].dtype
+    x = _embed_tokens(params, cfg, tokens, dtype)  # (slots, C, d)
+    x, cache = _prefill_scan(params, cfg, x, cache, mode, n_valid=n_valid)
+    # logits at each slot's last valid row (garbage for idle slots)
+    idx = jnp.clip(n_valid.astype(jnp.int32) - 1, 0, tokens.shape[1] - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    x_last = rms_norm(x_last, params["final_ln"], cfg.norm_eps)
+    return _lm_logits(params, cfg, x_last), cache
 
 
 # ---------------------------------------------------------------------------

@@ -25,8 +25,11 @@ DR-traffic ledger. One decode step is ONE jitted dispatch:
 The host only syncs at *chunk boundaries* (every ``sync_every`` steps): it
 reads the small ``done``/``allocated`` masks, retires finished slots,
 harvests their outputs and per-slot ledgers, and admits queued prompts
-into the freed slots via a prefill dispatch + cache scatter
-(``serving/scheduler.py`` decides who goes where). Slots at different
+into the freed slots (``serving/scheduler.py`` decides who goes where) —
+either as whole same-length groups (prefill dispatch + cache scatter) or,
+with ``prefill_chunk`` set, as fixed-size chunk dispatches streamed
+straight into the live cache at per-slot offsets (flash-prefill
+continuation: ONE prefill compilation for any prompt-length mix). Slots at different
 sequence lengths decode side by side; per-slot lengths keep each
 sequence's attention exact — on TPU via the flash-decode Pallas kernel
 (``kernels/flash_decode.py``: hot and cold tier merged in one streaming
@@ -122,6 +125,7 @@ class Engine:
         seed: int = 0,
         slots: int = 8,
         sync_every: int = 8,
+        prefill_chunk: int = 0,
     ):
         self.cfg = cfg
         # Freeze to ROM form once (packed trits + fused wqkv/wgu/w_dqkv/w_gu
@@ -141,16 +145,34 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
         self.slots = slots
         self.sync_every = sync_every
+        # chunked-prefill admission (docs/serving.md): 0 keeps the legacy
+        # same-length-group whole-prompt admission; C > 0 streams prompts
+        # into freed slots as fixed-size C-token chunk dispatches against
+        # the live cache — ONE prefill compilation total for any prompt-
+        # length mix. Supported for attention-cache families without a
+        # frontend; other archs fall back to grouped admission.
+        self.prefill_chunk = prefill_chunk
         self.weight_loads = 0  # host->device weight transfers after init
         self._step_fns: dict = {}  # (out_cap, stop_token) -> jitted step
         self._batch_axes = None  # lazy: cache-leaf batch-axis pytree
         self._admit_fn = None  # jitted admission (compiles per group size)
+        self._chunk_step_fn = None  # jitted chunked-prefill dispatch
         # jitted prefill (one compile per admitted (group, prompt) shape)
         self._prefill = jax.jit(
             lambda p, batch: T.prefill(
                 p, self.cfg, batch,
                 hot_cap=self.hot_cap, max_len=self.max_len, mode=self.mode,
             )
+        )
+
+    def _chunked_capable(self) -> bool:
+        """Chunked prefill needs a pure attention-token path: per-slot
+        tiered KV caches (no recurrent SSM state to stream) and no
+        frontend features spliced ahead of the text tokens."""
+        return (
+            self.cfg.family in ("dense", "moe")
+            and self.cfg.attn_type in ("full", "swa")
+            and self.cfg.frontend == "none"
         )
 
     # ------------------------------------------------------------------
@@ -322,6 +344,97 @@ class Engine:
         self._admit_fn = jax.jit(admit, donate_argnums=(0,))
         return self._admit_fn
 
+    # ------------------------------------------------------------------
+    # chunked prefill: stream fixed-size prompt chunks into the live state
+    # ------------------------------------------------------------------
+
+    def _get_chunk_step(self):
+        """Jitted chunked-prefill dispatch. Every shape is fixed by
+        (slots, prefill_chunk) — per-slot offsets (``cache.lengths``),
+        valid counts and first/last flags are data — so this compiles
+        exactly ONCE per engine regardless of the prompt-length mix
+        (asserted in tests/test_scheduler.py via ``_cache_size``).
+
+        One dispatch per chunk wave: run ``transformer.prefill_chunk_step``
+        over all slots (idle slots ride along with ``n_valid = 0`` and
+        touch nothing), reset per-slot bookkeeping where ``is_first``,
+        and sample the first token where ``is_last`` — the slot then
+        enters the decode loop exactly as a group-admitted one would.
+        """
+        if self._chunk_step_fn is not None:
+            return self._chunk_step_fn
+        cfg, mode = self.cfg, self.mode
+
+        def chunk_step(params, state: DecodeState, tokens, n_valid,
+                       is_first, is_last, max_new, key) -> DecodeState:
+            # a slot's first chunk starts from a clean cache row
+            cache = {
+                k: c._replace(
+                    lengths=jnp.where(is_first[None, :], 0, c.lengths)
+                )
+                for k, c in state.cache.items()
+            }
+            logits, cache = T.prefill_chunk_step(
+                params, cfg, tokens, cache, n_valid, mode=mode
+            )
+            first_tok = self._sample_fn(logits, key)
+            z32 = jnp.zeros_like(state.n_gen)
+            done = jnp.where(is_first, False, state.done)
+            ledger = {
+                k: jnp.where(is_first, z32, state.ledger[k])
+                for k in TRAFFIC_KEYS
+            }
+            return DecodeState(
+                cache=cache,
+                tok=jnp.where(is_last, first_tok, state.tok),
+                key=state.key,
+                allocated=state.allocated | is_last,
+                done=jnp.where(is_last, max_new <= 0, done),
+                seq_len=jnp.where(is_first, 0, state.seq_len) + n_valid,
+                n_gen=jnp.where(is_first, 0, state.n_gen),
+                max_new=jnp.where(is_last, max_new, state.max_new),
+                out=jnp.where(is_first[:, None], 0, state.out),
+                ledger=ledger,
+            )
+
+        self._chunk_step_fn = jax.jit(chunk_step, donate_argnums=(1,))
+        return self._chunk_step_fn
+
+    def _stream_chunks(self, state: DecodeState, n_slots: int,
+                       prefilling: Dict[int, list]) -> DecodeState:
+        """Drain the pending prompt chunks: one dispatch per wave, one
+        C-token chunk per prefilling slot per wave, until every pending
+        prompt is fully cached and sampled."""
+        step = self._get_chunk_step()
+        c = self.prefill_chunk
+        while prefilling:
+            toks = np.zeros((n_slots, c), np.int32)
+            n_valid = np.zeros((n_slots,), np.int32)
+            is_first = np.zeros((n_slots,), bool)
+            is_last = np.zeros((n_slots,), bool)
+            max_new = np.zeros((n_slots,), np.int32)
+            finished_slots = []
+            for s, (req, off) in prefilling.items():
+                part = np.asarray(req.tokens, np.int32)[off : off + c]
+                toks[s, : len(part)] = part
+                n_valid[s] = len(part)
+                is_first[s] = off == 0
+                max_new[s] = req.max_new_tokens
+                if off + len(part) >= req.prompt_len:
+                    is_last[s] = True
+                    finished_slots.append(s)
+                else:
+                    prefilling[s] = [req, off + len(part)]
+            self.key, sub = jax.random.split(self.key)
+            state = step(
+                self.params, state, jnp.asarray(toks), jnp.asarray(n_valid),
+                jnp.asarray(is_first), jnp.asarray(is_last),
+                jnp.asarray(max_new), sub,
+            )
+            for s in finished_slots:
+                prefilling.pop(s)
+        return state
+
     def _admit(
         self, state: DecodeState, slots_idx: List[int], group: List[Request]
     ) -> DecodeState:
@@ -362,10 +475,14 @@ class Engine:
         The decode hot loop issues exactly one jitted dispatch per token
         and never reads device memory; host synchronization happens only
         every ``sync_every`` steps, to retire finished slots and admit
-        queued prompts into the freed rows.
+        queued prompts into the freed rows. With ``prefill_chunk`` set
+        (and a capable arch), admission streams fixed-size prompt chunks
+        into the freed slots instead of whole same-length groups — one
+        prefill compilation total, mixed lengths admit immediately.
         """
         n_slots = slots or self.slots
         chunk = sync_every or self.sync_every
+        chunked = self.prefill_chunk > 0 and self._chunked_capable()
         for r in requests:
             need = r.prompt_len + (self.cfg.n_patches if r.patches is not None else 0)
             if need + r.max_new_tokens > self.max_len:
@@ -394,13 +511,21 @@ class Engine:
 
         while not sched.idle():
             # -- admission: fill every free slot we can ----------------
-            while True:
-                slots_idx, group = sched.next_group()
-                if not group:
-                    break
-                state = self._admit(state, slots_idx, group)
-                for s, req in zip(slots_idx, group):
+            if chunked:
+                prefilling = {
+                    s: [req, 0] for s, req in sched.next_fills()
+                }
+                for s, (req, _) in prefilling.items():
                     remaining[s] = req.max_new_tokens
+                state = self._stream_chunks(state, n_slots, prefilling)
+            else:
+                while True:
+                    slots_idx, group = sched.next_group()
+                    if not group:
+                        break
+                    state = self._admit(state, slots_idx, group)
+                    for s, req in zip(slots_idx, group):
+                        remaining[s] = req.max_new_tokens
             # -- decode chunk: no host syncs inside --------------------
             # clip the chunk so no dispatch runs past the earliest
             # budget-exhaustion among active slots (those steps would be

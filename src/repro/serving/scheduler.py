@@ -7,9 +7,11 @@ the host-side bookkeeping around that device state:
 
   * a FIFO request queue (``submit``),
   * the slot table (which request occupies which slot),
-  * admission grouping: the next batch of queued requests that can prefill
-    together (same prompt length — no padding tokens ever enter the cache)
-    into the currently free slots,
+  * admission pairing — either **chunked** (``next_fills``: every free
+    slot takes the next queued request, any prompt length; the engine
+    streams the prompt in as fixed-size chunk dispatches) or **grouped**
+    (``next_group``: same-prompt-length requests share one whole-prompt
+    prefill dispatch),
   * retirement: freeing a slot once its request is done.
 
 The scheduler never touches device arrays; it only decides *which* slots
@@ -19,12 +21,13 @@ while the remaining slots keep decoding, so the decode hot loop stays
 saturated instead of draining the whole batch (the seed engine's lock-step
 model, where the slowest sequence gated everyone).
 
-Scheduling policy is FIFO with same-length grouping: the head-of-line
-request always admits first; other queued requests with the *same* prompt
-length ride along in the same prefill dispatch (one XLA compilation per
-(group_size, prompt_len) shape). This keeps admission pad-free — padded
-prompt tokens would pollute the causal KV cache — while still batching
-prefill work when traffic has repeated shapes.
+Both policies are FIFO and pad-free (padded prompt tokens would pollute
+the causal KV cache; chunked admission masks the final partial chunk by
+per-slot valid counts instead). The difference is compilation shape:
+grouped admission costs one XLA prefill compilation per (group_size,
+prompt_len) pair and makes unequal lengths wait for a shape partner;
+chunked admission has exactly one fixed (slots, chunk) dispatch shape,
+so any length mix admits immediately (docs/serving.md, "Admission").
 
 docs/serving.md documents the full lifecycle this module drives
 (admission -> decode chunks -> retirement) and the ``sync_every``
@@ -138,6 +141,22 @@ class SlotScheduler:
         for s, req in zip(slots, group):
             self.slot_req[s] = req
         return slots, group
+
+    def next_fills(self) -> List[Tuple[int, Request]]:
+        """Chunked-admission pairing: hand each free slot the next queued
+        request — strict FIFO, no length grouping. Chunk streaming makes
+        the prompt length irrelevant to compilation (the engine's chunk
+        dispatch has one fixed (slots, chunk) shape), so unlike
+        ``next_group`` nothing ever waits for a shape partner and there
+        is no head-of-line blocking on unusual prompt lengths."""
+        out: List[Tuple[int, Request]] = []
+        for s in self.free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            self.slot_req[s] = req
+            out.append((s, req))
+        return out
 
     # -- retirement -----------------------------------------------------
     def retire(self, slot: int) -> Request:

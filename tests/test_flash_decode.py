@@ -342,6 +342,96 @@ def test_mla_decode_impl_parity():
 
 
 # ---------------------------------------------------------------------------
+# fused-RoPE decode form: unrotated q/k_new in, pending token in-stream,
+# rotated k out; cache is the PRE-append state (ISSUE 5 decode satellite)
+# ---------------------------------------------------------------------------
+
+
+def _fused_parity(b, hot, cold, g, h, d, lens, ring, active=None,
+                  block_s=None, seed=0):
+    cache, _, _ = _build_cache(b, hot, cold, g, d, lens, ring=ring, seed=seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed + 999), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    kn = jax.random.normal(ks[1], (b, g, d))
+    vn = jax.random.normal(ks[2], (b, g, d))
+    act = None if active is None else jnp.asarray(active)
+    entry = fd.flash_decode_attention_ring if ring else fd.flash_decode_attention
+    op, kp = entry(q, cache, impl="pallas", k_new=kn, v_new=vn, active=act,
+                   rope_theta=1e4, block_s=block_s)
+    ox, kx = entry(q, cache, impl="xla", k_new=kn, v_new=vn, active=act,
+                   rope_theta=1e4, block_s=block_s)
+    # rotated-k parity is ulp-level (kernel rope vs apply_rope fuse
+    # differently under XLA); attention parity at the usual fp32 TOL
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(kx),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(op), np.asarray(ox), **TOL)
+
+
+@pytest.mark.parametrize("lens", [[0, 5, 14], [3, 4, 15], [1, 8, 12]])
+def test_fused_rope_linear_mixed_lengths(lens):
+    # lens stay < capacity: the pre-append form appends one token, and a
+    # full cache is out of contract (the engine's max_len bound)
+    _fused_parity(3, 4, 12, 2, 4, 8, lens, ring=False, seed=sum(lens))
+
+
+def test_fused_rope_active_mask_gates_pending_token():
+    """Inactive slots attend only their old prefix — the pending (k, v)
+    joins the stream for active slots alone."""
+    _fused_parity(3, 4, 12, 2, 4, 8, [2, 7, 11], ring=False,
+                  active=[True, False, True])
+
+
+@pytest.mark.parametrize("lens", [[9, 3], [6, 12], [5, 6]])
+def test_fused_rope_ring_masks_evictee(lens):
+    """Wrapped ring: the slot the upcoming append will overwrite holds
+    position len - w — outside the decode token's window — and must be
+    masked; unwrapped slots keep their whole prefix."""
+    _fused_parity(2, 0, 6, 2, 4, 8, lens, ring=True, block_s=2,
+                  seed=sum(lens))
+
+
+def test_fused_rope_ring_inactive_slot_keeps_evictee():
+    """An inactive slot appends nothing, so nothing is evicted: its old
+    wrapped window stays fully valid (matching the XLA reference)."""
+    _fused_parity(2, 0, 6, 2, 4, 8, [12, 8], ring=True,
+                  active=[False, True], block_s=2)
+
+
+def test_attention_decode_fused_vs_xla_path():
+    """models/attention.attention_decode: the Pallas fused-RoPE path and
+    the legacy rotate->append->read XLA path produce the same outputs and
+    (to rope ulp) the same caches over a multi-step mixed-length run."""
+    from repro.configs import get_smoke_config
+    from repro.models import attention as attn
+
+    cfg = get_smoke_config("falcon3-1b")
+    p = attn.init_attention(jax.random.PRNGKey(0), cfg)
+    g, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    b = 3
+    cache = kvc.init_cache(b, 4, 12, (g, hd), jnp.float32)
+    x_hist = jax.random.normal(jax.random.PRNGKey(1), (8, b, cfg.d_model)) * 0.1
+    lens = [2, 0, 7]
+    outs = {}
+    for impl in ("pallas", "xla"):
+        c = cache
+        for t in range(7):
+            active = jnp.asarray([t < L for L in lens])
+            _, c = attn.attention_decode(
+                p, x_hist[t], _impl_cfg(cfg, impl), "qat", c, active=active
+            )
+        y, c = attn.attention_decode(p, x_hist[7], _impl_cfg(cfg, impl), "qat", c)
+        outs[impl] = (np.asarray(y), c)
+    np.testing.assert_array_equal(
+        np.asarray(outs["pallas"][1].lengths), np.asarray(outs["xla"][1].lengths))
+    np.testing.assert_allclose(outs["pallas"][0], outs["xla"][0],
+                               rtol=5e-5, atol=5e-5)
+    for a, bb in zip(jax.tree.leaves(outs["pallas"][1]),
+                     jax.tree.leaves(outs["xla"][1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # block table
 # ---------------------------------------------------------------------------
 

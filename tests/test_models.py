@@ -159,3 +159,98 @@ def test_full_config_param_counts_sane():
     for arch, (lo, hi) in expect.items():
         n = get_config(arch).param_count()
         assert lo <= n <= hi, (arch, f"{n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]")
+
+
+# ---------------------------------------------------------------------------
+# blockwise-attention chunking: non-dividing lengths pad + mask instead of
+# collapsing to 1-token chunks (ISSUE 5 satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_blockwise_chunk_no_degenerate_halving():
+    """An odd length past the target (e.g. 1025) used to halve the chunk
+    all the way down to 1, turning the scan into a length-S loop of
+    1-token blocks; now the chunk stays at the target and the remainder
+    is padded + masked."""
+    from repro.models.attention import DEFAULT_CHUNK, _chunk
+
+    assert _chunk(1025) == DEFAULT_CHUNK  # was 1 (1025 halves to 1)
+    assert _chunk(513) == DEFAULT_CHUNK  # was 1
+    assert _chunk(257) == 257  # short sequences still use one chunk
+    assert _chunk(512) == DEFAULT_CHUNK
+
+
+@pytest.mark.parametrize("sq,sk", [(257, 257), (13, 7), (96, 33)])
+def test_blockwise_padded_lengths_match_dense_reference(sq, sk):
+    """Padded+masked blockwise attention == dense softmax attention for
+    non-dividing (prime/odd) sequence lengths, causal and windowed."""
+    from repro.models.attention import blockwise_attention
+
+    b, g, r, d = 1, 2, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(sq + sk), 3)
+    q = jax.random.normal(ks[0], (b, g, r, sq, d))
+    k = jax.random.normal(ks[1], (b, g, sk, d))
+    v = jax.random.normal(ks[2], (b, g, sk, d))
+
+    def dense(window):
+        qf = np.asarray(q, np.float64)
+        kf = np.asarray(k, np.float64)
+        vf = np.asarray(v, np.float64)
+        logits = np.einsum("bgrqd,bgkd->bgrqk", qf, kf) * d**-0.5
+        q_pos = np.arange(sq)[:, None]
+        k_pos = np.arange(sk)[None]
+        mask = q_pos >= k_pos
+        if window:
+            mask &= (q_pos - k_pos) < window
+        logits = np.where(mask, logits, -1e30)
+        p = np.exp(logits - logits.max(-1, keepdims=True))
+        p = np.where(mask, p, 0.0)
+        denom = np.maximum(p.sum(-1, keepdims=True), 1e-30)
+        return np.einsum("bgrqk,bgkd->bgrqd", p / denom, vf)
+
+    for window in (0, 5):
+        got = blockwise_attention(q, k, v, causal=True, window=window,
+                                  q_chunk=8, kv_chunk=8)
+        np.testing.assert_allclose(
+            np.asarray(got), dense(window), rtol=2e-5, atol=2e-5,
+            err_msg=f"window={window}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# decode-headroom knob (ISSUE 5 satellite): the historical hard-wired
+# `max_len = s + 128` is now cfg.decode_headroom / a prefill argument
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_decode_headroom_knob():
+    import dataclasses
+
+    cfg = get_smoke_config("falcon3-1b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, cfg.vocab_size)
+
+    def capacity(cache):
+        c = cache["attn"]
+        return c.hot_k.shape[2] + c.cold_k.shape[2]
+
+    # default: prompt + cfg.decode_headroom (the historical 128)
+    _, cache = T.prefill(params, cfg, {"tokens": toks}, mode="qat")
+    assert capacity(cache) == 6 + cfg.decode_headroom == 6 + 128
+    # per-call override
+    _, cache = T.prefill(params, cfg, {"tokens": toks}, mode="qat", headroom=4)
+    assert capacity(cache) == 10
+    # config knob
+    cfg16 = dataclasses.replace(cfg, decode_headroom=16)
+    _, cache = T.prefill(params, cfg16, {"tokens": toks}, mode="qat")
+    assert capacity(cache) == 22
+    # explicit max_len still wins over everything
+    _, cache = T.prefill(params, cfg16, {"tokens": toks}, mode="qat",
+                         max_len=40, headroom=4)
+    assert capacity(cache) == 40
+    # the headroom really is the decode budget: token 10 must still fit
+    _, cache = T.prefill(params, cfg, {"tokens": toks}, mode="qat", headroom=4)
+    tok = jnp.zeros((1,), jnp.int32)
+    for _ in range(4):
+        _, cache = T.decode_step(params, cfg, tok, cache, mode="qat")
+    assert int(cache["attn"].lengths[0, 0]) == 10  # exactly at capacity

@@ -187,6 +187,123 @@ def test_per_slot_traffic_reconciles_mixed_lengths(setup):
         assert f.traffic["ondie_write"] == sim.die_writes * tb
 
 
+def test_scheduler_next_fills_ungrouped_fifo():
+    """Chunked admission pairs free slots with queued requests in strict
+    FIFO order — mixed prompt lengths admit together, nothing waits for
+    a same-length partner."""
+    sched = SlotScheduler(n_slots=3)
+    for rid, p_len in [(0, 4), (1, 9), (2, 4), (3, 7)]:
+        sched.submit(Request(rid, np.zeros(p_len, np.int32), 8))
+    fills = sched.next_fills()
+    assert [(s, r.rid) for s, r in fills] == [(0, 0), (1, 1), (2, 2)]
+    assert [r.rid for r in sched.queue] == [3]
+    assert sched.next_fills() == []  # no free slots
+    sched.retire(1)
+    fills = sched.next_fills()
+    assert [(s, r.rid) for s, r in fills] == [(1, 3)]
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill admission: mixed lengths, ONE prefill compilation,
+# token parity with grouped admission and with solo serves, ledger intact
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_end_to_end(setup):
+    """Mixed-length prompts through a prefill_chunk engine: tokens match
+    solo chunked serves bit-exactly AND the grouped-admission engine;
+    exactly ONE chunk-step compilation serves every length; per-slot DR
+    ledgers still reconcile with the closed form."""
+    cfg, params = setup
+    hot = 4
+    eng = Engine(cfg, params, hot_cap=hot, max_len=64, prefill_chunk=4)
+    reqs = [
+        Request(0, _prompt(70, 5, cfg.vocab_size), 9),
+        Request(1, _prompt(71, 12, cfg.vocab_size), 3),
+        Request(2, _prompt(72, 4, cfg.vocab_size), 6),   # == chunk size
+        Request(3, _prompt(73, 13, cfg.vocab_size), 8),  # prime length
+        Request(4, _prompt(74, 1, cfg.vocab_size), 5),   # sub-chunk
+    ]
+    fin = {f.rid: f for f in eng.serve(
+        [Request(r.rid, r.tokens, r.max_new_tokens) for r in reqs],
+        slots=2, sync_every=3,
+    )}
+    assert set(fin) == {0, 1, 2, 3, 4}
+    # one compile for the chunk dispatch, regardless of the length mix
+    assert eng._chunk_step_fn._cache_size() == 1
+    # solo chunked serves reproduce the crowded run bit-exactly
+    for r in reqs:
+        solo = eng.serve([Request(99, r.tokens, r.max_new_tokens)], slots=1)[0]
+        np.testing.assert_array_equal(fin[r.rid].tokens, solo.tokens)
+        assert len(fin[r.rid].tokens) == r.max_new_tokens
+    # the solo serves ran at slots=1 — a different dispatch width, hence
+    # one more compile; prompt lengths never add any (5 lengths, 2 shapes)
+    assert eng._chunk_step_fn._cache_size() == 2
+    # grouped-admission engine produces the same greedy tokens
+    eng_g = Engine(cfg, params, hot_cap=hot, max_len=64)
+    fin_g = {f.rid: f for f in eng_g.serve(
+        [Request(r.rid, r.tokens, r.max_new_tokens) for r in reqs],
+        slots=2, sync_every=3,
+    )}
+    for r in reqs:
+        np.testing.assert_array_equal(fin[r.rid].tokens, fin_g[r.rid].tokens)
+    # DR-ledger reconciliation is untouched by chunked admission
+    for f in fin.values():
+        assert f.seq_len == f.prompt_len + f.steps
+        expect = dr_edram.closed_form_reduction(f.seq_len, hot)
+        assert f.external_reduction == pytest.approx(expect, abs=1e-12), f.rid
+        sim = dr_edram.simulate(f.seq_len, hot)
+        tb = eng._kv_token_bytes()
+        assert f.traffic["ext_read"] == sim.ext_reads * tb
+        assert f.traffic["ondie_read"] == sim.die_reads * tb
+
+
+def test_chunked_prefill_slot_reuse(setup):
+    """A slot freed mid-serve is re-admitted with a *different* prompt
+    length via chunk streaming; the recycled slot behaves like fresh."""
+    cfg, params = setup
+    eng = Engine(cfg, params, hot_cap=4, max_len=64, prefill_chunk=4)
+    a = Request(0, _prompt(80, 10, cfg.vocab_size), 4)
+    b = Request(1, _prompt(81, 7, cfg.vocab_size), 8)
+    fin = {f.rid: f for f in eng.serve([a, b], slots=1, sync_every=2)}
+    solo_b = eng.serve([Request(9, b.tokens, b.max_new_tokens)], slots=1)[0]
+    np.testing.assert_array_equal(fin[1].tokens, solo_b.tokens)
+    assert fin[1].seq_len == 7 + 8
+    assert eng._chunk_step_fn._cache_size() == 1
+
+
+def test_chunked_prefill_swa_ring(setup):
+    """Chunked admission over the ring-buffer cold tier (SWA arch),
+    prompts longer than the window included."""
+    cfg = get_smoke_config("mixtral-8x22b")
+    if cfg.attn_type != "swa":
+        pytest.skip("mixtral smoke is no longer SWA")
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    eng = Engine(cfg, params, hot_cap=4, max_len=32, prefill_chunk=4)
+    reqs = [
+        Request(0, _prompt(90, 12, cfg.vocab_size), 6),  # > swa_window=8
+        Request(1, _prompt(91, 3, cfg.vocab_size), 10),
+    ]
+    fin = {f.rid: f for f in eng.serve(reqs, slots=2)}
+    for r in reqs:
+        solo = eng.serve([Request(9, r.tokens, r.max_new_tokens)], slots=1)[0]
+        np.testing.assert_array_equal(fin[r.rid].tokens, solo.tokens)
+    # one compile per slot-count shape (2 and 1), none per prompt length
+    assert eng._chunk_step_fn._cache_size() == 2
+
+
+def test_chunked_prefill_falls_back_when_incapable(setup):
+    """Archs outside the chunked contract (recurrent state / frontend)
+    silently serve through grouped admission."""
+    cfg = get_smoke_config("mamba2-130m")
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    eng = Engine(cfg, params, hot_cap=4, max_len=48, prefill_chunk=4)
+    assert not eng._chunked_capable()
+    fin = eng.serve([Request(0, _prompt(95, 6, cfg.vocab_size), 4)], slots=1)
+    assert len(fin) == 1 and len(fin[0].tokens) == 4
+    assert eng._chunk_step_fn is None  # never traced
+
+
 def test_swa_family_serves_mixed_lengths(setup):
     """Ring-buffer cold tier (SWA smoke config) through the same engine."""
     cfg = get_smoke_config("mixtral-8x22b")

@@ -23,8 +23,21 @@ operation is vectorized over ``lengths``, and the decode-path appends
 (``append_decode`` / ``append_decode_ring``) take an optional
 ``active: (batch,) bool`` mask — inactive slots (retired / not yet
 admitted) neither write their tier buffers nor advance their length.
-Bulk ``append`` has no mask: prefill always targets a fresh cache whose
-rows are scattered into live slots afterwards (see Engine._admit).
+Bulk ``append`` takes ``valid`` (per-slot count of real rows — chunked
+prefill masks its final partial chunk with it) and ``ring`` (sliding
+-window cold layout); both default to the legacy whole-chunk append.
+
+``PagedKVCache`` is the paged variant of the cold tier: instead of one
+contiguous (batch, cold_cap, ...) row per slot, cold tokens live in a
+shared physical *page pool* (n_pages, page_size, ...) and each slot owns
+an int32 ``page_table`` row mapping its logical cold pages to pool pages.
+Slot j's cold position c lives at pool page ``page_table[j, c // ps]``,
+row ``c % ps``. The hot tier stays contiguous/pinned per slot (the
+DR-eDRAM buffer of the paper). Pages let the serving layer share one
+physical copy of a common prompt prefix across slots (refcounted radix
+tree, serving/paging.py) — ``as_tiered`` gathers the paged cold tier
+back into the contiguous layout, which is how every XLA reference path
+here supports paging with bit-exact parity to the contiguous cache.
 """
 
 from __future__ import annotations
@@ -73,6 +86,102 @@ def init_cache(
     )
 
 
+class PagedKVCache(NamedTuple):
+    """Tiered cache with a paged cold tier (see module docstring).
+
+    ``hot_k/hot_v`` are identical to ``TieredKVCache`` (contiguous,
+    per-slot). The cold tier is a shared pool: ``pool_k/pool_v`` hold
+    ``n_pages`` pages of ``page_size`` tokens each, and ``page_table``
+    (batch, pages_per_slot) int32 maps each slot's logical cold pages to
+    pool pages. Unused table entries must hold a *valid* pool index
+    (convention: 0) — reads are masked by ``lengths``, never by the
+    table, so sentinel values out of range would break the gather.
+    Ring/SWA layouts are not supported in paged form.
+    """
+
+    hot_k: jax.Array
+    hot_v: jax.Array
+    pool_k: jax.Array  # (n_pages, page_size, ...)
+    pool_v: jax.Array
+    page_table: jax.Array  # (batch, pages_per_slot) int32
+    lengths: jax.Array  # (batch,) int32
+
+    @property
+    def hot_cap(self) -> int:
+        return self.hot_k.shape[1]
+
+    @property
+    def page_size(self) -> int:
+        return self.pool_k.shape[1]
+
+    @property
+    def n_pages(self) -> int:
+        return self.pool_k.shape[0]
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.page_table.shape[1]
+
+    @property
+    def cold_cap(self) -> int:
+        return self.pages_per_slot * self.page_size
+
+    @property
+    def capacity(self) -> int:
+        return self.hot_cap + self.cold_cap
+
+
+def init_paged_cache(
+    batch: int,
+    hot_cap: int,
+    cold_cap: int,
+    kv_shape: Sequence[int],
+    dtype=jnp.bfloat16,
+    page_size: int = 256,
+    n_pages: Optional[int] = None,
+) -> PagedKVCache:
+    """Fresh paged cache. ``cold_cap`` rounds up to whole pages; the pool
+    defaults to exactly one private page set per slot and the page table
+    to the identity mapping (slot b's page j = pool page b * pps + j), so
+    an unshared paged cache is the contiguous cache re-addressed."""
+    assert cold_cap > 0, "paged cache needs a non-empty cold tier"
+    pps = -(-cold_cap // page_size)
+    if n_pages is None:
+        n_pages = batch * pps
+    assert n_pages >= 1
+    table = (jnp.arange(batch, dtype=jnp.int32)[:, None] * pps
+             + jnp.arange(pps, dtype=jnp.int32)[None])
+    table = jnp.minimum(table, n_pages - 1)
+    shape_hot = (batch, hot_cap) + tuple(kv_shape)
+    shape_pool = (n_pages, page_size) + tuple(kv_shape)
+    return PagedKVCache(
+        hot_k=jnp.zeros(shape_hot, dtype),
+        hot_v=jnp.zeros(shape_hot, dtype),
+        pool_k=jnp.zeros(shape_pool, dtype),
+        pool_v=jnp.zeros(shape_pool, dtype),
+        page_table=table,
+        lengths=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cold_view(cache: PagedKVCache) -> tuple:
+    """Gather the paged cold tier into contiguous (batch, cold_cap, ...)
+    k/v arrays — the indirection the flash kernels do per S-block, done
+    at once for the XLA reference paths."""
+    b = cache.page_table.shape[0]
+    ck = cache.pool_k[cache.page_table]  # (b, pps, ps, ...)
+    cv = cache.pool_v[cache.page_table]
+    tail = cache.pool_k.shape[2:]
+    return (ck.reshape((b, cache.cold_cap) + tail),
+            cv.reshape((b, cache.cold_cap) + tail))
+
+
+def as_tiered(cache: PagedKVCache) -> TieredKVCache:
+    """Contiguous view of a paged cache (gathers the cold tier)."""
+    ck, cv = cold_view(cache)
+    return TieredKVCache(cache.hot_k, cache.hot_v, ck, cv, cache.lengths)
+
+
 def _active_mask(cache: TieredKVCache, active: Optional[jax.Array]) -> jax.Array:
     if active is None:
         return jnp.ones(cache.lengths.shape, bool)
@@ -102,6 +211,9 @@ def append(
     earlier ones would be evicted within this very call; keeping a single
     writer per ring slot keeps the one-hot scatter exact).
     """
+    if isinstance(cache, PagedKVCache):
+        assert not ring, "ring layout is not supported for paged caches"
+        return _paged_append(cache, k_new, v_new, valid)
     t_new = k_new.shape[1]
     start = cache.lengths  # (b,)
     t_idx = jnp.arange(t_new, dtype=jnp.int32)[None]  # (1, t)
@@ -141,6 +253,113 @@ def append(
     return TieredKVCache(hot_k, hot_v, cold_k, cold_v, start + n_new)
 
 
+def _paged_cold_rows(cache: PagedKVCache, cold_pos, write):
+    """Linear row index into the flattened pool for each cold position;
+    entries not selected by ``write`` get an out-of-range index so a
+    ``mode="drop"`` scatter skips them. ``cold_pos``/``write``: (b, ...)
+    with matching shapes; routing is per slot along axis 0."""
+    ps = cache.page_size
+    pg = jnp.clip(cold_pos // ps, 0, cache.pages_per_slot - 1)
+    page = jnp.take_along_axis(
+        cache.page_table, pg.reshape(pg.shape[0], -1), axis=1
+    ).reshape(pg.shape)
+    lin = page * ps + cold_pos % ps
+    return jnp.where(write, lin, cache.n_pages * ps)
+
+
+def _paged_append(
+    cache: PagedKVCache,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    valid: Optional[jax.Array],
+) -> PagedKVCache:
+    """Bulk append for the paged cache: hot rows use the same one-hot
+    scatter as the contiguous path; cold rows scatter into the flattened
+    pool at page-table-routed linear indices. The serving layer guarantees
+    each writable page has exactly one writer slot (shared pages are only
+    ever *read*; see serving/paging.py), so indices never collide."""
+    t_new = k_new.shape[1]
+    start = cache.lengths  # (b,)
+    t_idx = jnp.arange(t_new, dtype=jnp.int32)[None]  # (1, t)
+    pos = start[:, None] + t_idx  # (b, t)
+    if valid is None:
+        vmask = jnp.ones(pos.shape, bool)
+        n_new = jnp.full_like(start, t_new)
+    else:
+        n_new = valid.astype(jnp.int32)
+        vmask = t_idx < n_new[:, None]
+
+    def scatter_hot(tier, new):
+        cap = tier.shape[1]
+        if cap == 0:
+            return tier
+        in_hot = (pos < cap) & vmask
+        idx = jnp.clip(pos, 0, cap - 1)
+        onehot = (jax.nn.one_hot(idx, cap, dtype=tier.dtype)
+                  * in_hot.astype(tier.dtype)[..., None])
+        upd = jnp.einsum("btc,bt...->bc...", onehot, new.astype(tier.dtype))
+        written = jnp.einsum("btc->bc", onehot) > 0
+        mask = written.reshape(written.shape + (1,) * (tier.ndim - 2))
+        return jnp.where(mask, upd, tier)
+
+    hot_k = scatter_hot(cache.hot_k, k_new)
+    hot_v = scatter_hot(cache.hot_v, v_new)
+
+    in_cold = (pos >= cache.hot_cap) & vmask
+    lin = _paged_cold_rows(cache, pos - cache.hot_cap, in_cold).reshape(-1)
+    tail = cache.pool_k.shape[2:]
+    n_rows = cache.n_pages * cache.page_size
+    pk = cache.pool_k.reshape((n_rows,) + tail)
+    pv = cache.pool_v.reshape((n_rows,) + tail)
+    pk = pk.at[lin].set(k_new.astype(pk.dtype).reshape((-1,) + tail),
+                        mode="drop")
+    pv = pv.at[lin].set(v_new.astype(pv.dtype).reshape((-1,) + tail),
+                        mode="drop")
+    return cache._replace(
+        hot_k=hot_k, hot_v=hot_v,
+        pool_k=pk.reshape(cache.pool_k.shape),
+        pool_v=pv.reshape(cache.pool_v.shape),
+        lengths=start + n_new,
+    )
+
+
+def _paged_append_one(
+    cache: PagedKVCache,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    active: Optional[jax.Array],
+) -> PagedKVCache:
+    """Decode append (one token per slot) for the paged cache."""
+    pos = cache.lengths  # (b,)
+    act = _active_mask(cache, active)
+    in_hot = pos < cache.hot_cap
+
+    def upd_hot(tier, new):
+        cap = tier.shape[1]
+        if cap == 0:
+            return tier
+        idx = jnp.clip(pos, 0, cap - 1)
+        onehot = idx[:, None] == jnp.arange(cap, dtype=jnp.int32)[None]
+        mask = onehot & in_hot[:, None] & act[:, None]
+        mask = mask.reshape(mask.shape + (1,) * (tier.ndim - 2))
+        return jnp.where(mask, new.astype(tier.dtype)[:, None], tier)
+
+    lin = _paged_cold_rows(cache, pos - cache.hot_cap, ~in_hot & act)
+    tail = cache.pool_k.shape[2:]
+    n_rows = cache.n_pages * cache.page_size
+    pk = cache.pool_k.reshape((n_rows,) + tail)
+    pv = cache.pool_v.reshape((n_rows,) + tail)
+    pk = pk.at[lin].set(k_new.astype(pk.dtype), mode="drop")
+    pv = pv.at[lin].set(v_new.astype(pv.dtype), mode="drop")
+    return cache._replace(
+        hot_k=upd_hot(cache.hot_k, k_new),
+        hot_v=upd_hot(cache.hot_v, v_new),
+        pool_k=pk.reshape(cache.pool_k.shape),
+        pool_v=pv.reshape(cache.pool_v.shape),
+        lengths=pos + act.astype(jnp.int32),
+    )
+
+
 def _append_one(
     cache: TieredKVCache,
     k_new: jax.Array,
@@ -148,6 +367,9 @@ def _append_one(
     active: Optional[jax.Array],
     ring: bool,
 ) -> TieredKVCache:
+    if isinstance(cache, PagedKVCache):
+        assert not ring, "ring layout is not supported for paged caches"
+        return _paged_append_one(cache, k_new, v_new, active)
     pos = cache.lengths  # (b,)
     act = _active_mask(cache, active)
     in_hot = pos < cache.hot_cap
@@ -276,6 +498,8 @@ def tiered_decode_attention(
     (``kernels/flash_decode.py``), for which this function is the XLA
     reference path.
     """
+    if isinstance(cache, PagedKVCache):
+        cache = as_tiered(cache)
     d = q.shape[-1]
     scale = scale if scale is not None else d**-0.5
     hot_valid, cold_valid = _valid_masks(cache)
@@ -304,6 +528,8 @@ def tiered_decode_attention_latent(
     k-slot (the latent), so the latent is stored exactly once. Returns the
     per-head latent context (b, h, value_dim). Validity is per slot.
     """
+    if isinstance(cache, PagedKVCache):
+        cache = as_tiered(cache)
     b = q.shape[0]
     hot_valid, cold_valid = _valid_masks(cache)
 
@@ -349,6 +575,10 @@ def fill_fresh(
     placement degenerates to two slice-assignments), and to the ring
     realign of the legacy SWA fill when ``s > cold_cap``.
     """
+    if isinstance(cache, PagedKVCache):
+        raise NotImplementedError(
+            "fill_fresh targets the contiguous cache (grouped admission); "
+            "paged serving always streams prompts via chunked append")
     b, s = k_new.shape[:2]
     if ring and s > cache.cold_cap:
         w = cache.cold_cap
@@ -416,6 +646,9 @@ def tiered_chunk_attention(
     Partials over (hot, cold, chunk) merge with the same streaming
     softmax as the decode read; tiers are never concatenated.
     """
+    if isinstance(cache, PagedKVCache):
+        assert not ring, "ring layout is not supported for paged caches"
+        cache = as_tiered(cache)
     b, C, h, dk = q.shape
     g = k_new.shape[2]
     rep = h // g
@@ -494,6 +727,105 @@ def tiered_chunk_attention(
         m = m_new
     out = num / jnp.maximum(den, 1e-30)[..., None]  # (b, g, rep, C, dv)
     return jnp.moveaxis(out, 3, 1).reshape(b, C, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged-serving admission ops (device side of serving/paging.py):
+# slot (re)initialisation with prefix restore + copy-on-write, and the
+# hot-tier snapshot that makes the slot-private hot tier shareable.
+# ---------------------------------------------------------------------------
+
+
+def _pool_flat(cache: PagedKVCache):
+    tail = cache.pool_k.shape[2:]
+    n_rows = cache.n_pages * cache.page_size
+    return (cache.pool_k.reshape((n_rows,) + tail),
+            cache.pool_v.reshape((n_rows,) + tail), n_rows)
+
+
+def paged_admit(
+    cache: PagedKVCache,
+    reset: jax.Array,  # (b,) bool — slots (re)admitted this wave
+    new_lengths: jax.Array,  # (b,) int32 — matched prefix length M
+    new_table: jax.Array,  # (b, pages_per_slot) int32
+    hot_src: jax.Array,  # (b, n_hot_pages) int32 snapshot pages, -1 = none
+    cow_src: jax.Array,  # (b,) int32 boundary-page copy source, -1 = none
+    cow_dst: jax.Array,  # (b,) int32 boundary-page copy target, -1 = none
+) -> PagedKVCache:
+    """(Re)initialise the ``reset`` slots for a new request in one fused
+    dispatch: install the slot's page-table row and prefix length, restore
+    the hot tier from a pooled snapshot (rows < min(M, hot_cap)), and
+    copy-on-write the partially-matched boundary page so the slot can
+    append into a private copy. Non-reset slots are untouched. All shapes
+    are fixed (full batch, masked), so serving compiles this exactly once.
+    """
+    reset = reset.astype(bool)
+    new_lengths = new_lengths.astype(jnp.int32)
+    table = jnp.where(reset[:, None], new_table.astype(jnp.int32),
+                      cache.page_table)
+    lengths = jnp.where(reset, new_lengths, cache.lengths)
+    ps = cache.page_size
+    pk, pv, n_rows = _pool_flat(cache)
+
+    # copy-on-write: dst page <- src page (full page; rows past the match
+    # boundary are overwritten by the slot's own appends, rows past the
+    # slot's final length are masked at read)
+    j = jnp.arange(ps, dtype=jnp.int32)[None]  # (1, ps)
+    cow_ok = reset & (cow_src >= 0) & (cow_dst >= 0)
+    src_rows = jnp.clip(cow_src[:, None], 0, None) * ps + j
+    vals_k = pk[jnp.clip(src_rows, 0, n_rows - 1)]
+    vals_v = pv[jnp.clip(src_rows, 0, n_rows - 1)]
+    dst_rows = jnp.where(cow_ok[:, None],
+                         jnp.clip(cow_dst[:, None], 0, None) * ps + j, n_rows)
+    flat = dst_rows.reshape(-1)
+    tail = pk.shape[1:]
+    pk = pk.at[flat].set(vals_k.reshape((-1,) + tail), mode="drop")
+    pv = pv.at[flat].set(vals_v.reshape((-1,) + tail), mode="drop")
+
+    # hot restore: rows i < min(M, hot_cap) from the snapshot pages
+    hot_k, hot_v = cache.hot_k, cache.hot_v
+    if cache.hot_cap:
+        i = jnp.arange(cache.hot_cap, dtype=jnp.int32)[None]  # (1, hc)
+        pg = jnp.minimum(i // ps, hot_src.shape[1] - 1)
+        src_pages = jnp.take_along_axis(
+            hot_src.astype(jnp.int32),
+            jnp.broadcast_to(pg, (hot_src.shape[0], pg.shape[1])), axis=1)
+        rows = jnp.clip(src_pages, 0, None) * ps + i % ps
+        ok = (reset[:, None] & (src_pages >= 0)
+              & (i < jnp.minimum(new_lengths, cache.hot_cap)[:, None]))
+        vk = pk[jnp.clip(rows, 0, n_rows - 1)]
+        vv = pv[jnp.clip(rows, 0, n_rows - 1)]
+        m = ok.reshape(ok.shape + (1,) * (hot_k.ndim - 2))
+        hot_k = jnp.where(m, vk.astype(hot_k.dtype), hot_k)
+        hot_v = jnp.where(m, vv.astype(hot_v.dtype), hot_v)
+
+    return cache._replace(
+        hot_k=hot_k, hot_v=hot_v,
+        pool_k=pk.reshape(cache.pool_k.shape),
+        pool_v=pv.reshape(cache.pool_v.shape),
+        page_table=table, lengths=lengths,
+    )
+
+
+def save_hot(cache: PagedKVCache, slot: jax.Array,
+             page_ids: jax.Array) -> PagedKVCache:
+    """Snapshot slot ``slot``'s hot tier into pool pages ``page_ids``
+    ((n_hot_pages,) int32, -1 = skip) so the slot-private hot prefix
+    becomes shareable through the prefix tree (serving/paging.py). Row i
+    of the hot tier lands at row i % ps of page page_ids[i // ps]."""
+    ps = cache.page_size
+    pk, pv, n_rows = _pool_flat(cache)
+    i = jnp.arange(cache.hot_cap, dtype=jnp.int32)
+    pages = page_ids.astype(jnp.int32)[jnp.minimum(i // ps,
+                                                   page_ids.shape[0] - 1)]
+    rows = jnp.where(pages >= 0, jnp.clip(pages, 0, None) * ps + i % ps,
+                     n_rows)
+    hk = jnp.take(cache.hot_k, slot.astype(jnp.int32), axis=0)
+    hv = jnp.take(cache.hot_v, slot.astype(jnp.int32), axis=0)
+    pk = pk.at[rows].set(hk.astype(pk.dtype), mode="drop")
+    pv = pv.at[rows].set(hv.astype(pv.dtype), mode="drop")
+    return cache._replace(pool_k=pk.reshape(cache.pool_k.shape),
+                          pool_v=pv.reshape(cache.pool_v.shape))
 
 
 # ---------------------------------------------------------------------------
@@ -578,3 +910,26 @@ def prompt_traffic_tokens(prompt_len: int, hot_cap: int) -> dict:
         "ondie_write": min(p, b),
         "ext_write": max(p - b, 0),
     }
+
+
+def prompt_traffic_tokens_resumed(
+    prompt_len: int, prefix_len: int, hot_cap: int
+) -> dict:
+    """Prompt-phase ledger when the first ``prefix_len`` tokens were
+    restored from a shared prefix cache (serving/paging.py) instead of
+    being prefilled.
+
+    The skipped phase (steps 0..prefix_len-1 of ``prompt_traffic_tokens``)
+    never runs; what remains is the tail steps plus the cost of reloading
+    the snapshot of the first min(prefix_len, hot_cap) tokens from the
+    (external) shared pool into the on-die hot tier. Shared *cold* pages
+    cost nothing to adopt — they stay external and are read by the tail
+    steps exactly as if the slot had written them itself.
+    """
+    full = prompt_traffic_tokens(prompt_len, hot_cap)
+    skipped = prompt_traffic_tokens(min(prefix_len, prompt_len), hot_cap)
+    out = {k: full[k] - skipped[k] for k in TRAFFIC_KEYS}
+    reload_hot = min(prefix_len, hot_cap)
+    out["ext_read"] += reload_hot
+    out["ondie_write"] += reload_hot
+    return out

@@ -358,6 +358,47 @@ def _park_maps(hot_cap: int, cold_cap: int, bs_hot: int, bs_cold: int,
     return hot_map, cold_map
 
 
+def _cold_operands(cache, g, dk, dv, block_s, b):
+    """Cold-tier operands + blocking for a launch: contiguous caches use
+    the per-slot (b, cold_cap, g*d) buffers with ``block_s`` S-blocks;
+    paged caches stream the shared pool (n_pages, page_size, g*d) with
+    one page per S-block — the per-slot page table turns into gather
+    indices in the BlockSpec index map (``_paged_cold_map``)."""
+    if isinstance(cache, kvc.PagedKVCache):
+        ps = cache.page_size
+        ck = cache.pool_k.reshape(cache.n_pages, ps, g * dk)
+        cv = cache.pool_v.reshape(cache.n_pages, ps, g * dv)
+        return ck, cv, ps, cache.pages_per_slot
+
+    def flat(t, d):
+        return t.reshape(b, t.shape[1], g * d)
+
+    dt = cache.hot_k.dtype
+    cold_cap = cache.cold_cap
+    ck, bs_cold, n_cold = _tier_blocks(
+        flat(cache.cold_k, dk), cold_cap, block_s, (b, 1, g * dk), dt)
+    cv, _, _ = _tier_blocks(
+        flat(cache.cold_v, dv), cold_cap, block_s, (b, 1, g * dv), dt)
+    return ck, cv, bs_cold, n_cold
+
+
+def _paged_cold_map(hot_cap: int, cold_cap: int, page_size: int, n_hot: int):
+    """Paged twin of ``_park_maps``'s cold map: the S index selects the
+    slot's logical page, the page table (scalar-prefetch) resolves it to
+    a pool page. Parking works at the page level — an invalid S-block
+    repeats the last *valid pool page* index, eliding the copy. Unused
+    table entries hold pool index 0 (engine convention), so a length-0
+    slot parks on a real page and ``pl.when`` skips the body."""
+
+    def cold_map(b_i, kk, lens, pt):
+        n_valid = jnp.clip(lens[b_i] - hot_cap, 0, cold_cap)
+        nvb = jnp.maximum(pl.cdiv(n_valid, page_size), 1)
+        kc = jnp.maximum(kk - n_hot, 0)
+        return pt[b_i, jnp.minimum(kc, nvb - 1)], 0
+
+    return cold_map
+
+
 def _flash_gqa(q, cache, scale, block_s, interpret):
     b, h, dk = q.shape
     g = cache.hot_k.shape[2]
@@ -365,6 +406,7 @@ def _flash_gqa(q, cache, scale, block_s, interpret):
     assert rep * g == h, (h, g)
     dv = cache.hot_v.shape[-1]
     hot_cap, cold_cap = cache.hot_cap, cache.cold_cap
+    paged = isinstance(cache, kvc.PagedKVCache)
     if block_s is None:
         block_s = ops.select_blocks(
             rep, max(dk, dv), cache.capacity, "pack2", kind="decode_attn"
@@ -381,29 +423,46 @@ def _flash_gqa(q, cache, scale, block_s, interpret):
         flat(cache.hot_k, dk), hot_cap, block_s, (b, 1, g * dk), dt)
     hv, _, _ = _tier_blocks(
         flat(cache.hot_v, dv), hot_cap, block_s, (b, 1, g * dv), dt)
-    ck, bs_cold, n_cold = _tier_blocks(
-        flat(cache.cold_k, dk), cold_cap, block_s, (b, 1, g * dk), dt)
-    cv, _, _ = _tier_blocks(
-        flat(cache.cold_v, dv), cold_cap, block_s, (b, 1, g * dv), dt)
+    ck, cv, bs_cold, n_cold = _cold_operands(cache, g, dk, dv, block_s, b)
 
     hot_map2, cold_map2 = _park_maps(hot_cap, cold_cap, bs_hot, bs_cold, n_hot)
-
-    def with_g(m):  # lift the (b, s) tier maps onto the (b, g, s) grid
-        return lambda b_i, g_i, kk, lens: (*m(b_i, kk, lens), g_i)
+    if paged:
+        cold_pt = _paged_cold_map(hot_cap, cold_cap, bs_cold, n_hot)
+        hot_g = lambda b_i, g_i, kk, lens, pt: (  # noqa: E731
+            *hot_map2(b_i, kk, lens), g_i)
+        cold_g = lambda b_i, g_i, kk, lens, pt: (  # noqa: E731
+            *cold_pt(b_i, kk, lens, pt), g_i)
+        q_map = lambda b_i, g_i, kk, lens, pt: (b_i, g_i, 0, 0)  # noqa: E731
+        prefetch = (cache.lengths.astype(jnp.int32),
+                    cache.page_table.astype(jnp.int32))
+        body = functools.partial(
+            _kernel_gqa, scale=scale, n_hot_blocks=n_hot,
+            hot_cap=hot_cap, cold_cap=cold_cap,
+        )
+        kern = lambda lens_ref, pt_ref, *rest: body(lens_ref, *rest)  # noqa: E731
+    else:
+        hot_g = lambda b_i, g_i, kk, lens: (  # noqa: E731
+            *hot_map2(b_i, kk, lens), g_i)
+        cold_g = lambda b_i, g_i, kk, lens: (  # noqa: E731
+            *cold_map2(b_i, kk, lens), g_i)
+        q_map = lambda b_i, g_i, kk, lens: (b_i, g_i, 0, 0)  # noqa: E731
+        prefetch = (cache.lengths.astype(jnp.int32),)
+        kern = functools.partial(
+            _kernel_gqa, scale=scale, n_hot_blocks=n_hot,
+            hot_cap=hot_cap, cold_cap=cold_cap,
+        )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=len(prefetch),
         grid=(b, g, n_hot + n_cold),
         in_specs=[
-            pl.BlockSpec((1, 1, rep, dk), lambda b_i, g_i, kk, lens: (b_i, g_i, 0, 0)),
-            pl.BlockSpec((1, bs_hot, dk), with_g(hot_map2)),
-            pl.BlockSpec((1, bs_hot, dv), with_g(hot_map2)),
-            pl.BlockSpec((1, bs_cold, dk), with_g(cold_map2)),
-            pl.BlockSpec((1, bs_cold, dv), with_g(cold_map2)),
+            pl.BlockSpec((1, 1, rep, dk), q_map),
+            pl.BlockSpec((1, bs_hot, dk), hot_g),
+            pl.BlockSpec((1, bs_hot, dv), hot_g),
+            pl.BlockSpec((1, bs_cold, dk), cold_g),
+            pl.BlockSpec((1, bs_cold, dv), cold_g),
         ],
-        out_specs=pl.BlockSpec(
-            (1, 1, rep, dv), lambda b_i, g_i, kk, lens: (b_i, g_i, 0, 0)
-        ),
+        out_specs=pl.BlockSpec((1, 1, rep, dv), q_map),
         scratch_shapes=[
             pltpu.VMEM((rep, 1), jnp.float32),
             pltpu.VMEM((rep, 1), jnp.float32),
@@ -411,14 +470,11 @@ def _flash_gqa(q, cache, scale, block_s, interpret):
         ],
     )
     out = pl.pallas_call(
-        functools.partial(
-            _kernel_gqa, scale=scale, n_hot_blocks=n_hot,
-            hot_cap=hot_cap, cold_cap=cold_cap,
-        ),
+        kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, g, rep, dv), q.dtype),
         interpret=interpret,
-    )(cache.lengths.astype(jnp.int32), q.reshape(b, g, rep, dk), hk, hv, ck, cv)
+    )(*prefetch, q.reshape(b, g, rep, dk), hk, hv, ck, cv)
     return out.reshape(b, h, dv)
 
 
@@ -445,33 +501,56 @@ def _flash_gqa_fused(q, cache, k_new, v_new, active, scale, theta, ring,
         flat(cache.hot_k, dk), hot_cap, block_s, (b, 1, g * dk), dt)
     hv, _, _ = _tier_blocks(
         flat(cache.hot_v, dv), hot_cap, block_s, (b, 1, g * dv), dt)
-    ck, bs_cold, n_cold = _tier_blocks(
-        flat(cache.cold_k, dk), cold_cap, block_s, (b, 1, g * dk), dt)
-    cv, _, _ = _tier_blocks(
-        flat(cache.cold_v, dv), cold_cap, block_s, (b, 1, g * dv), dt)
+    ck, cv, bs_cold, n_cold = _cold_operands(cache, g, dk, dv, block_s, b)
 
     hot_map2, cold_map2 = _park_maps(hot_cap, cold_cap, bs_hot, bs_cold, n_hot)
+    paged = isinstance(cache, kvc.PagedKVCache)
+    act = (
+        jnp.ones((b,), jnp.int32) if active is None
+        else active.astype(jnp.int32)
+    )
+    body = functools.partial(
+        _kernel_gqa_fused, scale=scale, n_hot_blocks=n_hot,
+        hot_cap=hot_cap, cold_cap=cold_cap, ring=ring, theta=theta,
+    )
+    if paged:
+        assert not ring, "ring layout is not supported for paged caches"
+        cold_pt = _paged_cold_map(hot_cap, cold_cap, bs_cold, n_hot)
+        hot_g = lambda b_i, g_i, kk, lens, a, pt: (  # noqa: E731
+            *hot_map2(b_i, kk, lens), g_i)
+        cold_g = lambda b_i, g_i, kk, lens, a, pt: (  # noqa: E731
+            *cold_pt(b_i, kk, lens, pt), g_i)
+        q_map = lambda b_i, g_i, kk, lens, a, pt: (  # noqa: E731
+            b_i, g_i, 0, 0)
+        pin = lambda b_i, g_i, kk, lens, a, pt: (b_i, 0, g_i)  # noqa: E731
+        prefetch = (cache.lengths.astype(jnp.int32), act,
+                    cache.page_table.astype(jnp.int32))
+        kern = lambda lens_ref, act_ref, pt_ref, *rest: body(  # noqa: E731
+            lens_ref, act_ref, *rest)
+    else:
+        hot_g = lambda b_i, g_i, kk, lens, a: (  # noqa: E731
+            *hot_map2(b_i, kk, lens), g_i)
+        cold_g = lambda b_i, g_i, kk, lens, a: (  # noqa: E731
+            *cold_map2(b_i, kk, lens), g_i)
+        q_map = lambda b_i, g_i, kk, lens, a: (b_i, g_i, 0, 0)  # noqa: E731
+        pin = lambda b_i, g_i, kk, lens, a: (b_i, 0, g_i)  # noqa: E731
+        prefetch = (cache.lengths.astype(jnp.int32), act)
+        kern = body
 
-    def with_g(m):  # lift the (b, s) tier maps onto the (b, g, s) grid
-        return lambda b_i, g_i, kk, lens, act: (*m(b_i, kk, lens), g_i)
-
-    pin = lambda b_i, g_i, kk, lens, act: (b_i, 0, g_i)  # noqa: E731
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(prefetch),
         grid=(b, g, n_hot + n_cold),
         in_specs=[
-            pl.BlockSpec((1, 1, rep, dk),
-                         lambda b_i, g_i, kk, lens, act: (b_i, g_i, 0, 0)),
-            pl.BlockSpec((1, bs_hot, dk), with_g(hot_map2)),
-            pl.BlockSpec((1, bs_hot, dv), with_g(hot_map2)),
-            pl.BlockSpec((1, bs_cold, dk), with_g(cold_map2)),
-            pl.BlockSpec((1, bs_cold, dv), with_g(cold_map2)),
+            pl.BlockSpec((1, 1, rep, dk), q_map),
+            pl.BlockSpec((1, bs_hot, dk), hot_g),
+            pl.BlockSpec((1, bs_hot, dv), hot_g),
+            pl.BlockSpec((1, bs_cold, dk), cold_g),
+            pl.BlockSpec((1, bs_cold, dv), cold_g),
             pl.BlockSpec((1, 1, dk), pin),
             pl.BlockSpec((1, 1, dv), pin),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, rep, dv),
-                         lambda b_i, g_i, kk, lens, act: (b_i, g_i, 0, 0)),
+            pl.BlockSpec((1, 1, rep, dv), q_map),
             pl.BlockSpec((1, 1, dk), pin),
         ],
         scratch_shapes=[
@@ -481,15 +560,8 @@ def _flash_gqa_fused(q, cache, k_new, v_new, active, scale, theta, ring,
             pltpu.VMEM((rep, dk), jnp.float32),
         ],
     )
-    act = (
-        jnp.ones((b,), jnp.int32) if active is None
-        else active.astype(jnp.int32)
-    )
     out, k_rot = pl.pallas_call(
-        functools.partial(
-            _kernel_gqa_fused, scale=scale, n_hot_blocks=n_hot,
-            hot_cap=hot_cap, cold_cap=cold_cap, ring=ring, theta=theta,
-        ),
+        kern,
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((b, g, rep, dv), q.dtype),
@@ -497,7 +569,7 @@ def _flash_gqa_fused(q, cache, k_new, v_new, active, scale, theta, ring,
         ],
         interpret=interpret,
     )(
-        cache.lengths.astype(jnp.int32), act, q.reshape(b, g, rep, dk),
+        *prefetch, q.reshape(b, g, rep, dk),
         hk, hv, ck, cv, k_new.reshape(b, 1, g * dk),
         v_new.reshape(b, 1, g * dv),
     )
@@ -675,6 +747,10 @@ def flash_decode_attention_latent(
     S-block in VMEM (the latent is stored exactly once and streamed
     once). Returns the per-head latent context (b, h, value_dim) f32.
     """
+    if isinstance(cache, kvc.PagedKVCache):
+        # MLA serving is not paged (engine restriction); gather back to
+        # the contiguous layout so direct callers still get the numbers
+        cache = kvc.as_tiered(cache)
     impl = _resolve(impl)
     if impl == "xla":
         return kvc.tiered_decode_attention_latent(q, cache, value_dim, scale)

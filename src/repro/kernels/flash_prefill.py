@@ -280,6 +280,7 @@ def _flash_prefill(q, k_new, v_new, cache, valid, scale, window, ring,
     n_new = pl.cdiv(c, bs_new)
     ck_len = n_new * bs_new
 
+    paged = isinstance(cache, kvc.PagedKVCache)
     if cache is None:
         hot_cap = cold_cap = 0
         lens = jnp.zeros((b,), jnp.int32)
@@ -289,7 +290,8 @@ def _flash_prefill(q, k_new, v_new, cache, valid, scale, window, ring,
         hot_cap, cold_cap = cache.hot_cap, cache.cold_cap
         lens = cache.lengths.astype(jnp.int32)
         hot_k, hot_v = cache.hot_k, cache.hot_v
-        cold_k, cold_v = cache.cold_k, cache.cold_v
+        cold_k, cold_v = (None, None) if paged else (cache.cold_k,
+                                                     cache.cold_v)
         tier_dt = cache.hot_k.dtype
     kv_dtype = kv_dtype or tier_dt
 
@@ -302,10 +304,21 @@ def _flash_prefill(q, k_new, v_new, cache, valid, scale, window, ring,
         flat(hot_k, dk, hot_cap), hot_cap, block_s, (b, 1, g * dk), tier_dt)
     hv, _, _ = _tier_blocks(
         flat(hot_v, dv, hot_cap), hot_cap, block_s, (b, 1, g * dv), tier_dt)
-    ck, bs_cold, n_cold = _tier_blocks(
-        flat(cold_k, dk, cold_cap), cold_cap, block_s, (b, 1, g * dk), tier_dt)
-    cv, _, _ = _tier_blocks(
-        flat(cold_v, dv, cold_cap), cold_cap, block_s, (b, 1, g * dv), tier_dt)
+    if paged:
+        # cold tier = the shared pool, one page per S-block; the per-slot
+        # page table rides as a third scalar-prefetch operand and resolves
+        # logical -> pool pages inside cold_map (flash_decode's scheme)
+        assert not ring, "ring layout is not supported for paged caches"
+        bs_cold, n_cold = cache.page_size, cache.pages_per_slot
+        ck = cache.pool_k.reshape(cache.n_pages, bs_cold, g * dk)
+        cv = cache.pool_v.reshape(cache.n_pages, bs_cold, g * dv)
+    else:
+        ck, bs_cold, n_cold = _tier_blocks(
+            flat(cold_k, dk, cold_cap), cold_cap, block_s, (b, 1, g * dk),
+            tier_dt)
+        cv, _, _ = _tier_blocks(
+            flat(cold_v, dv, cold_cap), cold_cap, block_s, (b, 1, g * dv),
+            tier_dt)
 
     # q: (b, c, h, dk) -> (b, g, cq*rep, dk), token-major rows per block
     qt = jnp.moveaxis(q.reshape(b, c, g, rep, dk), 1, 2)  # (b, g, c, rep, dk)
@@ -316,30 +329,42 @@ def _flash_prefill(q, k_new, v_new, cache, valid, scale, window, ring,
     vn = jnp.pad(
         v_new.reshape(b, c, g * dv), ((0, 0), (0, ck_len - c), (0, 0)))
 
-    def hot_map(b_i, g_i, qi, kk, lens, valid):
+    def hot_map(b_i, g_i, qi, kk, lens, valid, *rest):
         nvalid = jnp.minimum(lens[b_i], hot_cap)
         nvb = jnp.maximum(pl.cdiv(nvalid, bs_hot), 1)
         return b_i, jnp.minimum(kk, nvb - 1), g_i
 
-    def cold_map(b_i, g_i, qi, kk, lens, valid):
-        nvalid = jnp.clip(lens[b_i] - hot_cap, 0, cold_cap)
-        nvb = jnp.maximum(pl.cdiv(nvalid, bs_cold), 1)
-        kc = jnp.maximum(kk - n_hot, 0)
-        return b_i, jnp.minimum(kc, nvb - 1), g_i
+    if paged:
 
-    def new_map(b_i, g_i, qi, kk, lens, valid):
+        def cold_map(b_i, g_i, qi, kk, lens, valid, pt):
+            nvalid = jnp.clip(lens[b_i] - hot_cap, 0, cold_cap)
+            nvb = jnp.maximum(pl.cdiv(nvalid, bs_cold), 1)
+            kc = jnp.maximum(kk - n_hot, 0)
+            return pt[b_i, jnp.minimum(kc, nvb - 1)], 0, g_i
+
+    else:
+
+        def cold_map(b_i, g_i, qi, kk, lens, valid, *rest):
+            nvalid = jnp.clip(lens[b_i] - hot_cap, 0, cold_cap)
+            nvb = jnp.maximum(pl.cdiv(nvalid, bs_cold), 1)
+            kc = jnp.maximum(kk - n_hot, 0)
+            return b_i, jnp.minimum(kc, nvb - 1), g_i
+
+    def new_map(b_i, g_i, qi, kk, lens, valid, *rest):
         kn_i = jnp.maximum(kk - n_hot - n_cold, 0)
         causal_last = (qi * bq + bq - 1) // bs_new
         valid_last = jnp.maximum(pl.cdiv(valid[b_i], bs_new), 1) - 1
         return b_i, jnp.minimum(kn_i, jnp.minimum(causal_last, valid_last)), g_i
 
-    def emit_map(b_i, g_i, qi, kk, lens, valid):
+    def emit_map(b_i, g_i, qi, kk, lens, valid, *rest):
         kn_i = jnp.clip(kk - n_hot - n_cold, 0, n_new - 1)
         return b_i, jnp.where(qi == nq - 1, kn_i, 0), g_i
 
+    def q_map(b_i, g_i, qi, kk, lens, valid, *rest):
+        return b_i, g_i, qi, 0
+
     in_specs = [
-        pl.BlockSpec((1, 1, bq * rep, dk),
-                     lambda b_i, g_i, qi, kk, lens, valid: (b_i, g_i, qi, 0)),
+        pl.BlockSpec((1, 1, bq * rep, dk), q_map),
         pl.BlockSpec((1, bs_hot, dk), hot_map),
         pl.BlockSpec((1, bs_hot, dv), hot_map),
         pl.BlockSpec((1, bs_cold, dk), cold_map),
@@ -349,8 +374,7 @@ def _flash_prefill(q, k_new, v_new, cache, valid, scale, window, ring,
     ]
     out_shapes = [jax.ShapeDtypeStruct((b, g, cq * rep, dv), q.dtype)]
     out_specs = [
-        pl.BlockSpec((1, 1, bq * rep, dv),
-                     lambda b_i, g_i, qi, kk, lens, valid: (b_i, g_i, qi, 0)),
+        pl.BlockSpec((1, 1, bq * rep, dv), q_map),
     ]
     if emit_kv:
         out_shapes += [
@@ -362,8 +386,21 @@ def _flash_prefill(q, k_new, v_new, cache, valid, scale, window, ring,
             pl.BlockSpec((1, bs_new, dv), emit_map),
         ]
 
+    prefetch = (lens, valid)
+    body = functools.partial(
+        _kernel_prefill, scale=scale, n_hot=n_hot, n_cold=n_cold,
+        hot_cap=hot_cap, cold_cap=cold_cap, bq=bq, rep=rep,
+        window=window, ring=ring, rope_dims=rope_dims, theta=theta,
+        emit_kv=emit_kv, k_in_dtype=k_new.dtype, v_in_dtype=v_new.dtype,
+    )
+    if paged:
+        prefetch = (lens, valid, cache.page_table.astype(jnp.int32))
+        kern = lambda lens_ref, valid_ref, pt_ref, *rest: body(  # noqa: E731
+            lens_ref, valid_ref, *rest)
+    else:
+        kern = body
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(prefetch),
         grid=(b, g, nq, n_hot + n_cold + n_new),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -375,16 +412,11 @@ def _flash_prefill(q, k_new, v_new, cache, valid, scale, window, ring,
         ],
     )
     outs = pl.pallas_call(
-        functools.partial(
-            _kernel_prefill, scale=scale, n_hot=n_hot, n_cold=n_cold,
-            hot_cap=hot_cap, cold_cap=cold_cap, bq=bq, rep=rep,
-            window=window, ring=ring, rope_dims=rope_dims, theta=theta,
-            emit_kv=emit_kv, k_in_dtype=k_new.dtype, v_in_dtype=v_new.dtype,
-        ),
+        kern,
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
-    )(lens, valid, qt, hk, hv, ck, cv, kn, vn)
+    )(*prefetch, qt, hk, hv, ck, cv, kn, vn)
 
     o = outs[0].reshape(b, g, cq, rep, dv)[:, :, :c]
     o = jnp.moveaxis(o, 2, 1).reshape(b, c, h, dv)

@@ -191,6 +191,21 @@ def select_blocks(m: int, n: int, k: int, codec: str, kind: str = "fused") -> tu
     return bm, bn, bk
 
 
+def default_page_size(rep: int, d: int, capacity: int) -> int:
+    """Page size for the paged KV cache (core/kv_cache.PagedKVCache).
+
+    One page = one flash S-block: the paged cold tier streams through the
+    attention kernels with the page table as BlockSpec gather indices, so
+    sizing pages off the ``decode_attn`` row keeps the paged launch's
+    block geometry identical to the contiguous one — the indirection adds
+    an index lookup, never a different tiling. ``rep``/``d`` follow the
+    ``select_blocks`` decode-attn convention (q rows per kv group, head
+    width); ``capacity`` caps the page at the cold tier's size.
+    """
+    return select_blocks(rep, d, max(capacity, 1), "pack2",
+                         kind="decode_attn")[2]
+
+
 def _xla_path(xq: jax.Array, packed: jax.Array, k: int, codec: str) -> jax.Array:
     unpack = packing.unpack2 if codec == "pack2" else packing.unpack243
     wq = unpack(packed, k=k)  # (K, N) int8

@@ -364,8 +364,17 @@ def init_decode_cache(
     max_len: int,
     hot_cap: int = DEFAULT_HOT_CAP,
     dtype=jnp.bfloat16,
+    paged: bool = False,
+    page_size: int = 256,
+    n_pages: Optional[int] = None,
 ):
-    """Empty cache pytree for this arch (stacked per layer-stack)."""
+    """Empty cache pytree for this arch (stacked per layer-stack).
+
+    With ``paged`` the attention stacks use the page-table-indirected
+    cold tier (``kv_cache.PagedKVCache``): one shared ``n_pages`` pool
+    per layer, page ids meaning the same physical page index in every
+    stack's pool (the serving engine's host-side page accounting is a
+    single id space across layers and stacks)."""
 
     def attn_cache(n_layers):
         kshape, vshape = _attn_cache_spec(cfg)
@@ -374,12 +383,24 @@ def init_decode_cache(
             hc, cc = 0, min(cfg.swa_window, max_len)
         else:
             hc, cc = min(hot_cap, max_len), max_len - min(hot_cap, max_len)
-        one = kvc.init_cache(batch, hc, cc, kshape, kv_dtype)
-        if vshape == (0,):
-            one = one._replace(
-                hot_v=jnp.zeros(one.hot_v.shape[:2] + (0,), kv_dtype),
-                cold_v=jnp.zeros(one.cold_v.shape[:2] + (0,), kv_dtype),
+        if paged:
+            assert cfg.attn_type != "swa", "paged cold tier has no ring layout"
+            one = kvc.init_paged_cache(
+                batch, hc, cc, kshape, kv_dtype,
+                page_size=page_size, n_pages=n_pages,
             )
+            if vshape == (0,):
+                one = one._replace(
+                    hot_v=jnp.zeros(one.hot_v.shape[:2] + (0,), kv_dtype),
+                    pool_v=jnp.zeros(one.pool_v.shape[:2] + (0,), kv_dtype),
+                )
+        else:
+            one = kvc.init_cache(batch, hc, cc, kshape, kv_dtype)
+            if vshape == (0,):
+                one = one._replace(
+                    hot_v=jnp.zeros(one.hot_v.shape[:2] + (0,), kv_dtype),
+                    cold_v=jnp.zeros(one.cold_v.shape[:2] + (0,), kv_dtype),
+                )
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_layers,) + a.shape), one)
 
     def ssm_state(n_layers, lead=()):

@@ -46,9 +46,27 @@ admission. Per sequence, the total reconciles exactly with
 ``dr_edram.closed_form_reduction(seq_len, hot_cap)`` — including in
 mixed-length batches, which is asserted in tests.
 
+Paged serving
+-------------
+With ``paged=True`` the cold tier is page-table indirected
+(``core/kv_cache.PagedKVCache``): cold KV rows live in a shared pool and
+each slot's page-table row maps its logical cold pages onto pool pages.
+A host-side refcounted radix tree (``serving/paging.py``) matches each
+new prompt against previously served prefixes; matched cold pages are
+adopted by reference (one physical copy across N slots), the boundary
+page is adopted copy-on-write, the hot tier is restored from a pooled
+snapshot, and chunked prefill streams only the novel suffix. The whole
+per-slot (re)initialisation is ONE fused jitted dispatch
+(``kv_cache.paged_admit`` vmapped over the layer stacks). Skipped
+prefill work is reported per request as
+``FinishedRequest.prefix_tokens_reused`` and the prompt-phase ledger
+switches to ``prompt_traffic_tokens_resumed`` so the DR accounting
+reconciles with the external reads that actually happened.
+
 docs/serving.md walks the full request lifecycle (slots, admission
-groups, ``sync_every`` semantics, the reconciliation contract);
-docs/kernels.md covers the packed fast path the decode loop runs on.
+groups, ``sync_every`` semantics, the paging lifecycle, the
+reconciliation contract); docs/kernels.md covers the packed fast path
+the decode loop runs on.
 """
 
 from __future__ import annotations
@@ -65,9 +83,16 @@ from repro.configs.base import ModelConfig
 from repro.core import dr_edram, kv_cache
 from repro.models import pack as pack_lib
 from repro.models import transformer as T
+from repro.serving.paging import PagePool, PrefixCache, PrefixMatch
 from repro.serving.scheduler import FinishedRequest, Request, SlotScheduler
 
 TRAFFIC_KEYS = kv_cache.TRAFFIC_KEYS
+
+# `generate` pads rows that stopped early with this sentinel. The stop
+# token itself is a real emitted token (it appears in `tokens` when
+# sampled), so padding with it would make genuine stops
+# indistinguishable from padding; -1 is outside every vocabulary.
+PAD_TOKEN = -1
 
 
 class DecodeState(NamedTuple):
@@ -87,10 +112,14 @@ class DecodeState(NamedTuple):
 
 @dataclasses.dataclass
 class GenerationResult:
-    tokens: jax.Array  # (b, n_generated)
-    steps: int
+    tokens: jax.Array  # (b, max_new) int32, PAD_TOKEN past each row's end
+    steps: int  # max over rows (the batch's wall-clock step count)
     traffic: dict  # accumulated on-die vs external bytes
     wall_s: float
+    # tokens actually emitted per row — rows that hit the stop token
+    # early are shorter than `steps`; `tokens[i, steps_per_row[i]:]` is
+    # all PAD_TOKEN.
+    steps_per_row: Optional[List[int]] = None
 
     @property
     def external_reduction(self) -> float:
@@ -126,6 +155,10 @@ class Engine:
         slots: int = 8,
         sync_every: int = 8,
         prefill_chunk: int = 0,
+        paged: bool = False,
+        page_size: Optional[int] = None,
+        n_pages: Optional[int] = None,
+        prefix_sharing: bool = True,
     ):
         self.cfg = cfg
         # Freeze to ROM form once (packed trits + fused wqkv/wgu/w_dqkv/w_gu
@@ -152,11 +185,44 @@ class Engine:
         # length mix. Supported for attention-cache families without a
         # frontend; other archs fall back to grouped admission.
         self.prefill_chunk = prefill_chunk
+        # paged cold tier + refcounted prefix sharing (module docstring /
+        # serving/paging.py). One page = one flash S-block, so the decode
+        # kernel's cold gather indexes whole pages — page_size defaults to
+        # the block the kernel would pick anyway.
+        self.paged = paged
+        self.prefix_sharing = bool(prefix_sharing) and paged
+        if paged:
+            if not (prefill_chunk > 0 and self._chunked_capable()
+                    and cfg.attn_type == "full"):
+                raise ValueError(
+                    "paged serving needs chunked prefill (prefill_chunk > 0)"
+                    " on a full-attention cache family — grouped whole-"
+                    "prompt admission bypasses the page table"
+                )
+            if max_len <= hot_cap:
+                raise ValueError(
+                    f"paged serving needs a non-empty cold tier (max_len "
+                    f"{max_len} <= hot_cap {hot_cap})"
+                )
+            from repro.kernels import ops as kops
+
+            rep = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+            self._page_size = int(
+                page_size
+                or kops.default_page_size(rep, cfg.resolved_head_dim, max_len)
+            )
+            self._pps = -(-(max_len - hot_cap) // self._page_size)
+            self._n_hot_pages = (
+                -(-hot_cap // self._page_size) if hot_cap else 0
+            )
+            self._n_pages_cfg = n_pages
         self.weight_loads = 0  # host->device weight transfers after init
         self._step_fns: dict = {}  # (out_cap, stop_token) -> jitted step
         self._batch_axes = None  # lazy: cache-leaf batch-axis pytree
         self._admit_fn = None  # jitted admission (compiles per group size)
         self._chunk_step_fn = None  # jitted chunked-prefill dispatch
+        self._paged_admit_fn = None  # jitted fused paged (re)admission
+        self._save_hot_fn = None  # jitted hot-tier snapshot dispatch
         # jitted prefill (one compile per admitted (group, prompt) shape)
         self._prefill = jax.jit(
             lambda p, batch: T.prefill(
@@ -199,9 +265,30 @@ class Engine:
         # same rule prefill uses, so admission scatters are cast-free
         return self.params["final_ln"].dtype
 
+    def _pool_pages(self, n_slots: int) -> int:
+        """Pool size for a serve() call: a full private page set per slot,
+        plus headroom for the transient unevictable pages one admission
+        round can pin (per fill: the matched hot snapshot + the COW
+        source, protected until the fused admit dispatch lands) and one
+        spare page set so insertion can snapshot a hot node."""
+        if self._n_pages_cfg is not None:
+            return self._n_pages_cfg
+        return (
+            n_slots * self._pps
+            + self._pps
+            + n_slots * (self._n_hot_pages + 1)
+            + self._n_hot_pages
+        )
+
     def _init_state(self, n_slots: int, out_cap: int) -> DecodeState:
+        paged_kw = (
+            dict(paged=True, page_size=self._page_size,
+                 n_pages=self._pool_pages(n_slots))
+            if self.paged else {}
+        )
         cache = T.init_decode_cache(
-            self.cfg, n_slots, self.max_len, self.hot_cap, dtype=self._cache_dtype()
+            self.cfg, n_slots, self.max_len, self.hot_cap,
+            dtype=self._cache_dtype(), **paged_kw
         )
         self.key, sub = jax.random.split(self.key)
 
@@ -400,14 +487,162 @@ class Engine:
         self._chunk_step_fn = jax.jit(chunk_step, donate_argnums=(1,))
         return self._chunk_step_fn
 
+    # ------------------------------------------------------------------
+    # paged admission: page-table install + hot restore + COW, one dispatch
+    # ------------------------------------------------------------------
+
+    def _get_paged_admit(self):
+        """Jitted fused paged (re)admission: vmap ``kv_cache.paged_admit``
+        over every attention stack's layer axis and reset the per-slot
+        decode bookkeeping where ``reset``. Every shape is fixed by the
+        slot count, so this compiles exactly ONCE per engine regardless
+        of which slots a round (re)admits or what their prompts matched."""
+        if self._paged_admit_fn is not None:
+            return self._paged_admit_fn
+
+        def admit(state: DecodeState, reset, new_len, new_table,
+                  hot_src, cow_src, cow_dst) -> DecodeState:
+            vm = jax.vmap(
+                kv_cache.paged_admit,
+                in_axes=(0, None, None, None, None, None, None),
+            )
+            cache = {
+                k: vm(c, reset, new_len, new_table, hot_src, cow_src, cow_dst)
+                for k, c in state.cache.items()
+            }
+            z32 = jnp.zeros_like(state.n_gen)
+            return DecodeState(
+                cache=cache,
+                tok=jnp.where(reset, 0, state.tok),
+                key=state.key,
+                # the slot decodes only after its last prompt chunk
+                # (chunk_step folds `is_last` into `allocated`)
+                allocated=state.allocated & ~reset,
+                done=state.done & ~reset,
+                seq_len=jnp.where(reset, new_len, state.seq_len),
+                n_gen=jnp.where(reset, 0, state.n_gen),
+                max_new=state.max_new,
+                out=jnp.where(reset[:, None], 0, state.out),
+                ledger={k: jnp.where(reset, z32, state.ledger[k])
+                        for k in TRAFFIC_KEYS},
+            )
+
+        self._paged_admit_fn = jax.jit(admit, donate_argnums=(0,))
+        return self._paged_admit_fn
+
+    def _get_save_hot(self):
+        """Jitted hot-tier snapshot (``kv_cache.save_hot`` vmapped over
+        the layer stacks): copies one slot's hot tier into pool pages so
+        the prefix tree can later restore it into another slot."""
+        if self._save_hot_fn is not None:
+            return self._save_hot_fn
+
+        def sh(state: DecodeState, slot, page_ids) -> DecodeState:
+            vm = jax.vmap(kv_cache.save_hot, in_axes=(0, None, None))
+            cache = {k: vm(c, slot, page_ids) for k, c in state.cache.items()}
+            return state._replace(cache=cache)
+
+        self._save_hot_fn = jax.jit(sh, donate_argnums=(0,))
+        return self._save_hot_fn
+
+    def _admit_paged(self, state: DecodeState, fills, pool: PagePool,
+                     ptree: PrefixCache, host_table: np.ndarray,
+                     slot_pages: List[List[int]], prefix_used: List[int],
+                     prefilling: Dict[int, list]) -> DecodeState:
+        """Host-side page bookkeeping for every slot paired this round,
+        then ONE fused device dispatch. Matched pages are transiently
+        increfed so the eviction that funds the fresh allocations can
+        never free them before the dispatch reads them."""
+        n_slots = host_table.shape[0]
+        ps, hc, pps = self._page_size, self.hot_cap, self._pps
+        reset = np.zeros((n_slots,), bool)
+        new_len = np.zeros((n_slots,), np.int32)
+        new_table = host_table.copy()
+        hot_src = np.full((n_slots, max(self._n_hot_pages, 1)), -1, np.int32)
+        cow_src = np.full((n_slots,), -1, np.int32)
+        cow_dst = np.full((n_slots,), -1, np.int32)
+        transient: List[int] = []
+        for s, req in fills:
+            m = ptree.match(req.tokens) if self.prefix_sharing else PrefixMatch()
+            if m.length:
+                pool.incref(m.hot_pages)
+                transient.extend(m.hot_pages)
+                if m.cow_src >= 0:
+                    pool.incref([m.cow_src])
+                    transient.append(m.cow_src)
+                # the slot's own (retained) reader refs on adopted pages
+                pool.incref(m.shared_pages)
+            total = min(req.prompt_len + req.max_new_tokens, self.max_len)
+            n_cold = min(-(-max(total - hc, 0) // ps), pps)
+            shared = list(m.shared_pages)
+            n_fresh = n_cold - len(shared)
+            ptree.evict_for(n_fresh)
+            fresh = pool.alloc(n_fresh)
+            if fresh is None:
+                raise RuntimeError(
+                    f"page pool exhausted admitting request {req.rid}: "
+                    f"need {n_fresh} pages, {pool.available()} free — "
+                    "raise n_pages"
+                )
+            row = shared + fresh
+            if m.cow_src >= 0 and fresh:
+                cow_src[s] = m.cow_src
+                cow_dst[s] = fresh[0]  # boundary page = first non-shared
+            reset[s] = True
+            new_len[s] = m.length
+            if m.hot_pages:
+                hot_src[s, : len(m.hot_pages)] = m.hot_pages
+            new_table[s] = row + [0] * (pps - len(row))
+            slot_pages[s] = row
+            prefix_used[s] = m.length
+            # chunk streaming resumes at the matched offset: the prefix's
+            # KV is already in the cache, only the suffix is prefilled
+            prefilling[s] = [req, m.length]
+        state = self._get_paged_admit()(
+            state, jnp.asarray(reset), jnp.asarray(new_len),
+            jnp.asarray(new_table), jnp.asarray(hot_src),
+            jnp.asarray(cow_src), jnp.asarray(cow_dst),
+        )
+        host_table[:] = new_table
+        if transient:
+            pool.decref(transient)
+        return state
+
+    def _record_prefix(self, state: DecodeState, s: int, req: Request,
+                       ptree: PrefixCache,
+                       host_table: np.ndarray) -> DecodeState:
+        """Insert a freshly prefilled prompt into the prefix tree. The
+        ``save_hot`` callback fires only when the tree needs a new hot
+        node (one jitted snapshot dispatch); cold pages are adopted from
+        the slot's page table by reference."""
+        box = [state]
+
+        def save(ids):
+            arr = np.full((max(ptree.n_hot_pages, 1),), -1, np.int32)
+            arr[: len(ids)] = ids
+            box[0] = self._get_save_hot()(
+                box[0], jnp.int32(s), jnp.asarray(arr)
+            )
+
+        ptree.insert(np.asarray(req.tokens, np.int32), host_table[s], save)
+        return box[0]
+
     def _stream_chunks(self, state: DecodeState, n_slots: int,
-                       prefilling: Dict[int, list]) -> DecodeState:
-        """Drain the pending prompt chunks: one dispatch per wave, one
-        C-token chunk per prefilling slot per wave, until every pending
-        prompt is fully cached and sampled."""
+                       prefilling: Dict[int, list],
+                       max_waves: Optional[int] = None,
+                       on_last=None) -> DecodeState:
+        """Stream pending prompt chunks: one dispatch per wave, one
+        C-token chunk per prefilling slot per wave. With ``max_waves``
+        set the drain stops early and ``prefilling`` carries the
+        remaining offsets into the next serving-loop iteration, so a
+        long prompt interleaves with decode chunks instead of stalling
+        every active slot until the whole queue's prompts are cached.
+        ``on_last(state, slot, req)`` runs after the wave that completes
+        a slot's prompt (paged serving records the prefix there)."""
         step = self._get_chunk_step()
         c = self.prefill_chunk
-        while prefilling:
+        waves = 0
+        while prefilling and (max_waves is None or waves < max_waves):
             toks = np.zeros((n_slots, c), np.int32)
             n_valid = np.zeros((n_slots,), np.int32)
             is_first = np.zeros((n_slots,), bool)
@@ -418,7 +653,10 @@ class Engine:
                 part = np.asarray(req.tokens, np.int32)[off : off + c]
                 toks[s, : len(part)] = part
                 n_valid[s] = len(part)
-                is_first[s] = off == 0
+                # paged slots were fully reset by the fused admit dispatch
+                # (and may resume mid-prompt at a matched offset), so the
+                # chunk step must not re-zero their state
+                is_first[s] = off == 0 and not self.paged
                 max_new[s] = req.max_new_tokens
                 if off + len(part) >= req.prompt_len:
                     is_last[s] = True
@@ -431,8 +669,11 @@ class Engine:
                 jnp.asarray(is_first), jnp.asarray(is_last),
                 jnp.asarray(max_new), sub,
             )
+            waves += 1
             for s in finished_slots:
-                prefilling.pop(s)
+                req, _ = prefilling.pop(s)
+                if on_last is not None:
+                    state = on_last(state, s, req)
         return state
 
     def _admit(
@@ -485,6 +726,15 @@ class Engine:
         chunked = self.prefill_chunk > 0 and self._chunked_capable()
         for r in requests:
             need = r.prompt_len + (self.cfg.n_patches if r.patches is not None else 0)
+            if need == 0:
+                # an empty prompt has no last-token logits to sample the
+                # first generated token from — under chunked admission it
+                # would silently sample from a zero-valid chunk's garbage
+                # logits row
+                raise ValueError(
+                    f"request {r.rid}: empty prompt (at least one prompt "
+                    "token is required to sample the first output token)"
+                )
             if need + r.max_new_tokens > self.max_len:
                 raise ValueError(
                     f"request {r.rid}: prompt {need} + max_new "
@@ -508,16 +758,44 @@ class Engine:
         # bound the next chunk without reading device state — only stop
         # tokens finish a slot earlier than this mirror predicts.
         remaining = [0] * n_slots
+        prefix_used = [0] * n_slots  # matched-prefix tokens per live slot
+        # slots mid-prefill, carried ACROSS loop iterations: each
+        # iteration streams at most `chunk` waves, then decodes, so long
+        # prompts no longer stall every active slot until fully cached
+        prefilling: Dict[int, list] = {}
+        pool = ptree = host_table = None
+        slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        if self.paged:
+            pool = PagePool(self._pool_pages(n_slots))
+            ptree = PrefixCache(pool, self.hot_cap, self._page_size)
+            host_table = np.zeros((n_slots, self._pps), np.int32)
+            # introspection handles for tests and benches: the refcount
+            # ledger and prefix tree of the most recent serve() call
+            self._last_pool, self._last_ptree = pool, ptree
 
         while not sched.idle():
             # -- admission: fill every free slot we can ----------------
             if chunked:
-                prefilling = {
-                    s: [req, 0] for s, req in sched.next_fills()
-                }
-                for s, (req, _) in prefilling.items():
+                fills = sched.next_fills()
+                for s, req in fills:
                     remaining[s] = req.max_new_tokens
-                state = self._stream_chunks(state, n_slots, prefilling)
+                if self.paged and fills:
+                    state = self._admit_paged(
+                        state, fills, pool, ptree, host_table,
+                        slot_pages, prefix_used, prefilling,
+                    )
+                elif fills:
+                    for s, req in fills:
+                        prefilling[s] = [req, 0]
+                on_last = None
+                if self.prefix_sharing:
+                    on_last = lambda st, s, r: self._record_prefix(  # noqa: E731
+                        st, s, r, ptree, host_table
+                    )
+                state = self._stream_chunks(
+                    state, n_slots, prefilling,
+                    max_waves=chunk, on_last=on_last,
+                )
             else:
                 while True:
                     slots_idx, group = sched.next_group()
@@ -528,22 +806,26 @@ class Engine:
                         remaining[s] = req.max_new_tokens
             # -- decode chunk: no host syncs inside --------------------
             # clip the chunk so no dispatch runs past the earliest
-            # budget-exhaustion among active slots (those steps would be
+            # budget-exhaustion among decoding slots (those steps would be
             # pure waste: the finished slot idles until the next sync);
-            # if every active slot has exhausted its budget mirror (e.g.
+            # slots still mid-prefill neither bound the chunk nor burn
+            # budget — they ride through the decode dispatches inactive.
+            # if every decoding slot has exhausted its budget mirror (e.g.
             # max_new_tokens=0 admissions) skip straight to harvest
-            active = sched.active_slots()
-            budgets = [remaining[s] for s in active if remaining[s] > 0]
+            decoding = [
+                s for s in sched.active_slots() if s not in prefilling
+            ]
+            budgets = [remaining[s] for s in decoding if remaining[s] > 0]
             n_steps = min([chunk] + budgets) if budgets else 0
             for _ in range(n_steps):
                 state = step(self.params, state)
-            for s in active:
+            for s in decoding:
                 remaining[s] = max(remaining[s] - n_steps, 0)
             # -- sync point: harvest finished slots --------------------
             # (the slot table mirrors `allocated`, so only the small
             # `done` mask crosses the device boundary here)
             done = np.asarray(state.done)
-            ripe = [i for i in sched.active_slots() if done[i]]
+            ripe = [s for s in decoding if done[s]]
             if ripe:
                 n_gen = np.asarray(state.n_gen)
                 seq_len = np.asarray(state.seq_len)
@@ -554,9 +836,10 @@ class Engine:
                     traffic = {
                         k: int(ledger[k][s]) * token_bytes for k in TRAFFIC_KEYS
                     }
-                    prompt = kv_cache.prompt_traffic_tokens(
+                    prompt = kv_cache.prompt_traffic_tokens_resumed(
                         req.prompt_len
                         + (self.cfg.n_patches if req.patches is not None else 0),
+                        prefix_used[s],
                         self.hot_cap,
                     )
                     for k in TRAFFIC_KEYS:
@@ -569,8 +852,14 @@ class Engine:
                             seq_len=int(seq_len[s]),
                             steps=int(n_gen[s]),
                             traffic=traffic,
+                            prefix_tokens_reused=prefix_used[s],
                         )
                     )
+                    prefix_used[s] = 0
+                    if self.paged:
+                        # pages free exactly when their last reader leaves
+                        pool.decref(slot_pages[s])
+                        slot_pages[s] = []
                 idx = jnp.asarray(ripe, jnp.int32)
                 state = state._replace(
                     allocated=state.allocated.at[idx].set(False)
@@ -605,10 +894,14 @@ class Engine:
         ]
         finished = self.serve(reqs, slots=b, stop_token=stop_token)
         finished.sort(key=lambda f: f.rid)
-        pad = stop_token if stop_token is not None else 0
         rows = [
             np.concatenate(
-                [f.tokens, np.full((max_new_tokens - len(f.tokens),), pad, np.int32)]
+                [
+                    f.tokens,
+                    np.full(
+                        (max_new_tokens - len(f.tokens),), PAD_TOKEN, np.int32
+                    ),
+                ]
             )
             for f in finished
         ]
@@ -621,6 +914,7 @@ class Engine:
             steps=max((f.steps for f in finished), default=0),
             traffic=traffic,
             wall_s=time.time() - t0,
+            steps_per_row=[f.steps for f in finished],
         )
 
     def expected_reduction(self, seq_len: int) -> float:

@@ -15,7 +15,11 @@ the host-side bookkeeping around that device state:
   * retirement: freeing a slot once its request is done.
 
 The scheduler never touches device arrays; it only decides *which* slots
-the engine should fill or free at each synchronization point. Mid-decode
+the engine should fill or free at each synchronization point. Under
+paged serving the admission step additionally consults the refcounted
+prefix tree (``serving/paging.py``): a new prompt's longest cached
+prefix is adopted by reference (plus a copy-on-write boundary page) and
+only the novel suffix is chunk-prefilled. Mid-decode
 admission is the point of the design: new prompts prefill into freed slots
 while the remaining slots keep decoding, so the decode hot loop stays
 saturated instead of draining the whole batch (the seed engine's lock-step
@@ -79,6 +83,11 @@ class FinishedRequest:
     seq_len: int  # prompt + appended decode tokens
     steps: int  # decode dispatches this request was active for
     traffic: Dict[str, int]
+    # prompt tokens restored from the shared prefix cache instead of being
+    # prefilled (paged serving with prefix sharing; see serving/paging.py).
+    # The skipped prefill steps vanish from ``traffic`` — the DR-ledger
+    # external-read delta vs an unshared run reconciles with this count.
+    prefix_tokens_reused: int = 0
 
     @property
     def external_reduction(self) -> float:

@@ -70,6 +70,70 @@ def test_scheduler_retire_and_idle():
     assert req.rid == 0 and sched.idle()
 
 
+def test_scheduler_fifo_preserved_across_requeue():
+    """``next_group`` pops head-of-line key matches and requeues the
+    rest; repeated admission rounds must never reorder the skipped
+    requests relative to each other OR to later submissions."""
+    sched = SlotScheduler(n_slots=1)
+    lens = [4, 7, 4, 9, 7, 4, 9]
+    for rid, p_len in enumerate(lens):
+        sched.submit(Request(rid, np.zeros(p_len, np.int32), 2))
+    admitted = []
+    while not sched.idle():
+        slots, group = sched.next_group()
+        assert len(group) == 1  # one free slot -> singleton groups
+        admitted.append(group[0].rid)
+        # skipped requests stayed in submission order after the requeue
+        qr = [r.rid for r in sched.queue]
+        assert qr == sorted(qr)
+        sched.retire(slots[0])
+    # with singleton groups the requeue shuffle must collapse to pure FIFO
+    assert admitted == list(range(len(lens)))
+    # and a late submission lands behind requeued survivors, not ahead
+    sched.submit(Request(10, np.zeros(7, np.int32), 2))
+    sched.submit(Request(11, np.zeros(4, np.int32), 2))
+    _, g = sched.next_group()
+    assert g[0].rid == 10
+    sched.retire(0)
+    _, g = sched.next_group()
+    assert g[0].rid == 11
+
+
+def test_scheduler_slot_reuse_mixed_patches_shapes():
+    """Retire/readmit churn with heterogeneous frontend-feature shapes:
+    freed slots are reused lowest-first, no group ever mixes patch
+    shapes, and every request is admitted exactly once."""
+    sched = SlotScheduler(n_slots=2)
+    shapes = [None, (4, 8), None, (2, 8), (4, 8), None]
+    for rid, shp in enumerate(shapes):
+        patches = None if shp is None else np.zeros(shp, np.float32)
+        sched.submit(Request(rid, np.zeros(5, np.int32), 3, patches=patches))
+    seen = []
+    held = []  # slots kept occupied across admission rounds
+    while not sched.idle():
+        slots, group = sched.next_group()
+        if group:
+            assert slots == sorted(slots)  # freed slots reused lowest-first
+            keys = {
+                None if r.patches is None else np.asarray(r.patches).shape
+                for r in group
+            }
+            assert len(keys) <= 1, "a group mixed patch shapes"
+            seen.extend(r.rid for r in group)
+            for s, r in zip(slots, group):
+                assert sched.slot_req[s] is r
+            # retire only the first admitted slot; the rest stay occupied
+            # a while, so admission must work off partially-free tables
+            sched.retire(slots[0])
+            held.extend(slots[1:])
+        else:
+            assert held, "scheduler stuck: nothing admitted, nothing held"
+            sched.retire(held.pop(0))
+    assert sorted(seen) == list(range(len(shapes)))
+    assert seen.index(0) < seen.index(2) < seen.index(5)  # FIFO per key
+    assert seen.index(1) < seen.index(4)
+
+
 # ---------------------------------------------------------------------------
 # mixed-length exactness at the model level: decode logits per slot must be
 # bit-exact vs a single-sequence (batch=1) reference at the same state

@@ -260,6 +260,88 @@ def shared_prefix(slots: int = 4, n_users: int = 8) -> list:
     ]
 
 
+def overload(slots: int = 4) -> list:
+    """Graceful-degradation sweep: the same burst served against a
+    shrinking page pool (1x / 0.5x / 0.25x of the default sizing).
+
+    Each row records goodput (useful tokens/s) and the degradation
+    counters from ``Engine.last_stats``: preemptions, pages grown
+    on demand, and the recompute-token overhead preemption paid vs the
+    prefix-sharing savings that re-admission recovered
+    (``prefix_tokens_reused``). Greedy tokens are asserted BIT-EXACT
+    across every pool size — pressure changes scheduling, never output.
+    A final row bounds the queue (``max_queue``) to show explicit
+    backpressure shedding instead of unbounded buffering.
+    """
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving.chaos import check_serving_invariants
+    from repro.serving.engine import Engine
+
+    Rq = Request
+    cfg = get_smoke_config("falcon3-1b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(7)
+    hot_cap, max_len, ps, chunk = 8, 64, 8, 8
+    system = rng.randint(0, cfg.vocab_size, size=(17,)).astype(np.int32)
+    reqs = []
+    for i in range(16):  # half the burst shares a system prompt
+        suffix = rng.randint(0, cfg.vocab_size,
+                             size=(int(rng.randint(2, 6)),)).astype(np.int32)
+        toks = (np.concatenate([system, suffix]) if i % 2 == 0
+                else rng.randint(0, cfg.vocab_size,
+                                 size=(int(rng.randint(6, 18)),))
+                .astype(np.int32))
+        reqs.append(Rq(rid=i, tokens=toks,
+                       max_new_tokens=int([4, 8, 16][rng.randint(3)])))
+
+    def build(n_pages=None, max_queue=None):
+        return Engine(cfg, params, hot_cap=hot_cap, max_len=max_len,
+                      slots=slots, prefill_chunk=chunk, paged=True,
+                      page_size=ps, n_pages=n_pages, max_queue=max_queue)
+
+    full_pool = build()._pool_pages(slots)
+    out, base_tokens = [], None
+    for frac in (1.0, 0.5, 0.25):
+        n_pages = max(8, int(full_pool * frac))  # >= any request's peak
+        eng = build(n_pages=n_pages)
+        mk = [Rq(r.rid, r.tokens, r.max_new_tokens) for r in reqs]
+        eng.serve(mk, slots=slots)  # warm (compiles)
+        mk = [Rq(r.rid, r.tokens, r.max_new_tokens) for r in reqs]
+        t0 = time.perf_counter()
+        fin = {f.rid: f for f in eng.serve(
+            mk, slots=slots, on_iteration=check_serving_invariants)}
+        dt = time.perf_counter() - t0
+        st = eng.last_stats
+        assert all(f.outcome == "finished" for f in fin.values())
+        toks = {rid: f.tokens.tolist() for rid, f in fin.items()}
+        if base_tokens is None:
+            base_tokens = toks
+        else:  # pressure degrades throughput, never correctness
+            assert toks == base_tokens, f"tokens diverged at pool x{frac}"
+        useful = sum(len(t) for t in toks.values())
+        reused = sum(f.prefix_tokens_reused for f in fin.values())
+        out.append(row(
+            f"serving/overload_pool_x{frac:g}",
+            dt / max(useful, 1) * 1e6,
+            f"tok_s={useful / dt:.1f} pages={n_pages} "
+            f"preemptions={st.preemptions} grown={st.grown_pages} "
+            f"recompute={st.recompute_tokens}tok reused={reused}tok",
+        ))
+    # explicit backpressure: a bounded queue sheds instead of buffering
+    eng = build(n_pages=full_pool, max_queue=6)
+    mk = [Rq(r.rid, r.tokens, r.max_new_tokens) for r in reqs]
+    fin = eng.serve(mk, slots=slots)
+    shed = sum(f.outcome == "rejected" for f in fin)
+    served = sum(f.outcome == "finished" for f in fin)
+    assert shed == eng.last_stats.rejected and shed + served == len(reqs)
+    out.append(row(
+        "serving/overload_backpressure", 0.0,
+        f"max_queue=6 burst={len(reqs)} served={served} shed={shed}",
+    ))
+    return out
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     for r in serving_throughput():
@@ -267,6 +349,8 @@ def main() -> None:
     for r in chunked_admission():
         print(r)
     for r in shared_prefix():
+        print(r)
+    for r in overload():
         print(r)
 
 

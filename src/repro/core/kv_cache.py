@@ -828,6 +828,23 @@ def save_hot(cache: PagedKVCache, slot: jax.Array,
                           pool_v=pv.reshape(cache.pool_v.shape))
 
 
+def release_slots(cache, released: jax.Array):
+    """Truncate the ``released`` slots ((b,) bool) to length 0 — slot
+    retirement without reinitialisation, used when serving preempts or
+    cancels a request mid-flight. Works on tiered and paged caches alike
+    (anything with a per-slot ``lengths`` row, stacked or not: the mask
+    broadcasts against the trailing batch axis). KV rows and page-table
+    entries are left in place: a zero-length slot reads nothing, appends
+    restart from row 0 on re-admission, and under paging the freed pool
+    pages are owned by the host-side ``PagePool`` refcounts, not by this
+    device-side view."""
+    released = released.astype(bool)
+    lengths = jnp.where(
+        jnp.broadcast_to(released, cache.lengths.shape), 0, cache.lengths
+    )
+    return cache._replace(lengths=lengths)
+
+
 # ---------------------------------------------------------------------------
 # Traffic accounting hooks (ties the functional cache to hwmodel/dr_edram)
 # ---------------------------------------------------------------------------

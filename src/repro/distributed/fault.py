@@ -10,15 +10,21 @@ Designed for the 1000+-node posture (DESIGN.md §5):
     callback triggers re-slicing / hot-spare swap; here it records);
   * ``PreemptionGuard`` — SIGTERM-style flag that converts preemption into
     a clean checkpoint-and-exit.
+
+The serving plane reuses the same primitives: ``serving/chaos.py`` builds
+its fault-injection harness on ``FaultSchedule`` (seeded, deterministic
+per-step event draws) and ``StragglerMonitor`` (the engine-loop iteration
+is the "step"), so training and serving chaos tests share one vocabulary.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import random
 import signal
 import statistics
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence, Tuple
 
 
 class InjectedFault(RuntimeError):
@@ -27,13 +33,49 @@ class InjectedFault(RuntimeError):
 
 @dataclasses.dataclass
 class FaultInjector:
+    """Raise :class:`InjectedFault` at fixed step(s): ``fail_at_step`` for
+    the single-crash recovery tests, ``fail_at_steps`` when a scenario
+    needs several deterministic failures in one run (each point fires at
+    most once)."""
+
     fail_at_step: int = -1
+    fail_at_steps: Tuple[int, ...] = ()
     fired: bool = False
+
+    def __post_init__(self):
+        self._pending = set(self.fail_at_steps)
 
     def check(self, step: int) -> None:
         if step == self.fail_at_step and not self.fired:
             self.fired = True
             raise InjectedFault(f"injected node failure at step {step}")
+        if step in self._pending:
+            self._pending.discard(step)
+            self.fired = True
+            raise InjectedFault(f"injected node failure at step {step}")
+
+
+class FaultSchedule:
+    """Seeded per-step event sampler: ``fires(step)`` draws once per call
+    from a private PRNG, so a fixed seed and a fixed call sequence give
+    the same injection points every run — the determinism contract the
+    chaos tests (three fixed CI seeds) rely on. ``rate`` is the per-step
+    event probability."""
+
+    def __init__(self, seed: int, rate: float):
+        self.rate = rate
+        self._rng = random.Random(seed)
+        self.fired_at: list = []
+
+    def fires(self, step: int) -> bool:
+        hit = self._rng.random() < self.rate
+        if hit:
+            self.fired_at.append(step)
+        return hit
+
+    def pick(self, items: Sequence):
+        """Deterministically choose one of ``items`` (injection target)."""
+        return items[self._rng.randrange(len(items))]
 
 
 class StragglerMonitor:

@@ -13,8 +13,20 @@ Public API
     per-sequence DR-traffic ledger that reconciles with
     ``core.dr_edram.closed_form_reduction``).
 :class:`~repro.serving.scheduler.SlotScheduler`
-    Host-side control plane: FIFO queue, slot table, pad-free admission
-    grouping, retirement.
+    Host-side control plane: bounded claim-ordered queue, slot table,
+    pad-free admission grouping, retirement, preemption victim policy.
+:class:`~repro.serving.chaos.ChaosInjector` /
+:func:`~repro.serving.chaos.check_serving_invariants`
+    Seeded serving-plane fault injection (pool exhaustion, stragglers,
+    mid-flight cancellation) and the machine-checked page-refcount
+    protocol invariants, wired in via ``serve(on_iteration=...)``.
+
+Overload degrades instead of failing: page pressure triggers LRU prefix
+eviction then preemption-with-recompute (bit-exact for greedy),
+deadlines/cancellation/bounded-queue shedding surface as terminal
+``FinishedRequest.outcome`` values, and ``Engine.last_stats``
+(:class:`~repro.serving.engine.ServeStats`) counts what happened
+(docs/serving.md, "Degradation modes").
 
 Continuous-batching semantics
 -----------------------------
@@ -28,14 +40,29 @@ prompts into the freed rows — admission happens mid-decode, while the
 remaining slots keep generating.
 """
 
-from repro.serving.engine import DecodeState, Engine, GenerationResult
-from repro.serving.scheduler import FinishedRequest, Request, SlotScheduler
+from repro.serving.chaos import (ChaosConfig, ChaosInjector,
+                                 InvariantViolation,
+                                 check_serving_invariants)
+from repro.serving.engine import (DecodeState, Engine, GenerationResult,
+                                  ServeStats)
+from repro.serving.paging import PagePool, PagePoolError, PrefixCache
+from repro.serving.scheduler import (FinishedRequest, Request,
+                                     SchedulerError, SlotScheduler)
 
 __all__ = [
+    "ChaosConfig",
+    "ChaosInjector",
     "DecodeState",
     "Engine",
     "FinishedRequest",
     "GenerationResult",
+    "InvariantViolation",
+    "PagePool",
+    "PagePoolError",
+    "PrefixCache",
     "Request",
+    "SchedulerError",
+    "ServeStats",
     "SlotScheduler",
+    "check_serving_invariants",
 ]

@@ -1,0 +1,219 @@
+"""Serving-plane fault injection + machine-checked invariants.
+
+The serving engine's graceful-degradation claims (docs/serving.md,
+"Degradation modes") are protocol claims: refcounts never go negative,
+the free list and the referenced pages partition the pool, preempted
+work is recomputed bit-exactly. This module turns them into executable
+checks and adversarial inputs:
+
+  * :func:`check_serving_invariants` — re-derives the entire page-pool
+    refcount protocol from first principles against a live ``_ServeCtx``
+    (every count equals its known readers: the prefix tree, the live
+    slots' page tables, plus any injector-held pages) and validates the
+    host page-table mirror. Run after every engine loop iteration under
+    test via ``Engine.serve(on_iteration=...)``.
+  * :class:`ChaosInjector` — a seeded, deterministic adversary built on
+    the training plane's fault vocabulary (``distributed/fault.py``):
+    transient pool exhaustion (grabs pages and holds them for a few
+    iterations), decode-straggler stalls (sleeps inside the loop and
+    checks the ``StragglerMonitor`` flags them), and mid-flight
+    cancellation (prefers slots still prefilling — the hardest path).
+    Same seed, same serve call -> same injection sequence, which is what
+    lets CI pin three fixed seeds and diff outcomes run-over-run.
+
+The injector only uses public knobs (``PagePool.alloc``/``decref``,
+``Engine.cancel``) — it is a hostile *client*, not a monkey-patch — so
+anything it breaks is a real protocol hole, not a test artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
+
+from repro.distributed.fault import FaultSchedule, StragglerMonitor
+
+
+class InvariantViolation(RuntimeError):
+    """A serving-plane protocol invariant failed under test."""
+
+
+def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None
+                             ) -> None:
+    """Validate the page-pool refcount protocol against ``ctx`` (the
+    engine's ``_ServeCtx``), raising :class:`InvariantViolation` on the
+    first breach. Checks, in order:
+
+      1. no refcount is negative;
+      2. the free list has no duplicates and only in-range pages;
+      3. free pages have refcount 0 and referenced pages are not free —
+         free ∪ referenced partitions the pool;
+      4. ``pool.used()`` reconciles with the free-list length;
+      5. every page's refcount equals its KNOWN readers: prefix-tree
+         nodes + live slots' page lists + ``extra_refs`` (pages the
+         chaos injector is deliberately holding). This is strict
+         equality, so it catches leaks (count > readers — e.g. an
+         admission unwind that forgot a decref) and double-frees
+         (count < readers) alike. It is valid exactly at iteration
+         boundaries: the engine unwinds its transient admission increfs
+         before the dispatch returns;
+      6. the host page-table mirror's live rows agree with the slot page
+         lists and contain only in-range ids.
+
+    A non-paged ctx (``ctx.pool is None``) passes vacuously.
+    """
+    pool = ctx.pool
+    if pool is None:
+        return
+    if (pool.refs < 0).any():
+        bad = int((pool.refs < 0).argmax())
+        raise InvariantViolation(
+            f"negative refcount: page {bad} = {int(pool.refs[bad])}")
+    free = list(pool._free)
+    free_set = set(free)
+    if len(free_set) != len(free):
+        raise InvariantViolation("free list contains duplicate pages")
+    for p in free:
+        if not 0 <= p < pool.n_pages:
+            raise InvariantViolation(f"free list holds out-of-range page {p}")
+        if pool.refs[p] != 0:
+            raise InvariantViolation(
+                f"page {p} is on the free list with refcount "
+                f"{int(pool.refs[p])}")
+    for p in range(pool.n_pages):
+        if pool.refs[p] > 0 and p in free_set:
+            raise InvariantViolation(
+                f"page {p} is referenced ({int(pool.refs[p])}) AND free")
+        if pool.refs[p] == 0 and p not in free_set:
+            raise InvariantViolation(
+                f"page {p} has no readers but is not on the free list")
+    if pool.used() != pool.n_pages - len(free):
+        raise InvariantViolation(
+            f"used() = {pool.used()} but pool has {len(free)} free "
+            f"of {pool.n_pages}")
+    expected: Counter = Counter()
+    if ctx.ptree is not None:
+        expected.update(ctx.ptree.tree_pages())
+    live = {s for s, r in enumerate(ctx.sched.slot_req) if r is not None}
+    for s in live:
+        expected.update(ctx.slot_pages[s])
+    if extra_refs:
+        expected.update(extra_refs)
+    for p in range(pool.n_pages):
+        if int(pool.refs[p]) != expected.get(p, 0):
+            kind = ("leak" if pool.refs[p] > expected.get(p, 0)
+                    else "double-free")
+            raise InvariantViolation(
+                f"refcount {kind}: page {p} has count {int(pool.refs[p])} "
+                f"but {expected.get(p, 0)} known readers")
+    if ctx.host_table is not None:
+        if (ctx.host_table < 0).any() or (
+                ctx.host_table >= pool.n_pages).any():
+            raise InvariantViolation("host page table holds out-of-range ids")
+        for s in live:
+            row = list(ctx.host_table[s, : len(ctx.slot_pages[s])])
+            if row != ctx.slot_pages[s]:
+                raise InvariantViolation(
+                    f"slot {s} host-table row {row} != page list "
+                    f"{ctx.slot_pages[s]}")
+
+
+@dataclasses.dataclass
+class ChaosConfig:
+    """Per-event-class injection rates (probability per loop iteration)
+    and shapes. All classes draw from independent seeded streams, so
+    enabling one does not shift another's injection points."""
+
+    seed: int = 0
+    exhaust_rate: float = 0.0  # steal pages from the pool...
+    exhaust_pages: int = 4  # ...this many at a time...
+    exhaust_hold: int = 3  # ...for this many iterations
+    straggle_rate: float = 0.0  # sleep inside the serve loop...
+    straggle_seconds: float = 0.02  # ...this long (a 'slow decode chunk')
+    cancel_rate: float = 0.0  # cancel a live request mid-flight
+    check_invariants: bool = True
+
+
+class ChaosInjector:
+    """Deterministic adversary for ``Engine.serve(on_iteration=...)``.
+
+    Usage::
+
+        chaos = ChaosInjector(engine, ChaosConfig(seed=0, exhaust_rate=.2,
+                                                  cancel_rate=.1))
+        finished = engine.serve(reqs, on_iteration=chaos.on_iteration)
+        chaos.release_all(engine._last_ctx)   # drop any still-held pages
+        check_serving_invariants(engine._last_ctx)  # tree-only refs remain
+
+    The injector holds stolen pages as a legitimate pool reader (they
+    appear in ``extra_refs`` for the invariant check), so exhaustion
+    pressure exercises eviction + preemption without ever faking state.
+    """
+
+    def __init__(self, engine, config: ChaosConfig):
+        self.engine = engine
+        self.cfg = config
+        self._exhaust = FaultSchedule(config.seed, config.exhaust_rate)
+        self._straggle = FaultSchedule(config.seed + 1, config.straggle_rate)
+        self._cancel = FaultSchedule(config.seed + 2, config.cancel_rate)
+        self.monitor = StragglerMonitor(window=20, factor=3.0)
+        self.held: List[Tuple[int, List[int]]] = []  # (release_at, pages)
+        self.cancelled: List[int] = []
+        self.exhaustions = 0
+        self.violations: List[str] = []
+        self._last_t: Optional[float] = None
+
+    # -- event draws ----------------------------------------------------
+    def on_iteration(self, ctx) -> None:
+        it = ctx.iteration
+        # release holds that have served their term (pages free like any
+        # other reader leaving)
+        due = [h for h in self.held if h[0] <= it]
+        self.held = [h for h in self.held if h[0] > it]
+        for _, pages in due:
+            ctx.pool.decref(pages)
+        # transient pool exhaustion: become a reader of free pages
+        if ctx.pool is not None and self._exhaust.fires(it):
+            pages = ctx.pool.alloc(
+                min(self.cfg.exhaust_pages, ctx.pool.available()))
+            if pages:
+                self.held.append((it + self.cfg.exhaust_hold, pages))
+                self.exhaustions += 1
+        # straggler: a slow decode chunk is just wall time inside the loop
+        now = time.perf_counter()
+        if self._straggle.fires(it):
+            time.sleep(self.cfg.straggle_seconds)
+            now = time.perf_counter()
+        if self._last_t is not None:
+            self.monitor.record(it, now - self._last_t)
+        self._last_t = time.perf_counter()
+        # cancellation: prefer a slot still mid-prefill (the hardest
+        # teardown path), else any live slot, else a queued request
+        if self._cancel.fires(it):
+            prefill = [ctx.sched.slot_req[s].rid for s in ctx.prefilling
+                       if ctx.sched.slot_req[s] is not None]
+            active = [r.rid for r in ctx.sched.slot_req if r is not None]
+            queued = [r.rid for r in ctx.sched.queue]
+            cands = prefill or active or queued
+            if cands:
+                rid = self._cancel.pick(cands)
+                self.engine.cancel(rid)
+                self.cancelled.append(rid)
+        if self.cfg.check_invariants:
+            check_serving_invariants(ctx, extra_refs=self._held_counts())
+
+    # -- teardown -------------------------------------------------------
+    def _held_counts(self) -> Counter:
+        c: Counter = Counter()
+        for _, pages in self.held:
+            c.update(pages)
+        return c
+
+    def release_all(self, ctx) -> None:
+        """Drop every page still held (call after ``serve`` returns, so
+        the final pool state is tree-only and checkable)."""
+        for _, pages in self.held:
+            ctx.pool.decref(pages)
+        self.held = []

@@ -63,6 +63,27 @@ prefill work is reported per request as
 switches to ``prompt_traffic_tokens_resumed`` so the DR accounting
 reconciles with the external reads that actually happened.
 
+Graceful degradation (docs/serving.md, "Degradation modes")
+------------------------------------------------------------
+The page pool is the paper's fixed on-die KV budget: overload must
+degrade against it, never crash against it. Pages are allocated
+*lazily* — admission funds only the prompt, decode growth is funded
+chunk-by-chunk — and when the pool cannot fund a claim the engine
+reclaims in order: LRU tree eviction first, then **preemption** of
+strictly weaker slots (``SlotScheduler.preempt_victims``: never a
+stronger claim, fewest-emitted/newest first among the eligible). A
+preempted request's emitted tokens fold into its prompt and it requeues;
+re-admission rides the prefix-cache match + chunked prefill, so only
+work past the shared prefix is recomputed and greedy outputs stay
+bit-identical to an unconstrained run (asserted in tests). Requests
+carry ``deadline``/``priority``, ``Engine.cancel(rid)`` propagates to
+slot retirement and page decref mid-flight, and a bounded queue sheds
+overflow explicitly; every terminal path surfaces as
+``FinishedRequest.outcome``. ``serving/chaos.py`` fault-injects this
+plane (pool exhaustion, stragglers, mid-prefill cancellation) and
+re-checks the refcount/page-table invariants after every loop iteration
+under test, via serve()'s ``on_iteration`` hook.
+
 docs/serving.md walks the full request lifecycle (slots, admission
 groups, ``sync_every`` semantics, the paging lifecycle, the
 reconciliation contract); docs/kernels.md covers the packed fast path
@@ -73,7 +94,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, NamedTuple, Optional, Sequence
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Set)
 
 import jax
 import jax.numpy as jnp
@@ -83,10 +105,19 @@ from repro.configs.base import ModelConfig
 from repro.core import dr_edram, kv_cache
 from repro.models import pack as pack_lib
 from repro.models import transformer as T
-from repro.serving.paging import PagePool, PrefixCache, PrefixMatch
+from repro.serving.paging import (PagePool, PagePoolError, PrefixCache,
+                                  PrefixMatch)
 from repro.serving.scheduler import FinishedRequest, Request, SlotScheduler
 
 TRAFFIC_KEYS = kv_cache.TRAFFIC_KEYS
+
+# consecutive no-progress serve-loop iterations tolerated before the
+# engine declares the pool unreclaimable. Transient holds (chaos
+# injection pinning pages for a few iterations) ride through; a pool
+# that genuinely cannot fund the strongest queued claim — unreachable
+# under the default sizing + the serve() feasibility check — still
+# surfaces as a typed PagePoolError instead of a silent spin.
+_STALL_LIMIT = 32
 
 # `generate` pads rows that stopped early with this sentinel. The stop
 # token itself is a real emitted token (it appears in `tokens` when
@@ -126,6 +157,51 @@ class GenerationResult:
         return kv_cache.external_reduction(self.traffic)
 
 
+@dataclasses.dataclass
+class ServeStats:
+    """Control-plane counters for one ``serve()`` call (``Engine.
+    last_stats``): how much degradation the workload forced. ``
+    recompute_tokens`` counts prompt tokens a re-admission actually
+    prefilled again (attempt prompt minus the prefix-cache match) — the
+    price of preemption, to weigh against the prefix-sharing savings in
+    ``FinishedRequest.prefix_tokens_reused``."""
+
+    preemptions: int = 0
+    rejected: int = 0
+    cancelled: int = 0
+    expired: int = 0
+    recompute_tokens: int = 0
+    grown_pages: int = 0
+    iterations: int = 0
+
+
+@dataclasses.dataclass
+class _ServeCtx:
+    """Mutable state of one ``serve()`` call, threaded through the
+    admission / growth / preemption / harvest helpers and handed to the
+    ``on_iteration`` hook after every loop iteration (the chaos harness
+    and invariant checker in ``serving/chaos.py`` read ``pool`` /
+    ``ptree`` / ``host_table`` / ``slot_pages`` / ``sched`` through it;
+    mutating anything but the pool's free pages or issuing
+    ``Engine.cancel`` from the hook is undefined)."""
+
+    state: DecodeState
+    sched: SlotScheduler
+    finished: List[FinishedRequest]
+    stats: ServeStats
+    token_bytes: int
+    chunked: bool
+    remaining: List[int]  # per-slot budget mirror (host-side, no sync)
+    seq_mirror: List[int]  # per-slot upper bound on cache length
+    prefix_used: List[int]  # matched-prefix tokens per live slot
+    prefilling: Dict[int, list]  # slot -> [req, offset], mid-prefill
+    slot_pages: List[List[int]]
+    pool: Optional[PagePool] = None
+    ptree: Optional[PrefixCache] = None
+    host_table: Optional[np.ndarray] = None
+    iteration: int = 0
+
+
 class Engine:
     """Weight-reload-free continuous-batching inference engine.
 
@@ -159,6 +235,8 @@ class Engine:
         page_size: Optional[int] = None,
         n_pages: Optional[int] = None,
         prefix_sharing: bool = True,
+        max_queue: Optional[int] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.cfg = cfg
         # Freeze to ROM form once (packed trits + fused wqkv/wgu/w_dqkv/w_gu
@@ -216,6 +294,16 @@ class Engine:
                 -(-hot_cap // self._page_size) if hot_cap else 0
             )
             self._n_pages_cfg = n_pages
+        # backpressure bound on the admission queue (None = unbounded);
+        # overflow at submit time is shed as outcome "rejected", never
+        # silently queued. serve(max_queue=...) overrides per call.
+        self.max_queue = max_queue
+        # injectable clock for Request.deadline (tests/chaos use a fake
+        # clock so expiry is deterministic); deadlines are absolute times
+        # on THIS clock
+        self._clock = clock or time.monotonic
+        self._cancel_requested: Set[int] = set()
+        self.last_stats: Optional[ServeStats] = None  # of the last serve()
         self.weight_loads = 0  # host->device weight transfers after init
         self._step_fns: dict = {}  # (out_cap, stop_token) -> jitted step
         self._batch_axes = None  # lazy: cache-leaf batch-axis pytree
@@ -223,6 +311,7 @@ class Engine:
         self._chunk_step_fn = None  # jitted chunked-prefill dispatch
         self._paged_admit_fn = None  # jitted fused paged (re)admission
         self._save_hot_fn = None  # jitted hot-tier snapshot dispatch
+        self._set_table_fn = None  # jitted page-table install (growth)
         # jitted prefill (one compile per admitted (group, prompt) shape)
         self._prefill = jax.jit(
             lambda p, batch: T.prefill(
@@ -545,68 +634,406 @@ class Engine:
         self._save_hot_fn = jax.jit(sh, donate_argnums=(0,))
         return self._save_hot_fn
 
-    def _admit_paged(self, state: DecodeState, fills, pool: PagePool,
-                     ptree: PrefixCache, host_table: np.ndarray,
-                     slot_pages: List[List[int]], prefix_used: List[int],
-                     prefilling: Dict[int, list]) -> DecodeState:
+    def _get_set_table(self):
+        """Jitted page-table install for mid-decode growth: overwrite
+        every attention stack's page table with the host mirror (the
+        mirror is exact — admission and growth keep it in lock-step with
+        the device copy). Fixed shape (slots, pages_per_slot): one
+        compile per engine."""
+        if self._set_table_fn is not None:
+            return self._set_table_fn
+
+        def st(state: DecodeState, table) -> DecodeState:
+            cache = {
+                k: c._replace(
+                    page_table=jnp.broadcast_to(
+                        table.astype(c.page_table.dtype), c.page_table.shape
+                    )
+                )
+                for k, c in state.cache.items()
+            }
+            return state._replace(cache=cache)
+
+        self._set_table_fn = jax.jit(st, donate_argnums=(0,))
+        return self._set_table_fn
+
+    # ------------------------------------------------------------------
+    # page-pressure control plane: reclaim, preemption, release
+    # ------------------------------------------------------------------
+
+    def _release_slot_state(self, state: DecodeState, s: int,
+                            truncate: bool = True) -> DecodeState:
+        """Release slot ``s``'s device row mid-flight (preemption or
+        cancellation): clear the allocated/done masks and truncate the
+        cache row to length 0 (``kv_cache.release_slots``) so the slot is
+        inert until re-admitted. Grouped-admission archs (SSM state, no
+        per-slot lengths) skip the truncation — their admission scatters
+        a complete fresh row anyway."""
+        n = int(state.allocated.shape[0])
+        mask = np.zeros((n,), bool)
+        mask[s] = True
+        mj = jnp.asarray(mask)
+        kw = {}
+        if truncate:
+            kw["cache"] = {
+                k: kv_cache.release_slots(c, mj)
+                for k, c in state.cache.items()
+            }
+        return state._replace(
+            allocated=state.allocated & ~mj, done=state.done & ~mj, **kw
+        )
+
+    def _preempt_slot(self, ctx: _ServeCtx, s: int) -> None:
+        """Evict slot ``s`` mid-flight to reclaim its pages: fold the
+        tokens it already emitted into the request's prompt, release its
+        pages and device row, and requeue the request (its arrival stamp
+        — its claim — survives). Recompute-from-prefix is bit-exact for
+        greedy decoding: at preemption the pending token t_k is sampled
+        but neither emitted nor cached, so re-prefilling
+        prompt ‖ t_0..t_{k-1} deterministically re-samples t_k from the
+        same last-position logits — and the prefix cache means only the
+        suffix past the longest shared prefix is actually recomputed."""
+        req = ctx.sched.slot_req[s]
+        tb = ctx.token_bytes
+        carry = (dict(req.carry_traffic) if req.carry_traffic
+                 else {k: 0 for k in TRAFFIC_KEYS})
+        if s in ctx.prefilling:
+            off = ctx.prefilling.pop(s)[1]
+            if off:  # charge the partial prefill the device already did
+                prompt = kv_cache.prompt_traffic_tokens_resumed(
+                    off, min(ctx.prefix_used[s], off), self.hot_cap)
+                for k in TRAFFIC_KEYS:
+                    carry[k] += prompt[k] * tb
+        else:
+            st = ctx.state
+            p_attempt = req.prompt_len
+            n_gen = int(np.asarray(st.n_gen[s]))
+            if n_gen:
+                out_row = np.asarray(st.out[s, :n_gen], np.int32)
+                if req.orig_prompt_len is None:
+                    req.orig_prompt_len = req.prompt_len
+                req.tokens = np.concatenate(
+                    [np.asarray(req.tokens, np.int32), out_row])
+                req.max_new_tokens -= n_gen
+            prompt = kv_cache.prompt_traffic_tokens_resumed(
+                p_attempt, ctx.prefix_used[s], self.hot_cap)
+            for k in TRAFFIC_KEYS:
+                carry[k] += (prompt[k] + int(np.asarray(st.ledger[k][s]))) * tb
+        req.carry_traffic = carry
+        req.carry_reused += ctx.prefix_used[s]
+        req.n_preemptions += 1
+        ctx.stats.preemptions += 1
+        if ctx.slot_pages[s]:
+            ctx.pool.decref(ctx.slot_pages[s])
+            ctx.slot_pages[s] = []
+        ctx.prefix_used[s] = 0
+        ctx.remaining[s] = 0
+        ctx.seq_mirror[s] = 0
+        ctx.sched.requeue(s)
+        ctx.state = self._release_slot_state(ctx.state, s)
+
+    def _paged_alloc(self, ctx: _ServeCtx, n: int, beneficiary: Request,
+                     exclude: Sequence[int] = ()) -> Optional[List[int]]:
+        """Allocate ``n`` pages for ``beneficiary``, reclaiming under
+        pressure: LRU tree eviction first (cached prefixes are cheaper to
+        lose than live work), then preemption of strictly weaker slots,
+        one victim at a time (``SlotScheduler.preempt_victims`` policy) —
+        a victim's pages may be tree-shared, so each preemption can also
+        unlock further eviction. None when the claim cannot be funded:
+        the caller requeues (admission) or self-preempts (growth), and
+        the request retries at a later sync point."""
+        ctx.ptree.evict_for(n)
+        pages = ctx.pool.alloc(n)
+        while pages is None:
+            emitted = {
+                s: ctx.sched.slot_req[s].max_new_tokens - ctx.remaining[s]
+                for s in ctx.sched.active_slots()
+                if s not in ctx.prefilling
+            }
+            victims = [
+                v for v in ctx.sched.preempt_victims(
+                    beneficiary, emitted, exclude)
+                if ctx.slot_pages[v]  # pageless victims fund nothing
+            ]
+            if not victims:
+                return None
+            self._preempt_slot(ctx, victims[0])
+            ctx.ptree.evict_for(n)
+            pages = ctx.pool.alloc(n)
+        return pages
+
+    def _ensure_pages(self, ctx: _ServeCtx, chunk: int) -> None:
+        """Fund mid-decode cold-page growth before a decode chunk: extend
+        every decoding slot's page row to cover the furthest position the
+        chunk can append (the host budget mirror bounds it — no device
+        sync). Strongest claims fund first, so when the pool is tight the
+        weak get preempted by ``_paged_alloc`` before they themselves ask;
+        a slot whose own growth cannot be funded self-preempts (requeues)
+        rather than stall the batch."""
+        hc, ps = self.hot_cap, self._page_size
+        decoding = [
+            s for s in ctx.sched.active_slots() if s not in ctx.prefilling
+        ]
+        dirty = False
+        for s in sorted(decoding,
+                        key=lambda i: ctx.sched.slot_req[i].claim):
+            req = ctx.sched.slot_req[s]
+            if req is None:  # preempted by a stronger claim this round
+                continue
+            target = min(
+                ctx.seq_mirror[s] + min(chunk, ctx.remaining[s]),
+                self.max_len,
+            )
+            need = -(-max(target - hc, 0) // ps) - len(ctx.slot_pages[s])
+            if need <= 0:
+                continue
+            pages = self._paged_alloc(ctx, need, req, exclude=(s,))
+            if pages is None:
+                self._preempt_slot(ctx, s)
+                continue
+            k0 = len(ctx.slot_pages[s])
+            ctx.slot_pages[s].extend(pages)
+            ctx.host_table[s, k0 : k0 + len(pages)] = pages
+            ctx.stats.grown_pages += len(pages)
+            dirty = True
+        if dirty:
+            ctx.state = self._get_set_table()(
+                ctx.state, jnp.asarray(ctx.host_table))
+
+    def _admit_paged(self, ctx: _ServeCtx, fills) -> bool:
         """Host-side page bookkeeping for every slot paired this round,
         then ONE fused device dispatch. Matched pages are transiently
-        increfed so the eviction that funds the fresh allocations can
-        never free them before the dispatch reads them."""
-        n_slots = host_table.shape[0]
+        increfed so the eviction/preemption that funds the fresh
+        allocations can never free them before the dispatch reads them.
+
+        Pages are allocated lazily — enough to cover the PROMPT only;
+        decode growth is funded chunk-by-chunk by ``_ensure_pages`` — so
+        admission pressure reflects real occupancy, not worst-case
+        budgets. A fill the pool cannot fund (even after evicting the
+        tree and preempting every weaker slot) unwinds its own increfs
+        and requeues; it retries at the next sync point once pages free
+        up. Returns True when at least one fill was admitted."""
+        n_slots = ctx.host_table.shape[0]
         ps, hc, pps = self._page_size, self.hot_cap, self._pps
         reset = np.zeros((n_slots,), bool)
         new_len = np.zeros((n_slots,), np.int32)
-        new_table = host_table.copy()
+        new_table = ctx.host_table.copy()
         hot_src = np.full((n_slots, max(self._n_hot_pages, 1)), -1, np.int32)
         cow_src = np.full((n_slots,), -1, np.int32)
         cow_dst = np.full((n_slots,), -1, np.int32)
         transient: List[int] = []
+        # same-round fills are never preemption victims: an already-
+        # processed fill has bookkeeping in flight for the fused dispatch
+        # (reverting it would corrupt the host mirror), a pending one has
+        # no pages to reclaim anyway
+        fill_slots = [s for s, _ in fills]
+        admitted = False
         for s, req in fills:
-            m = ptree.match(req.tokens) if self.prefix_sharing else PrefixMatch()
+            m = (ctx.ptree.match(req.tokens)
+                 if self.prefix_sharing else PrefixMatch())
+            mine: List[int] = []  # this fill's transient increfs
             if m.length:
-                pool.incref(m.hot_pages)
-                transient.extend(m.hot_pages)
+                ctx.pool.incref(m.hot_pages)
+                mine.extend(m.hot_pages)
                 if m.cow_src >= 0:
-                    pool.incref([m.cow_src])
-                    transient.append(m.cow_src)
+                    ctx.pool.incref([m.cow_src])
+                    mine.append(m.cow_src)
                 # the slot's own (retained) reader refs on adopted pages
-                pool.incref(m.shared_pages)
-            total = min(req.prompt_len + req.max_new_tokens, self.max_len)
-            n_cold = min(-(-max(total - hc, 0) // ps), pps)
+                ctx.pool.incref(m.shared_pages)
+            n_cold = min(-(-max(req.prompt_len - hc, 0) // ps), pps)
             shared = list(m.shared_pages)
             n_fresh = n_cold - len(shared)
-            ptree.evict_for(n_fresh)
-            fresh = pool.alloc(n_fresh)
+            fresh = self._paged_alloc(ctx, n_fresh, req, exclude=fill_slots)
             if fresh is None:
-                raise RuntimeError(
-                    f"page pool exhausted admitting request {req.rid}: "
-                    f"need {n_fresh} pages, {pool.available()} free — "
-                    "raise n_pages"
-                )
+                # unwind THIS fill's bookkeeping before requeueing — the
+                # transient and shared increfs must not outlive the
+                # failed admission (they would leak the pages for good)
+                if mine:
+                    ctx.pool.decref(mine)
+                if m.length:
+                    ctx.pool.decref(list(m.shared_pages))
+                ctx.sched.requeue(s)
+                ctx.remaining[s] = 0
+                ctx.seq_mirror[s] = 0
+                continue
+            transient.extend(mine)
             row = shared + fresh
             if m.cow_src >= 0 and fresh:
                 cow_src[s] = m.cow_src
                 cow_dst[s] = fresh[0]  # boundary page = first non-shared
             reset[s] = True
+            admitted = True
             new_len[s] = m.length
             if m.hot_pages:
                 hot_src[s, : len(m.hot_pages)] = m.hot_pages
             new_table[s] = row + [0] * (pps - len(row))
-            slot_pages[s] = row
-            prefix_used[s] = m.length
+            ctx.slot_pages[s] = row
+            ctx.prefix_used[s] = m.length
+            ctx.seq_mirror[s] = req.prompt_len
+            if req.orig_prompt_len is not None:
+                # a re-admission prefills again what an earlier attempt
+                # already computed, minus what the prefix cache kept
+                ctx.stats.recompute_tokens += req.prompt_len - m.length
             # chunk streaming resumes at the matched offset: the prefix's
             # KV is already in the cache, only the suffix is prefilled
-            prefilling[s] = [req, m.length]
-        state = self._get_paged_admit()(
-            state, jnp.asarray(reset), jnp.asarray(new_len),
-            jnp.asarray(new_table), jnp.asarray(hot_src),
-            jnp.asarray(cow_src), jnp.asarray(cow_dst),
-        )
-        host_table[:] = new_table
+            ctx.prefilling[s] = [req, m.length]
+        if admitted:
+            ctx.state = self._get_paged_admit()(
+                ctx.state, jnp.asarray(reset), jnp.asarray(new_len),
+                jnp.asarray(new_table), jnp.asarray(hot_src),
+                jnp.asarray(cow_src), jnp.asarray(cow_dst),
+            )
+            ctx.host_table[:] = new_table
         if transient:
-            pool.decref(transient)
-        return state
+            ctx.pool.decref(transient)
+        return admitted
+
+    # ------------------------------------------------------------------
+    # outcomes: finish / cancel / expire / reject
+    # ------------------------------------------------------------------
+
+    def cancel(self, rid: int) -> None:
+        """Request cancellation of ``rid`` mid-flight. Processed at the
+        next sync point of the running ``serve()``: an active slot
+        retires immediately (tokens emitted so far surface with outcome
+        ``"cancelled"``), its pages decref and its device row is
+        released; a queued request is shed without running. Unknown or
+        already-finished rids are no-ops."""
+        self._cancel_requested.add(rid)
+
+    def _terminal_outcome(self, req: Request, now: float) -> Optional[str]:
+        if req.rid in self._cancel_requested:
+            self._cancel_requested.discard(req.rid)
+            return "cancelled"
+        if req.deadline is not None and now >= req.deadline:
+            return "expired"
+        return None
+
+    def _attempt_prompt_len(self, req: Request) -> int:
+        return req.prompt_len + (
+            self.cfg.n_patches if req.patches is not None else 0)
+
+    def _build_finished(self, req: Request, out_row: np.ndarray,
+                        seq_len: int, decode_ledger: Dict[str, int],
+                        prefilled_len: int, prefix_used: int,
+                        outcome: str, token_bytes: int) -> FinishedRequest:
+        """Assemble a FinishedRequest from one slot's harvest. For a
+        request that was preempted along the way, the prompt that the
+        final attempt decoded from contains earlier attempts' emitted
+        tokens — stitch them back onto the output and report the
+        ORIGINAL prompt length, so callers see one uninterrupted
+        generation; the traffic ledger sums every attempt's real work
+        (``carry_traffic``) on top of this attempt's."""
+        traffic = {
+            k: int(decode_ledger[k]) * token_bytes for k in TRAFFIC_KEYS
+        }
+        if prefilled_len:
+            prompt = kv_cache.prompt_traffic_tokens_resumed(
+                prefilled_len, min(prefix_used, prefilled_len), self.hot_cap)
+            for k in TRAFFIC_KEYS:
+                traffic[k] += prompt[k] * token_bytes
+        if req.carry_traffic:
+            for k in TRAFFIC_KEYS:
+                traffic[k] += req.carry_traffic[k]
+        if req.orig_prompt_len is not None:
+            prior = np.asarray(req.tokens, np.int32)[req.orig_prompt_len:]
+            tokens = np.concatenate([prior, out_row])
+            prompt_len = req.orig_prompt_len
+        else:
+            tokens = out_row
+            prompt_len = req.prompt_len
+        return FinishedRequest(
+            rid=req.rid,
+            prompt_len=prompt_len,
+            tokens=tokens,
+            seq_len=seq_len,
+            steps=len(tokens),
+            traffic=traffic,
+            prefix_tokens_reused=prefix_used + req.carry_reused,
+            outcome=outcome,
+            n_preemptions=req.n_preemptions,
+        )
+
+    def _finish_queued(self, req: Request, outcome: str) -> FinishedRequest:
+        """Terminal record for a request that never held a slot at the
+        end (rejected / cancelled / expired while queued). A preempted-
+        then-shed request still surfaces the tokens its earlier attempts
+        emitted and the work they cost."""
+        if req.orig_prompt_len is not None:
+            tokens = np.asarray(req.tokens, np.int32)[req.orig_prompt_len:]
+            prompt_len = req.orig_prompt_len
+        else:
+            tokens = np.zeros((0,), np.int32)
+            prompt_len = req.prompt_len
+        traffic = (dict(req.carry_traffic) if req.carry_traffic
+                   else {k: 0 for k in TRAFFIC_KEYS})
+        return FinishedRequest(
+            rid=req.rid, prompt_len=prompt_len, tokens=tokens,
+            seq_len=prompt_len + len(tokens), steps=len(tokens),
+            traffic=traffic, prefix_tokens_reused=req.carry_reused,
+            outcome=outcome, n_preemptions=req.n_preemptions,
+        )
+
+    def _cancel_slot(self, ctx: _ServeCtx, s: int, outcome: str) -> None:
+        """Terminate an active slot mid-flight (cancel / deadline):
+        harvest whatever it emitted, retire it, decref its pages and
+        release its device row."""
+        req = ctx.sched.retire(s)
+        st = ctx.state
+        if s in ctx.prefilling:
+            off = ctx.prefilling.pop(s)[1]
+            fin = self._build_finished(
+                req, np.zeros((0,), np.int32), seq_len=off,
+                decode_ledger={k: 0 for k in TRAFFIC_KEYS},
+                prefilled_len=off, prefix_used=ctx.prefix_used[s],
+                outcome=outcome, token_bytes=ctx.token_bytes,
+            )
+        else:
+            n_gen = int(np.asarray(st.n_gen[s]))
+            out_row = (np.asarray(st.out[s, :n_gen], np.int32)
+                       if n_gen else np.zeros((0,), np.int32))
+            fin = self._build_finished(
+                req, out_row, seq_len=int(np.asarray(st.seq_len[s])),
+                decode_ledger={k: int(np.asarray(st.ledger[k][s]))
+                               for k in TRAFFIC_KEYS},
+                prefilled_len=self._attempt_prompt_len(req),
+                prefix_used=ctx.prefix_used[s],
+                outcome=outcome, token_bytes=ctx.token_bytes,
+            )
+        ctx.finished.append(fin)
+        if ctx.slot_pages[s]:
+            ctx.pool.decref(ctx.slot_pages[s])
+            ctx.slot_pages[s] = []
+        ctx.prefix_used[s] = 0
+        ctx.remaining[s] = 0
+        ctx.seq_mirror[s] = 0
+        ctx.state = self._release_slot_state(
+            ctx.state, s, truncate=ctx.chunked)
+
+    def _sweep_cancel_expire(self, ctx: _ServeCtx) -> int:
+        """Apply cancellations and deadline expiry at a sync point, to
+        queued and active requests alike. Returns the number of requests
+        terminated (progress, for the stall guard)."""
+        now = self._clock()
+        events = 0
+        for req in list(ctx.sched.queue):
+            outcome = self._terminal_outcome(req, now)
+            if outcome:
+                ctx.sched.drop(req)
+                ctx.finished.append(self._finish_queued(req, outcome))
+                setattr(ctx.stats, outcome,
+                        getattr(ctx.stats, outcome) + 1)
+                events += 1
+        for s, req in enumerate(ctx.sched.slot_req):
+            if req is None:
+                continue
+            outcome = self._terminal_outcome(req, now)
+            if outcome:
+                self._cancel_slot(ctx, s, outcome)
+                setattr(ctx.stats, outcome,
+                        getattr(ctx.stats, outcome) + 1)
+                events += 1
+        return events
 
     def _record_prefix(self, state: DecodeState, s: int, req: Request,
                        ptree: PrefixCache,
@@ -708,10 +1135,14 @@ class Engine:
         slots: Optional[int] = None,
         stop_token: Optional[int] = None,
         sync_every: Optional[int] = None,
+        max_queue: Optional[int] = None,
+        on_iteration: Optional[Callable[[_ServeCtx], None]] = None,
     ) -> List[FinishedRequest]:
-        """Serve ``requests`` through continuous batching; returns finished
-        requests in completion order (slot order within a sync chunk —
-        sort by ``rid`` if you need submission order).
+        """Serve ``requests`` through continuous batching; returns one
+        terminal :class:`FinishedRequest` PER submitted request, in
+        completion order (sort by ``rid`` if you need submission order).
+        ``FinishedRequest.outcome`` distinguishes normal completion from
+        cancellation, deadline expiry and backpressure shedding.
 
         The decode hot loop issues exactly one jitted dispatch per token
         and never reads device memory; host synchronization happens only
@@ -720,10 +1151,19 @@ class Engine:
         (and a capable arch), admission streams fixed-size prompt chunks
         into the freed slots instead of whole same-length groups — one
         prefill compilation total, mixed lengths admit immediately.
-        """
+
+        Under paged serving, page-pool pressure degrades instead of
+        failing: admission and mid-decode growth reclaim pages by LRU
+        tree eviction, then by preempting strictly weaker slots
+        (recompute-from-prefix; see the module docstring). ``max_queue``
+        bounds the admission queue (overflow is shed as ``rejected``);
+        ``on_iteration(ctx)`` runs after every loop iteration — the
+        fault-injection/invariant hook (``serving/chaos.py``)."""
         n_slots = slots or self.slots
         chunk = sync_every or self.sync_every
         chunked = self.prefill_chunk > 0 and self._chunked_capable()
+        if max_queue is None:
+            max_queue = self.max_queue
         for r in requests:
             need = r.prompt_len + (self.cfg.n_patches if r.patches is not None else 0)
             if need == 0:
@@ -740,60 +1180,93 @@ class Engine:
                     f"request {r.rid}: prompt {need} + max_new "
                     f"{r.max_new_tokens} exceeds max_len {self.max_len}"
                 )
+            if self.paged:
+                # feasibility, not headroom: with lazy growth plus
+                # preemption, any request whose PEAK page set fits the
+                # pool will eventually complete (the strongest claim can
+                # reclaim every other page); one that cannot fit alone
+                # can never be served and must be refused up front
+                peak = -(-max(min(need + r.max_new_tokens, self.max_len)
+                              - self.hot_cap, 0) // self._page_size)
+                if peak > self._pool_pages(n_slots):
+                    raise ValueError(
+                        f"request {r.rid}: needs {peak} cold pages at its "
+                        f"peak but the pool holds "
+                        f"{self._pool_pages(n_slots)} — unservable even "
+                        "with every other slot preempted; raise n_pages"
+                    )
         # output buffer sized by max_len (which already bounds any budget),
         # NOT by this batch's max budget — the buffer shape is baked into
         # the jitted step, and a varying out_cap would recompile the whole
         # decode graph per distinct value
         out_cap = self.max_len
-        sched = SlotScheduler(n_slots)
+        sched = SlotScheduler(n_slots, max_queue=max_queue)
+        stats = ServeStats()
+        finished: List[FinishedRequest] = []
         for r in requests:
-            sched.submit(r)
+            if not sched.submit(r):
+                # backpressure: shed explicitly instead of queueing
+                # without bound — the caller sees outcome "rejected"
+                stats.rejected += 1
+                finished.append(self._finish_queued(r, "rejected"))
 
         state = self._init_state(n_slots, out_cap)
         step = self._get_step(out_cap, stop_token)
-        token_bytes = self._kv_token_bytes()
-        finished: List[FinishedRequest] = []
-        # host mirror of each slot's remaining budget: generation progress
-        # is deterministic (one token per active step), so the host can
-        # bound the next chunk without reading device state — only stop
-        # tokens finish a slot earlier than this mirror predicts.
-        remaining = [0] * n_slots
-        prefix_used = [0] * n_slots  # matched-prefix tokens per live slot
-        # slots mid-prefill, carried ACROSS loop iterations: each
-        # iteration streams at most `chunk` waves, then decodes, so long
-        # prompts no longer stall every active slot until fully cached
-        prefilling: Dict[int, list] = {}
-        pool = ptree = host_table = None
-        slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        ctx = _ServeCtx(
+            state=state,
+            sched=sched,
+            finished=finished,
+            stats=stats,
+            token_bytes=self._kv_token_bytes(),
+            chunked=chunked,
+            # host mirror of each slot's remaining budget: generation
+            # progress is deterministic (one token per active step), so
+            # the host can bound the next chunk without reading device
+            # state — only stop tokens finish a slot earlier than this
+            # mirror predicts. seq_mirror likewise upper-bounds the cache
+            # length for page-growth sizing.
+            remaining=[0] * n_slots,
+            seq_mirror=[0] * n_slots,
+            prefix_used=[0] * n_slots,
+            # slots mid-prefill, carried ACROSS loop iterations: each
+            # iteration streams at most `chunk` waves, then decodes, so
+            # long prompts no longer stall every active slot until fully
+            # cached
+            prefilling={},
+            slot_pages=[[] for _ in range(n_slots)],
+        )
         if self.paged:
-            pool = PagePool(self._pool_pages(n_slots))
-            ptree = PrefixCache(pool, self.hot_cap, self._page_size)
-            host_table = np.zeros((n_slots, self._pps), np.int32)
+            ctx.pool = PagePool(self._pool_pages(n_slots))
+            ctx.ptree = PrefixCache(ctx.pool, self.hot_cap, self._page_size)
+            ctx.host_table = np.zeros((n_slots, self._pps), np.int32)
             # introspection handles for tests and benches: the refcount
             # ledger and prefix tree of the most recent serve() call
-            self._last_pool, self._last_ptree = pool, ptree
+            self._last_pool, self._last_ptree = ctx.pool, ctx.ptree
+        self._last_ctx = ctx
 
+        stall = 0
         while not sched.idle():
+            progress = self._sweep_cancel_expire(ctx) > 0
             # -- admission: fill every free slot we can ----------------
             if chunked:
                 fills = sched.next_fills()
                 for s, req in fills:
-                    remaining[s] = req.max_new_tokens
+                    ctx.remaining[s] = req.max_new_tokens
                 if self.paged and fills:
-                    state = self._admit_paged(
-                        state, fills, pool, ptree, host_table,
-                        slot_pages, prefix_used, prefilling,
-                    )
+                    progress |= self._admit_paged(ctx, fills)
                 elif fills:
                     for s, req in fills:
-                        prefilling[s] = [req, 0]
+                        ctx.prefilling[s] = [req, 0]
+                        ctx.seq_mirror[s] = req.prompt_len
+                    progress = True
                 on_last = None
                 if self.prefix_sharing:
                     on_last = lambda st, s, r: self._record_prefix(  # noqa: E731
-                        st, s, r, ptree, host_table
+                        st, s, r, ctx.ptree, ctx.host_table
                     )
-                state = self._stream_chunks(
-                    state, n_slots, prefilling,
+                progress |= bool(ctx.prefilling)
+                ctx.state = self._stream_chunks(
+                    ctx.state, n_slots, ctx.prefilling,
                     max_waves=chunk, on_last=on_last,
                 )
             else:
@@ -801,9 +1274,14 @@ class Engine:
                     slots_idx, group = sched.next_group()
                     if not group:
                         break
-                    state = self._admit(state, slots_idx, group)
+                    ctx.state = self._admit(ctx.state, slots_idx, group)
                     for s, req in zip(slots_idx, group):
-                        remaining[s] = req.max_new_tokens
+                        ctx.remaining[s] = req.max_new_tokens
+                        ctx.seq_mirror[s] = self._attempt_prompt_len(req)
+                    progress = True
+            # -- fund mid-decode cold growth (may preempt) -------------
+            if self.paged:
+                self._ensure_pages(ctx, chunk)
             # -- decode chunk: no host syncs inside --------------------
             # clip the chunk so no dispatch runs past the earliest
             # budget-exhaustion among decoding slots (those steps would be
@@ -813,57 +1291,76 @@ class Engine:
             # if every decoding slot has exhausted its budget mirror (e.g.
             # max_new_tokens=0 admissions) skip straight to harvest
             decoding = [
-                s for s in sched.active_slots() if s not in prefilling
+                s for s in sched.active_slots() if s not in ctx.prefilling
             ]
-            budgets = [remaining[s] for s in decoding if remaining[s] > 0]
+            budgets = [ctx.remaining[s] for s in decoding
+                       if ctx.remaining[s] > 0]
             n_steps = min([chunk] + budgets) if budgets else 0
             for _ in range(n_steps):
-                state = step(self.params, state)
+                ctx.state = step(self.params, ctx.state)
             for s in decoding:
-                remaining[s] = max(remaining[s] - n_steps, 0)
+                ctx.remaining[s] = max(ctx.remaining[s] - n_steps, 0)
+                ctx.seq_mirror[s] = min(
+                    ctx.seq_mirror[s] + n_steps, self.max_len)
+            progress |= n_steps > 0
             # -- sync point: harvest finished slots --------------------
             # (the slot table mirrors `allocated`, so only the small
             # `done` mask crosses the device boundary here)
-            done = np.asarray(state.done)
+            done = np.asarray(ctx.state.done)
             ripe = [s for s in decoding if done[s]]
             if ripe:
-                n_gen = np.asarray(state.n_gen)
-                seq_len = np.asarray(state.seq_len)
-                out = np.asarray(state.out)
-                ledger = {k: np.asarray(state.ledger[k]) for k in TRAFFIC_KEYS}
+                progress = True
+                n_gen = np.asarray(ctx.state.n_gen)
+                seq_len = np.asarray(ctx.state.seq_len)
+                out = np.asarray(ctx.state.out)
+                ledger = {k: np.asarray(ctx.state.ledger[k])
+                          for k in TRAFFIC_KEYS}
                 for s in ripe:
                     req = sched.retire(s)
-                    traffic = {
-                        k: int(ledger[k][s]) * token_bytes for k in TRAFFIC_KEYS
-                    }
-                    prompt = kv_cache.prompt_traffic_tokens_resumed(
-                        req.prompt_len
-                        + (self.cfg.n_patches if req.patches is not None else 0),
-                        prefix_used[s],
-                        self.hot_cap,
-                    )
-                    for k in TRAFFIC_KEYS:
-                        traffic[k] += prompt[k] * token_bytes
-                    finished.append(
-                        FinishedRequest(
-                            rid=req.rid,
-                            prompt_len=req.prompt_len,
-                            tokens=out[s, : n_gen[s]].copy(),
-                            seq_len=int(seq_len[s]),
-                            steps=int(n_gen[s]),
-                            traffic=traffic,
-                            prefix_tokens_reused=prefix_used[s],
-                        )
-                    )
-                    prefix_used[s] = 0
+                    finished.append(self._build_finished(
+                        req, out[s, : n_gen[s]].copy(), int(seq_len[s]),
+                        {k: ledger[k][s] for k in TRAFFIC_KEYS},
+                        self._attempt_prompt_len(req), ctx.prefix_used[s],
+                        "finished", ctx.token_bytes,
+                    ))
+                    self._cancel_requested.discard(req.rid)
+                    ctx.prefix_used[s] = 0
+                    ctx.remaining[s] = 0
+                    ctx.seq_mirror[s] = 0
                     if self.paged:
                         # pages free exactly when their last reader leaves
-                        pool.decref(slot_pages[s])
-                        slot_pages[s] = []
+                        ctx.pool.decref(ctx.slot_pages[s])
+                        ctx.slot_pages[s] = []
                 idx = jnp.asarray(ripe, jnp.int32)
-                state = state._replace(
-                    allocated=state.allocated.at[idx].set(False)
+                ctx.state = ctx.state._replace(
+                    allocated=ctx.state.allocated.at[idx].set(False)
                 )
+            # the hook sees the 0-based index of the iteration that just
+            # completed (chaos schedules / tests key off it)
+            if on_iteration is not None:
+                on_iteration(ctx)
+            stats.iterations += 1
+            ctx.iteration += 1
+            # -- stall guard -------------------------------------------
+            # nothing prefilled, decoded, admitted, harvested or swept
+            # for many consecutive iterations: the queue head cannot be
+            # funded even with the pool fully reclaimed (with the
+            # feasibility check above this is unreachable unless an
+            # external actor — e.g. a chaos hold — pins pages for good;
+            # a bounded hold just rides through the tolerance window)
+            stall = 0 if progress else stall + 1
+            if stall >= _STALL_LIMIT and not sched.idle():
+                head = (min(sched.queue, key=lambda r: r.claim)
+                        if sched.queue else None)
+                raise PagePoolError(
+                    "page pool exhausted and unreclaimable: "
+                    f"{len(sched.queue)} queued "
+                    f"(head rid={getattr(head, 'rid', None)}), "
+                    f"{ctx.pool.available() if ctx.pool else 0} pages "
+                    f"free of {ctx.pool.n_pages if ctx.pool else 0} — "
+                    "raise n_pages"
+                )
+        self.last_stats = stats
         return finished
 
     # ------------------------------------------------------------------

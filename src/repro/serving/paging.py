@@ -26,9 +26,14 @@ Refcount protocol (``PagePool``): a page's count is the number of
 readers — the tree counts as one, every slot whose page table maps the
 page counts as one. ``insert`` increfs the pages it adopts from a slot;
 the engine increfs shared pages when a slot adopts them at admission and
-decrefs the slot's whole page list at retirement. Counts never go
-negative (asserted) and a page returns to the free list exactly when its
-last reader drops it. Eviction is leaf-only LRU over tree-only pages
+decrefs the slot's whole page list at retirement (or preemption — the
+engine requeues the request and the pages free like any other reader
+leaving). Counts never go negative (``PagePoolError``) and a page
+returns to the free list exactly when its last reader drops it.
+``serving/chaos.py`` re-derives the whole protocol as a machine-checked
+invariant (free list ∪ referenced pages partitions the pool; every
+count equals its known readers) after each engine loop iteration under
+test. Eviction is leaf-only LRU over tree-only pages
 (refcount 1): peeling childless nodes never frees a page a slot still
 reads and eventually reaches every unshared node, so admission can
 always reclaim the pool down to the live slots' working set.
@@ -40,6 +45,20 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+class PagePoolError(RuntimeError):
+    """Refcount-protocol violation (or an unservable allocation): carries
+    the page id and its count so the report survives ``python -O`` and
+    points at the page, not just the call site."""
+
+    def __init__(self, msg: str, page: Optional[int] = None,
+                 refcount: Optional[int] = None):
+        if page is not None:
+            msg = f"{msg} (page={page}, refcount={refcount})"
+        super().__init__(msg)
+        self.page = page
+        self.refcount = refcount
 
 
 class PagePool:
@@ -68,14 +87,20 @@ class PagePool:
 
     def incref(self, pages: Sequence[int]) -> None:
         for p in pages:
-            assert self.refs[p] > 0, f"incref on free page {p}"
+            if self.refs[p] <= 0:
+                raise PagePoolError(
+                    "incref on free page", page=int(p),
+                    refcount=int(self.refs[p]))
             self.refs[p] += 1
 
     def decref(self, pages: Sequence[int]) -> None:
         """Drop one reader per page; a page frees exactly when its count
-        hits zero. Counts never go negative (asserted)."""
+        hits zero. Counts never go negative (PagePoolError)."""
         for p in pages:
-            assert self.refs[p] > 0, f"decref on free page {p}"
+            if self.refs[p] <= 0:
+                raise PagePoolError(
+                    "decref on free page", page=int(p),
+                    refcount=int(self.refs[p]))
             self.refs[p] -= 1
             if self.refs[p] == 0:
                 self._free.append(int(p))

@@ -5,14 +5,19 @@ rows of the per-slot tiered KV cache — and decodes all active slots in
 lock-free step: each slot is at its own sequence length. This module owns
 the host-side bookkeeping around that device state:
 
-  * a FIFO request queue (``submit``),
+  * a bounded admission queue (``submit``; overflow is *shed*, never
+    silently grown — the backpressure contract in docs/serving.md),
   * the slot table (which request occupies which slot),
   * admission pairing — either **chunked** (``next_fills``: every free
-    slot takes the next queued request, any prompt length; the engine
-    streams the prompt in as fixed-size chunk dispatches) or **grouped**
-    (``next_group``: same-prompt-length requests share one whole-prompt
-    prefill dispatch),
-  * retirement: freeing a slot once its request is done.
+    slot takes the strongest-claim queued request, any prompt length;
+    the engine streams the prompt in as fixed-size chunk dispatches) or
+    **grouped** (``next_group``: same-prompt-length requests share one
+    whole-prompt prefill dispatch),
+  * retirement: freeing a slot once its request is done,
+  * preemption support: ``requeue`` puts a victim's request back at the
+    head of the queue and ``preempt_victims`` ranks which active slots a
+    pressured admission/growth may reclaim (newest-first / fewest-
+    tokens-emitted, never a stronger claim than the beneficiary's).
 
 The scheduler never touches device arrays; it only decides *which* slots
 the engine should fill or free at each synchronization point. Under
@@ -25,7 +30,9 @@ while the remaining slots keep decoding, so the decode hot loop stays
 saturated instead of draining the whole batch (the seed engine's lock-step
 model, where the slowest sequence gated everyone).
 
-Both policies are FIFO and pad-free (padded prompt tokens would pollute
+Admission order is by *claim* — ``(priority desc, arrival asc)`` — which
+degrades to plain FIFO when every request carries the default priority.
+Both policies are pad-free (padded prompt tokens would pollute
 the causal KV cache; chunked admission masks the final partial chunk by
 per-slot valid counts instead). The difference is compilation shape:
 grouped admission costs one XLA prefill compilation per (group_size,
@@ -34,47 +41,100 @@ chunked admission has exactly one fixed (slots, chunk) dispatch shape,
 so any length mix admits immediately (docs/serving.md, "Admission").
 
 docs/serving.md documents the full lifecycle this module drives
-(admission -> decode chunks -> retirement) and the ``sync_every``
-semantics of the engine loop around it.
+(admission -> decode chunks -> retirement/preemption) and the
+``sync_every`` semantics of the engine loop around it; the "Degradation
+modes" section covers the overload paths (preemption, deadlines,
+cancellation, shedding).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 
-@dataclasses.dataclass
+class SchedulerError(RuntimeError):
+    """Slot-table misuse (retiring or requeueing an unoccupied slot):
+    carries the slot index so the report survives ``python -O``."""
+
+    def __init__(self, msg: str, slot: Optional[int] = None):
+        if slot is not None:
+            msg = f"{msg} (slot={slot})"
+        super().__init__(msg)
+        self.slot = slot
+
+
+@dataclasses.dataclass(eq=False)
 class Request:
-    """One generation request.
+    """One generation request (identity equality: the queue removes
+    requests by object, and field equality would compare prompt arrays).
 
     ``tokens`` is the prompt (prompt_len,) int32; ``patches`` carries VLM
-    image features when the model has a vision frontend.
+    image features when the model has a vision frontend. ``deadline`` is
+    an absolute time on the engine's clock (``Engine(clock=...)``) after
+    which the request is expired instead of served further; ``priority``
+    orders admission and bounds preemption (a request may only preempt
+    strictly weaker claims — lower priority, or equal priority but later
+    arrival).
+
+    The remaining fields are engine-managed preemption bookkeeping: a
+    preempted request's already-emitted tokens are folded into ``tokens``
+    (so re-admission rides the prefix cache and recomputes only past the
+    shared prefix), ``orig_prompt_len`` remembers where the real prompt
+    ended, and the carried ledgers accumulate the work the earlier
+    attempts already paid for.
     """
 
     rid: int
     tokens: np.ndarray
     max_new_tokens: int
     patches: Optional[np.ndarray] = None
+    deadline: Optional[float] = None
+    priority: int = 0
+    # -- engine-managed (preemption / accounting) -----------------------
+    arrival: Optional[int] = None  # submission order, stamped once
+    n_preemptions: int = 0
+    orig_prompt_len: Optional[int] = None  # set when emitted tokens fold in
+    carry_traffic: Optional[Dict[str, int]] = None  # bytes, prior attempts
+    carry_reused: int = 0  # prefix tokens reused by prior attempts
 
     @property
     def prompt_len(self) -> int:
         return int(np.asarray(self.tokens).shape[-1])
 
+    @property
+    def claim(self) -> Tuple[int, int]:
+        """Admission/preemption strength: lexicographically SMALLER is
+        stronger. Arrival breaks priority ties, so the oldest request at
+        the top priority can always preempt everyone else — the global-
+        progress guarantee preemption liveness rests on."""
+        return (-self.priority, self.arrival if self.arrival is not None else 0)
+
 
 @dataclasses.dataclass
 class FinishedRequest:
-    """A completed request with its per-sequence DR-traffic ledger.
+    """A completed (or terminated) request with its per-sequence DR-traffic
+    ledger.
 
     ``traffic`` is in bytes, split into the four DR-eDRAM categories
     (ondie_read / ext_read / ondie_write / ext_write); it accumulates the
     analytic prompt phase plus the measured per-step decode ledger, so
     ``external_reduction`` reconciles with
     ``dr_edram.closed_form_reduction(seq_len, hot_cap)`` for *this*
-    sequence regardless of what other lengths shared the batch.
+    sequence regardless of what other lengths shared the batch. (For a
+    preempted-and-resumed request the ledger additionally carries the
+    recomputed prefill work of the earlier attempts, so it reports what
+    the device actually did, not the unconstrained closed form.)
+
+    ``outcome`` is the terminal state: ``finished`` (full budget or stop
+    token), ``cancelled`` (``Engine.cancel``), ``expired`` (deadline),
+    or ``rejected`` (shed by the bounded queue before any work ran).
+    Non-``finished`` outcomes still surface any tokens emitted before
+    termination. ``n_preemptions`` counts how many times the request was
+    evicted mid-flight and recomputed-from-prefix.
     """
 
     rid: int
@@ -88,6 +148,8 @@ class FinishedRequest:
     # The skipped prefill steps vanish from ``traffic`` — the DR-ledger
     # external-read delta vs an unshared run reconciles with this count.
     prefix_tokens_reused: int = 0
+    outcome: str = "finished"
+    n_preemptions: int = 0
 
     @property
     def external_reduction(self) -> float:
@@ -97,17 +159,32 @@ class FinishedRequest:
 
 
 class SlotScheduler:
-    """Host-side slot table + FIFO admission queue (see module docstring)."""
+    """Host-side slot table + bounded claim-ordered admission queue (see
+    module docstring)."""
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, max_queue: Optional[int] = None):
         self.n_slots = n_slots
+        self.max_queue = max_queue
         self.queue: Deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self._arrival = 0
 
     # -- queue ----------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        """Append ``req`` to the FIFO admission queue (host-side only)."""
+    def submit(self, req: Request) -> bool:
+        """Enqueue ``req``; returns False (shed) when the bounded queue is
+        full. The arrival stamp is assigned once and survives preemption
+        requeues, so a preempted request keeps its place in claim order."""
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            return False
+        if req.arrival is None:
+            req.arrival = self._arrival
+            self._arrival += 1
         self.queue.append(req)
+        return True
+
+    def drop(self, req: Request) -> None:
+        """Remove a queued request (cancellation / deadline expiry)."""
+        self.queue.remove(req)
 
     # -- slot table -----------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -119,6 +196,14 @@ class SlotScheduler:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
     # -- admission ------------------------------------------------------
+    def _pop_best(self) -> Request:
+        """Remove and return the strongest-claim queued request (plain
+        FIFO when priorities are uniform). O(queue) — queues here are
+        short host-side structures, not token streams."""
+        best = min(self.queue, key=lambda r: r.claim)
+        self.queue.remove(best)
+        return best
+
     @staticmethod
     def _group_key(req: Request):
         """Requests may share a prefill dispatch iff their stacked batch is
@@ -128,32 +213,31 @@ class SlotScheduler:
         return (req.prompt_len, patches)
 
     def next_group(self) -> Tuple[List[int], List[Request]]:
-        """Pop the next admissible group: head-of-line request plus any
-        queued requests sharing its group key (prompt length + patches
+        """Pop the next admissible group: the strongest-claim request plus
+        any queued requests sharing its group key (prompt length + patches
         shape), up to the number of free slots. Returns ([], []) when
         nothing can be admitted."""
         free = self.free_slots()
         if not free or not self.queue:
             return [], []
-        key = self._group_key(self.queue[0])
+        head = min(self.queue, key=lambda r: r.claim)
+        key = self._group_key(head)
         group: List[Request] = []
-        rest: Deque[Request] = deque()
-        while self.queue and len(group) < len(free):
-            req = self.queue.popleft()
+        for req in sorted(self.queue, key=lambda r: r.claim):
+            if len(group) >= len(free):
+                break
             if self._group_key(req) == key:
                 group.append(req)
-            else:
-                rest.append(req)
-        rest.extend(self.queue)
-        self.queue = rest
+        for req in group:
+            self.queue.remove(req)
         slots = free[: len(group)]
         for s, req in zip(slots, group):
             self.slot_req[s] = req
         return slots, group
 
     def next_fills(self) -> List[Tuple[int, Request]]:
-        """Chunked-admission pairing: hand each free slot the next queued
-        request — strict FIFO, no length grouping. Chunk streaming makes
+        """Chunked-admission pairing: hand each free slot the strongest-
+        claim queued request — no length grouping. Chunk streaming makes
         the prompt length irrelevant to compilation (the engine's chunk
         dispatch has one fixed (slots, chunk) shape), so unlike
         ``next_group`` nothing ever waits for a shape partner and there
@@ -162,19 +246,63 @@ class SlotScheduler:
         for s in self.free_slots():
             if not self.queue:
                 break
-            req = self.queue.popleft()
+            req = self._pop_best()
             self.slot_req[s] = req
             out.append((s, req))
         return out
 
-    # -- retirement -----------------------------------------------------
+    # -- retirement / preemption ----------------------------------------
     def retire(self, slot: int) -> Request:
         """Free ``slot`` and return the request that occupied it (the
         engine harvests its outputs before the slot is reused)."""
         req = self.slot_req[slot]
-        assert req is not None, f"retiring free slot {slot}"
+        if req is None:
+            raise SchedulerError("retiring free slot", slot=slot)
         self.slot_req[slot] = None
         return req
+
+    def requeue(self, slot: int) -> Request:
+        """Preemption / failed admission: free ``slot`` and put its
+        request back in the queue (bypassing the bound — the request was
+        already accepted; shedding it now would break the admission
+        contract). Claim-ordered selection makes the queue position
+        irrelevant; appendleft just keeps ``len(queue)`` honest for
+        backpressure accounting."""
+        req = self.slot_req[slot]
+        if req is None:
+            raise SchedulerError("requeueing free slot", slot=slot)
+        self.slot_req[slot] = None
+        self.queue.appendleft(req)
+        return req
+
+    def preempt_victims(
+        self,
+        beneficiary: Request,
+        emitted: Mapping[int, int],
+        exclude: Sequence[int] = (),
+    ) -> List[int]:
+        """Active slots the ``beneficiary`` may reclaim pages from, best
+        victim first. Eligible victims hold a strictly weaker claim
+        (lower priority, or same priority but later arrival) — so the
+        strongest claim in the system can preempt every other slot and
+        is itself unpreemptable, which is what makes overload *degrade*
+        (oldest request always completes) instead of livelock. Among
+        eligible victims the order is fewest-tokens-emitted first,
+        newest arrival as tie-break: evict the work that is cheapest to
+        recompute."""
+        ex = set(exclude)
+        cands = [
+            s
+            for s, r in enumerate(self.slot_req)
+            if r is not None and s not in ex and beneficiary.claim < r.claim
+        ]
+        cands.sort(
+            key=lambda s: (
+                emitted.get(s, 0),
+                -(self.slot_req[s].arrival or 0),
+            )
+        )
+        return cands
 
     def idle(self) -> bool:
         """True when nothing is queued and no slot is occupied — the

@@ -39,7 +39,7 @@ from repro.kernels import ops
 from repro.models import transformer as T
 from repro.serving import engine as engine_mod
 from repro.serving.engine import PAD_TOKEN, Engine
-from repro.serving.paging import PagePool, PrefixCache
+from repro.serving.paging import PagePool, PagePoolError, PrefixCache
 from repro.serving.scheduler import Request
 
 TOL = dict(rtol=2e-5, atol=2e-5)
@@ -343,13 +343,18 @@ def test_pagepool_refcount_lifecycle():
     assert all(pool.refs[p] == 0 for p in a)
     # over-alloc refuses rather than corrupting
     assert pool.alloc(5) is None
-    # refcounts never go negative: double-free asserts
+    # refcounts never go negative: double-free raises the typed error
+    # (with page context), and keeps doing so under `python -O`
     b = pool.alloc(1)
     pool.decref(b)
-    with pytest.raises(AssertionError):
+    with pytest.raises(PagePoolError, match="decref on free page"):
         pool.decref(b)
-    with pytest.raises(AssertionError):
+    with pytest.raises(PagePoolError, match="incref on free page"):
         pool.incref(b)  # incref on a free page is a bug too
+    try:
+        pool.decref(b)
+    except PagePoolError as e:
+        assert e.page == b[0] and e.refcount == 0
 
 
 def test_prefix_cache_match_insert_roundtrip():

@@ -10,7 +10,7 @@ from repro.configs import get_smoke_config
 from repro.core import dr_edram
 from repro.models import transformer as T
 from repro.serving.engine import Engine
-from repro.serving.scheduler import Request, SlotScheduler
+from repro.serving.scheduler import Request, SchedulerError, SlotScheduler
 
 
 @pytest.fixture(scope="module")
@@ -132,6 +132,95 @@ def test_scheduler_slot_reuse_mixed_patches_shapes():
     assert sorted(seen) == list(range(len(shapes)))
     assert seen.index(0) < seen.index(2) < seen.index(5)  # FIFO per key
     assert seen.index(1) < seen.index(4)
+
+
+def test_scheduler_slot_misuse_raises_typed_error():
+    """Retiring/requeueing an unoccupied slot is a protocol bug: a typed
+    SchedulerError carrying the slot index, not a bare assert (it must
+    survive ``python -O``)."""
+    sched = SlotScheduler(2)
+    with pytest.raises(SchedulerError, match="retiring free slot"):
+        sched.retire(1)
+    with pytest.raises(SchedulerError, match="requeueing free slot"):
+        sched.requeue(0)
+    try:
+        sched.retire(1)
+    except SchedulerError as e:
+        assert e.slot == 1
+
+
+def test_scheduler_bounded_queue_sheds():
+    sched = SlotScheduler(1, max_queue=2)
+    assert sched.submit(Request(0, np.zeros(3, np.int32), 2))
+    assert sched.submit(Request(1, np.zeros(3, np.int32), 2))
+    assert not sched.submit(Request(2, np.zeros(3, np.int32), 2))  # shed
+    assert [r.rid for r in sched.queue] == [0, 1]
+    # a requeue (preemption path) bypasses the bound — the request was
+    # already admitted once; shedding it now would break the contract
+    sched.next_fills()
+    assert sched.submit(Request(3, np.zeros(3, np.int32), 2))
+    sched.requeue(0)
+    assert len(sched.queue) == 3  # over the bound, by design
+
+
+def test_scheduler_claim_ordering_priorities():
+    """Admission is by claim (priority desc, arrival asc): a later
+    high-priority submission jumps the queue; ties stay FIFO."""
+    sched = SlotScheduler(2)
+    sched.submit(Request(0, np.zeros(3, np.int32), 2))
+    sched.submit(Request(1, np.zeros(3, np.int32), 2))
+    sched.submit(Request(2, np.zeros(3, np.int32), 2, priority=5))
+    fills = sched.next_fills()
+    assert [r.rid for _, r in fills] == [2, 0]
+    # grouped admission honours the same order: the strongest head picks
+    # its shape group
+    sched2 = SlotScheduler(2)
+    sched2.submit(Request(0, np.zeros(3, np.int32), 2))
+    sched2.submit(Request(1, np.zeros(7, np.int32), 2, priority=1))
+    sched2.submit(Request(2, np.zeros(7, np.int32), 2, priority=1))
+    _, group = sched2.next_group()
+    assert [r.rid for r in group] == [1, 2]
+
+
+def test_scheduler_preempt_victims_policy():
+    """Victims must hold a strictly weaker claim than the beneficiary;
+    among them, fewest-tokens-emitted first, newest arrival tie-break.
+    The strongest claim in the system is never a victim — the liveness
+    anchor of preemption."""
+    sched = SlotScheduler(3)
+    for rid, prio in [(0, 0), (1, 0), (2, 3)]:
+        sched.submit(Request(rid, np.zeros(4, np.int32), 8, priority=prio))
+    fills = dict((r.rid, s) for s, r in sched.next_fills())
+    late = Request(9, np.zeros(4, np.int32), 8, priority=1)
+    sched.submit(late)
+    emitted = {fills[0]: 5, fills[1]: 2, fills[2]: 0}
+    # rid 2 (priority 3) outranks the beneficiary (priority 1): only the
+    # two priority-0 slots are eligible, fewest-emitted (rid 1) first
+    victims = sched.preempt_victims(late, emitted)
+    assert victims == [fills[1], fills[0]]
+    # equal emission counts: newest arrival evicts first
+    victims = sched.preempt_victims(late, {})
+    assert victims == [fills[1], fills[0]]
+    # a FIFO peer (equal priority, earlier arrival) cannot be preempted
+    # by a later arrival ...
+    peer = Request(10, np.zeros(4, np.int32), 8)
+    sched.submit(peer)
+    assert sched.preempt_victims(peer, {}) == []
+    # ... and exclusions (the beneficiary's own slot at growth) hold
+    assert sched.preempt_victims(late, {}, exclude=victims) == []
+
+
+def test_scheduler_requeue_keeps_arrival_claim():
+    """A preempted request re-enters the queue with its ORIGINAL arrival
+    stamp, so it outranks everything submitted after it — preemption
+    defers work, it never demotes it."""
+    sched = SlotScheduler(1)
+    sched.submit(Request(0, np.zeros(3, np.int32), 2))
+    [(s, first)] = sched.next_fills()
+    sched.submit(Request(1, np.zeros(3, np.int32), 2))
+    back = sched.requeue(s)
+    assert back is first and back.arrival == 0
+    assert [r.rid for _, r in sched.next_fills()] == [0]
 
 
 # ---------------------------------------------------------------------------

@@ -11,14 +11,19 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
             (xla vs pallas), decode-shaped rows, shape-aware blocking vs
             pad-to-256, fused epilogue, fused QKV projections, and the
             flash-decode attention capacity × length sweep
-  serving/* packed decode + DR traffic (measured), plus the
-            continuous-batching vs lock-step throughput comparison
+  serving/* packed decode + DR traffic (measured), the
+            continuous-batching vs lock-step throughput comparison,
+            chunked vs grouped admission, prefix sharing, the overload
+            degradation sweep, and the speculative-decoding K x
+            draft-quality sweep (tokens per verify round + ledger)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--fast] [--only PREFIX]
                                               [--json [PATH]]
 
 ``--only kernel`` runs just the kernel sections; ``--json`` additionally
-records the rows as structured JSON (default path BENCH_kernels.json).
+records the rows as structured JSON, split by section family: kernel and
+paper-table rows land in PATH (default BENCH_kernels.json), ``serving/``
+rows in BENCH_serving.json next to it.
 """
 
 from __future__ import annotations
@@ -58,6 +63,9 @@ def main() -> None:
         ("serving", kernel_bench.serving_token_rate),
         ("serving/continuous", serving_bench.serving_throughput),
         ("serving/admission", serving_bench.chunked_admission),
+        ("serving/prefix", serving_bench.shared_prefix),
+        ("serving/overload", serving_bench.overload),
+        ("serving/speculative", serving_bench.speculative_sweep),
     ]
     if not args.fast:
         sections.append(("fig6a", paper_tables.fig6a))
@@ -79,17 +87,30 @@ def main() -> None:
     for r in rows:
         print(r)
     if args.json:
+        import os
+
         import jax
 
-        structured = []
+        backend = jax.default_backend()
+        # serving rows go to their own artifact: the CI conformance job
+        # diffs BENCH_serving.json (scheduling + speculation ledgers)
+        # independently of the kernel-latency file
+        serving_path = os.path.join(
+            os.path.dirname(args.json) or ".", "BENCH_serving.json")
+        buckets = {args.json: [], serving_path: []}
         for r in rows:
             name, us, derived = r.split(",", 2)
-            structured.append({"name": name, "us_per_call": float(us),
-                               "derived": derived})
-        with open(args.json, "w") as f:
-            json.dump({"backend": jax.default_backend(), "rows": structured},
-                      f, indent=1)
-        print(f"\nwrote {len(structured)} rows to {args.json}", file=sys.stderr)
+            path = serving_path if name.startswith("serving") else args.json
+            buckets[path].append({"name": name, "us_per_call": float(us),
+                                  "derived": derived})
+        for path, structured in buckets.items():
+            if not structured:
+                continue
+            with open(path, "w") as f:
+                json.dump({"backend": backend, "rows": structured},
+                          f, indent=1)
+            print(f"\nwrote {len(structured)} rows to {path}",
+                  file=sys.stderr)
     if failures:
         print(f"\n{failures} section(s) failed", file=sys.stderr)
         raise SystemExit(1)

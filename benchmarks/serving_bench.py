@@ -342,6 +342,89 @@ def overload(slots: int = 4) -> list:
     return out
 
 
+def speculative_sweep(slots: int = 2) -> list:
+    """Draft-verify speculation sweep: K × draft quality → tokens per
+    decode round.
+
+    Three draft models span the acceptance axis without training
+    anything: the target itself (every proposal accepted — the
+    acceptance=1.0 ceiling), an untrained tiny draft (near-random
+    agreement — the realistic floor before distillation), and
+    ``spec_force="reject"`` (every proposal rejected — the adversarial
+    worst case, pure overhead). For each (K, draft) cell the row
+    records tokens emitted per verify round, the realized acceptance
+    rate, and the drafted/accepted ledger.
+
+    Everything is asserted, not just reported: greedy tokens bit-exact
+    against the non-speculative engine for every cell, the per-request
+    identity ``emitted == accepted + rounds`` (each round emits the
+    accepted prefix plus the target's own next token), the aggregate
+    stats reconciling with the per-request ledgers, and the ceiling
+    cells actually clearing 1 token/round.
+    """
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving import speculative as spec_lib
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke_config("falcon3-1b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    dcfg = spec_lib.make_draft_config(cfg)
+    dparams = T.init_params(jax.random.PRNGKey(7), dcfg)
+    rng = np.random.RandomState(11)
+    new = 16
+    prompts = [rng.randint(0, cfg.vocab_size, size=(p,)).astype(np.int32)
+               for p in (6, 9, 13, 8)]
+
+    def mk():
+        return [Request(rid=i, tokens=t, max_new_tokens=new)
+                for i, t in enumerate(prompts)]
+
+    base = Engine(cfg, params, hot_cap=8, max_len=64, slots=slots,
+                  prefill_chunk=8)
+    ref = {f.rid: f.tokens.tolist() for f in base.serve(mk(), slots=slots)}
+
+    drafts = [
+        ("self", cfg, params, None),  # acceptance ceiling: draft == target
+        ("tiny", dcfg, dparams, None),  # untrained draft: realistic floor
+        ("reject", dcfg, dparams, "reject"),  # adversarial: all rolled back
+    ]
+    out = []
+    for k in (2, 4, 8):
+        for tag, dc, dp, force in drafts:
+            eng = Engine(cfg, params, hot_cap=8, max_len=64, slots=slots,
+                         prefill_chunk=8, draft_cfg=dc, draft_params=dp,
+                         spec_k=k, spec_force=force)
+            assert eng.spec
+            eng.serve(mk(), slots=slots)  # warm (compiles)
+            t0 = time.perf_counter()
+            fin = {f.rid: f for f in eng.serve(mk(), slots=slots)}
+            dt = time.perf_counter() - t0
+            emitted = rounds = 0
+            for rid, f in fin.items():
+                assert f.tokens.tolist() == ref[rid], (tag, k, rid)
+                assert 0 <= f.accepted_tokens <= f.drafted_tokens
+                emitted += len(f.tokens)
+                # every round emits the accepted prefix + one target token
+                rounds += len(f.tokens) - f.accepted_tokens
+            st = eng.last_stats
+            drafted = sum(f.drafted_tokens for f in fin.values())
+            accepted = sum(f.accepted_tokens for f in fin.values())
+            assert (st.drafted_tokens, st.accepted_tokens) == (
+                drafted, accepted), "stats ledger != per-request ledger"
+            tok_round = emitted / rounds
+            acc = accepted / max(drafted, 1)
+            if tag == "self":
+                assert acc == 1.0 and (tok_round > 1.0 if k > 1 else True)
+            if tag == "reject":
+                assert accepted == 0 and tok_round == 1.0
+            out.append(row(
+                f"serving/spec_k{k}_{tag}", dt / max(emitted, 1) * 1e6,
+                f"tok_round={tok_round:.2f} acc={acc:.2f} "
+                f"drafted={drafted} accepted={accepted} rounds={rounds}"))
+    return out
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     for r in serving_throughput():
@@ -351,6 +434,8 @@ def main() -> None:
     for r in shared_prefix():
         print(r)
     for r in overload():
+        print(r)
+    for r in speculative_sweep():
         print(r)
 
 

@@ -29,6 +29,29 @@ CFG = ModelConfig(
 
 register(CFG, shrink(CFG))
 
+# Draft model for speculative serving (serving/engine.py, spec_k > 0):
+# a 4-layer ternary model sharing falcon3-1b's tokenizer/vocab — the only
+# hard coupling between draft and target is the token-id space. Ternary
+# weights make it nearly free next to the target (ROADMAP: speculation);
+# depth/width follow the Falcon3 head ratio at ~1/10 the parameters.
+DRAFT = ModelConfig(
+    name="falcon3-draft",
+    family="dense",
+    n_layers=4,
+    d_model=1024,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=4096,
+    vocab_size=131072,
+    rope_theta=1_000_042.0,
+    tie_embeddings=True,
+    bitnet=BitNetConfig(),
+    source="derived; speculative draft for falcon3-1b",
+)
+
+register(DRAFT, shrink(DRAFT))
+
 # The paper's sibling models (Table I) — parameter-count reproduction only.
 FALCON3_FAMILY = {
     "falcon3-1b": dict(n_layers=18, d_model=2048, n_heads=8, n_kv_heads=4,

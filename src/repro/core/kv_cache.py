@@ -845,6 +845,33 @@ def release_slots(cache, released: jax.Array):
     return cache._replace(lengths=lengths)
 
 
+def truncate(cache, new_lengths: jax.Array):
+    """Roll each slot back to ``min(lengths, new_lengths)`` tokens —
+    the speculative-decoding reject path (serving/engine.py): the
+    verifier appends a full K-token chunk, the acceptance rule keeps a
+    prefix, and this drops the rejected suffix. Works on tiered and
+    paged caches alike, stacked or not (``new_lengths`` (b,) broadcasts
+    against the stacked (L, b) lengths); slots whose length is already
+    at or below the target are untouched, so a full-batch call with
+    per-slot targets needs no mask.
+
+    KV rows past the new length are left in place — reads are masked by
+    ``lengths`` and the next append overwrites them. Under paging the
+    page-table entries likewise stay; the HOST decides which pages the
+    rollback strands (``ceil(max(len - hot_cap, 0) / page_size)`` pages
+    remain live) and decrefs the rest — device state never owns pages.
+
+    NOT valid for ring (SWA) layouts once the window has wrapped: a ring
+    append overwrites the oldest window rows in place, so the pre-append
+    state is unrecoverable. Ring callers must append only what they keep
+    (the serving engine commits ``n_emit`` rows instead of rolling back).
+    """
+    new_lengths = new_lengths.astype(cache.lengths.dtype)
+    return cache._replace(
+        lengths=jnp.minimum(cache.lengths, new_lengths)
+    )
+
+
 # ---------------------------------------------------------------------------
 # Traffic accounting hooks (ties the functional cache to hwmodel/dr_edram)
 # ---------------------------------------------------------------------------
@@ -903,6 +930,40 @@ def step_traffic_tokens(lengths: jax.Array, hot_cap: int) -> dict:
         "ext_read": cold,
         "ondie_write": 1 - ext_w,
         "ext_write": ext_w,
+    }
+
+
+def spec_traffic_tokens(lengths: jax.Array, chunk_valid: jax.Array,
+                        committed: jax.Array, hot_cap: int) -> dict:
+    """Vectorized per-slot ledger for one speculative draft-verify round
+    (token units, like ``step_traffic_tokens``).
+
+    ``lengths`` is each slot's cache length before the round,
+    ``chunk_valid`` the number of chunk rows the verifier processed and
+    ``committed`` the rows physically appended (= chunk_valid on linear
+    layouts, the accepted count on ring layouts). The ledger is charged
+    for what the device does, not per emitted token — which is exactly
+    the speculation win: the cached prefix streams ONCE per round
+    instead of once per token, while the chunk rows attend to each other
+    on-die. A spec run therefore does NOT reconcile with the sequential
+    closed form ``dr_edram.closed_form_reduction``; it strictly
+    undercuts it when acceptance > 0 (asserted in tests). Draft-model
+    traffic is outside this ledger — the ledger tracks the target
+    model's KV tiers (the draft's KV is a second, much smaller cache).
+    """
+    lengths = lengths.astype(jnp.int32)
+    m = chunk_valid.astype(jnp.int32)
+    w = committed.astype(jnp.int32)
+    hot = jnp.minimum(lengths, hot_cap)
+    cold = jnp.maximum(lengths - hot_cap, 0)
+    # chunk row i additionally reads rows 0..i-1 of the chunk, on-die
+    intra = m * (m - 1) // 2
+    ondie_w = jnp.clip(hot_cap - lengths, 0, w)
+    return {
+        "ondie_read": hot + intra,
+        "ext_read": cold,
+        "ondie_write": ondie_w,
+        "ext_write": w - ondie_w,
     }
 
 

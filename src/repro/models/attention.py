@@ -272,11 +272,22 @@ def attention_prefill_chunk(
     cache: kvc.TieredKVCache,  # live per-layer cache (per-slot lengths)
     n_valid: jax.Array,  # (b,) valid chunk rows; 0 = slot not prefilling
     impl: str | None = None,
+    append: bool = True,
 ):
     """Chunked-prefill continuation for one layer: the C chunk tokens of
     each slot attend to the slot's cached prefix (``cache.lengths``
     tokens, both tiers) plus the causally-earlier rows of the chunk,
     then append their k/v at the slot's offset. Returns (y, cache).
+
+    With ``append=False`` the cache is left untouched and the rotated
+    chunk k/v are returned instead: ``(y, (k_c, v_c))``. This is the
+    speculative-decoding verify form (serving/engine.py): attention
+    never reads the chunk's rows *through* the cache (they stream in
+    separately on both impls), so deferring the append until the
+    accept/reject decision is known changes no numerics — and it is
+    what makes verification safe on ring (SWA) layouts, where an
+    append-then-rollback would already have clobbered the oldest
+    window rows.
 
     Every shape is fixed by (slots, C) — per-slot offsets and valid
     counts are data — which is what gives the serving engine its
@@ -304,11 +315,12 @@ def attention_prefill_chunk(
             qr, kr, v, cache, n_valid, window=window, ring=swa
         )
         k_c, v_c = kr, v
-    cache = kvc.append(cache, k_c, v_c, valid=n_valid, ring=swa)
+    if append:
+        cache = kvc.append(cache, k_c, v_c, valid=n_valid, ring=swa)
     y = qops.linear(
         p["wo"], o.reshape(b, c, h * hd), cfg, mode, lora_leaf=p.get("lora_o")
     )
-    return y, cache
+    return y, (cache if append else (k_c, v_c))
 
 
 def attention_decode(

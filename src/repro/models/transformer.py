@@ -606,6 +606,88 @@ def prefill_chunk_step(
     return _lm_logits(params, cfg, x_last), cache
 
 
+def _spec_scan(params, cfg, x, cache, mode, n_valid):
+    """Verification scan: `_prefill_scan`'s structure, but attention runs
+    in the no-append form and each layer's rotated chunk k/v is collected
+    instead of written — the cache is READ, never mutated. The collected
+    (k, v) stacks feed :func:`spec_commit_chunk` once the accept length
+    is known."""
+
+    def scan_attn(x1, stack_params, cache_stack):
+        def step(h, xs):
+            bp, cl = xs
+            y, kv = attn.attention_prefill_chunk(
+                bp["attn"], h, cfg, mode, cl, n_valid, append=False
+            )
+            h = h + y
+            if "moe" in bp:
+                h2, _ = moe_lib.apply_moe(bp["moe"], h, cfg, mode)
+            else:
+                h2 = apply_mlp(bp["mlp"], h, cfg, mode)
+            return h + h2, kv
+
+        return jax.lax.scan(step, x1, (stack_params, cache_stack))
+
+    kvs = {}
+    if cfg.family in ("dense", "vlm"):
+        x, kvs["attn"] = scan_attn(x, params["blocks"], cache["attn"])
+    elif cfg.family == "moe":
+        if "attn_dense" in cache:
+            x, kvs["attn_dense"] = scan_attn(
+                x, params["dense_blocks"], cache["attn_dense"]
+            )
+        x, kvs["attn_moe"] = scan_attn(x, params["moe_blocks"], cache["attn_moe"])
+    else:  # pragma: no cover — guarded by the engine's capability gate
+        raise ValueError(cfg.family)
+    return x, kvs
+
+
+def spec_verify_chunk(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (slots, K) — pending token ‖ draft proposals
+    cache,
+    n_valid: jax.Array,  # (slots,) valid chunk rows; 0 = slot inactive
+    mode: str = "packed",
+):
+    """Speculative verification: ONE chunk-shaped dispatch that scores a
+    K-token draft chunk against the live cache WITHOUT appending.
+
+    Returns ``(logits, kvs)`` where ``logits`` is (slots, K, vocab) —
+    the target model's distribution after every chunk position, which
+    the engine's acceptance kernel argmaxes against the draft — and
+    ``kvs`` maps each attention stack to its (L, slots, K, ...) rotated
+    chunk k/v, ready for :func:`spec_commit_chunk`. Deferring the
+    append is what makes rollback trivial (nothing to roll back) and
+    ring (SWA) caches safe to speculate on. Shapes are fixed by
+    (slots, K): one compile per engine, same contract as
+    ``prefill_chunk_step``.
+    """
+    dtype = params["final_ln"].dtype
+    x = _embed_tokens(params, cfg, tokens, dtype)  # (slots, K, d)
+    x, kvs = _spec_scan(params, cfg, x, cache, mode, n_valid)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return _lm_logits(params, cfg, x), kvs
+
+
+def spec_commit_chunk(cfg: ModelConfig, cache, kvs, n_commit: jax.Array):
+    """Append the first ``n_commit[b]`` verified chunk rows of each slot
+    to the live cache (the accept step of draft-verify speculation).
+
+    ``kvs`` is :func:`spec_verify_chunk`'s per-stack (L, slots, K, ...)
+    k/v; the append vmaps over the layer axis, so tiered and paged
+    stacks both work. Linear layouts may commit the full chunk and roll
+    back via ``kv_cache.truncate``; ring layouts MUST pass the accepted
+    count here (a ring append is destructive — see ``truncate``)."""
+    ring = cfg.attn_type == "swa"
+    out = dict(cache)
+    for key, (k, v) in kvs.items():
+        out[key] = jax.vmap(
+            lambda c, kk, vv: kvc.append(c, kk, vv, valid=n_commit, ring=ring)
+        )(cache[key], k, v)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Decode step
 # ---------------------------------------------------------------------------

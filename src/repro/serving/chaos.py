@@ -60,10 +60,19 @@ def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None
          boundaries: the engine unwinds its transient admission increfs
          before the dispatch returns;
       6. the host page-table mirror's live rows agree with the slot page
-         lists and contain only in-range ids.
+         lists and contain only in-range ids;
+      7. (speculative engines, ``ctx.spec``) the acceptance ledger is
+         sane (``accepted_tokens <= drafted_tokens``) and, when paged,
+         every decoding slot's page list holds EXACTLY the pages its
+         mirrored length needs (``paging.pages_needed``) — i.e. the
+         rollback's trailing decref returned every page the rejected
+         suffix transiently occupied, leaving none stranded.
 
-    A non-paged ctx (``ctx.pool is None``) passes vacuously.
+    A non-paged ctx (``ctx.pool is None``) passes the page checks
+    vacuously (the speculation ledger check still runs).
     """
+    if getattr(ctx, "spec", False):
+        _check_speculation(ctx)
     pool = ctx.pool
     if pool is None:
         return
@@ -118,6 +127,36 @@ def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None
                 raise InvariantViolation(
                     f"slot {s} host-table row {row} != page list "
                     f"{ctx.slot_pages[s]}")
+
+
+def _check_speculation(ctx) -> None:
+    """Speculation-specific invariants (check 7 above): the draft/accept
+    ledger is consistent, and paged rollback strands no pages. Valid at
+    iteration boundaries only — mid-round the device transiently holds
+    the full unverified chunk."""
+    st = ctx.stats
+    if st.accepted_tokens > st.drafted_tokens:
+        raise InvariantViolation(
+            f"speculation ledger: accepted {st.accepted_tokens} > "
+            f"drafted {st.drafted_tokens}")
+    for fin in ctx.finished:
+        if fin.accepted_tokens > fin.drafted_tokens:
+            raise InvariantViolation(
+                f"rid {fin.rid}: accepted {fin.accepted_tokens} > "
+                f"drafted {fin.drafted_tokens}")
+    if ctx.pool is None:
+        return
+    from repro.serving.paging import pages_needed
+
+    for s, req in enumerate(ctx.sched.slot_req):
+        if req is None or s in ctx.prefilling or s in ctx.draft_prefilling:
+            continue
+        want = pages_needed(ctx.seq_mirror[s], ctx.hot_cap, ctx.page_size)
+        if len(ctx.slot_pages[s]) != want:
+            raise InvariantViolation(
+                f"speculative rollback stranded pages: slot {s} holds "
+                f"{len(ctx.slot_pages[s])} pages but its length "
+                f"{ctx.seq_mirror[s]} needs {want}")
 
 
 @dataclasses.dataclass

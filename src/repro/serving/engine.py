@@ -84,6 +84,24 @@ plane (pool exhaustion, stragglers, mid-prefill cancellation) and
 re-checks the refcount/page-table invariants after every loop iteration
 under test, via serve()'s ``on_iteration`` hook.
 
+Speculative decoding (docs/serving.md, "Speculative decoding")
+--------------------------------------------------------------
+``Engine(draft_cfg=..., draft_params=..., spec_k=K)`` replaces the
+one-token decode dispatch with a draft-verify round: K greedy draft
+steps against a per-slot draft KV cache propose a K-token chunk, ONE
+``transformer.spec_verify_chunk`` dispatch scores it against the target
+cache without appending, and the vectorized acceptance rule
+(``serving/speculative.longest_accepted_prefix``) keeps the longest
+prefix the target itself would have emitted. Linear cache layouts
+commit the full chunk and roll the rejected suffix back with
+``kv_cache.truncate`` (the paged form then decrefs the stranded trailing
+pages at the iteration boundary); ring (SWA) layouts commit only the
+accepted rows — a wrapped ring append is destructive, so there is
+nothing safe to roll back. Greedy outputs are bit-identical to the
+non-speculative loop for every accept/reject mix (every emitted token is
+a target argmax; the draft only sets the pace), which
+tests/test_speculative.py asserts end-to-end.
+
 docs/serving.md walks the full request lifecycle (slots, admission
 groups, ``sync_every`` semantics, the paging lifecycle, the
 reconciliation contract); docs/kernels.md covers the packed fast path
@@ -94,6 +112,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
                     Sequence, Set)
 
@@ -105,8 +124,9 @@ from repro.configs.base import ModelConfig
 from repro.core import dr_edram, kv_cache
 from repro.models import pack as pack_lib
 from repro.models import transformer as T
+from repro.serving import speculative as spec_lib
 from repro.serving.paging import (PagePool, PagePoolError, PrefixCache,
-                                  PrefixMatch)
+                                  PrefixMatch, pages_needed)
 from repro.serving.scheduler import FinishedRequest, Request, SlotScheduler
 
 TRAFFIC_KEYS = kv_cache.TRAFFIC_KEYS
@@ -139,6 +159,10 @@ class DecodeState(NamedTuple):
     max_new: jax.Array  # (slots,) int32 — per-slot generation budget
     out: jax.Array  # (slots, out_cap) int32 — emitted tokens
     ledger: Dict[str, jax.Array]  # 4 × (slots,) int32 decode token counts
+    # speculative decoding (None / zeros on non-speculative engines):
+    draft_cache: Any = None  # draft model's per-slot tiered KV cache
+    drafted: Any = None  # (slots,) int32 — draft proposals scored so far
+    accepted: Any = None  # (slots,) int32 — proposals the target accepted
 
 
 @dataclasses.dataclass
@@ -173,6 +197,16 @@ class ServeStats:
     recompute_tokens: int = 0
     grown_pages: int = 0
     iterations: int = 0
+    # speculative decoding ledger (0 on non-speculative engines): draft
+    # proposals scored by the target vs proposals accepted. Per request
+    # the identity `emitted == accepted + rounds` holds (each verify
+    # round always emits its pending token on top of the accepted run).
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+
+    def record_spec(self, fin: FinishedRequest) -> None:
+        self.drafted_tokens += fin.drafted_tokens
+        self.accepted_tokens += fin.accepted_tokens
 
 
 @dataclasses.dataclass
@@ -200,6 +234,14 @@ class _ServeCtx:
     ptree: Optional[PrefixCache] = None
     host_table: Optional[np.ndarray] = None
     iteration: int = 0
+    # speculative decoding: slot -> [req, offset] for the draft model's
+    # own chunked prefill (runs alongside the target's; a slot decodes
+    # only once BOTH caches hold the full prompt), plus the geometry the
+    # invariant checker needs to audit post-rollback page occupancy
+    draft_prefilling: Dict[int, list] = dataclasses.field(default_factory=dict)
+    spec: bool = False
+    hot_cap: int = 0
+    page_size: int = 0
 
 
 class Engine:
@@ -237,6 +279,10 @@ class Engine:
         prefix_sharing: bool = True,
         max_queue: Optional[int] = None,
         clock: Optional[Callable[[], float]] = None,
+        draft_cfg: Optional[ModelConfig] = None,
+        draft_params=None,
+        spec_k: int = 0,
+        spec_force: Optional[str] = None,
     ):
         self.cfg = cfg
         # Freeze to ROM form once (packed trits + fused wqkv/wgu/w_dqkv/w_gu
@@ -294,6 +340,45 @@ class Engine:
                 -(-hot_cap // self._page_size) if hot_cap else 0
             )
             self._n_pages_cfg = n_pages
+        # speculative decoding (module docstring, "Speculative decoding"):
+        # a draft model + chunk width K turn the decode dispatch into a
+        # draft-verify round. Greedy-only — temperature speculation needs
+        # rejection sampling (serving/speculative.rejection_sample, a
+        # stub) — and it rides the chunked-prefill machinery, so archs
+        # that cannot chunk fall back to plain decode with a warning
+        # rather than fail (the conformance suite asserts the warning).
+        self.draft_cfg = draft_cfg
+        self.spec_k = int(spec_k)
+        if spec_force not in (None, "reject"):
+            raise ValueError(f"spec_force must be None or 'reject': {spec_force!r}")
+        self.spec_force = spec_force
+        spec = draft_params is not None and self.spec_k > 0
+        if spec:
+            if draft_cfg is None:
+                raise ValueError("draft_params requires draft_cfg")
+            if sample != "greedy":
+                spec_lib.rejection_sample()
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab_size} != target vocab "
+                    f"{cfg.vocab_size}: draft proposals are token ids "
+                    "scored by the target — the vocabularies must match"
+                )
+            if not (prefill_chunk > 0 and self._chunked_capable()):
+                warnings.warn(
+                    f"speculative decoding needs chunked prefill on an "
+                    f"attention-cache family without a frontend; "
+                    f"{cfg.name} (family={cfg.family}, attn={cfg.attn_type}"
+                    f", frontend={cfg.frontend}, prefill_chunk="
+                    f"{prefill_chunk}) falls back to non-speculative "
+                    "decode", RuntimeWarning, stacklevel=2,
+                )
+                spec = False
+        self.spec = spec
+        self.draft_params = (
+            pack_lib.pack_params(draft_params, draft_cfg) if (spec and pack)
+            else (draft_params if spec else None)
+        )
         # backpressure bound on the admission queue (None = unbounded);
         # overflow at submit time is shed as outcome "rejected", never
         # silently queued. serve(max_queue=...) overrides per call.
@@ -312,6 +397,8 @@ class Engine:
         self._paged_admit_fn = None  # jitted fused paged (re)admission
         self._save_hot_fn = None  # jitted hot-tier snapshot dispatch
         self._set_table_fn = None  # jitted page-table install (growth)
+        self._spec_step_fns: dict = {}  # (out_cap, stop) -> jitted round
+        self._draft_chunk_fn = None  # jitted draft-cache prefill chunk
         # jitted prefill (one compile per admitted (group, prompt) shape)
         self._prefill = jax.jit(
             lambda p, batch: T.prefill(
@@ -379,6 +466,16 @@ class Engine:
             self.cfg, n_slots, self.max_len, self.hot_cap,
             dtype=self._cache_dtype(), **paged_kw
         )
+        # the draft's cache is always a plain contiguous tiered cache —
+        # it is private scratch (never prefix-shared, never paged) whose
+        # lengths track the target's accepted lengths via truncate
+        draft_cache = (
+            T.init_decode_cache(
+                self.draft_cfg, n_slots, self.max_len, self.hot_cap,
+                dtype=self.draft_params["final_ln"].dtype,
+            )
+            if self.spec else None
+        )
         self.key, sub = jax.random.split(self.key)
 
         def z():
@@ -397,6 +494,9 @@ class Engine:
             max_new=z(),
             out=jnp.zeros((n_slots, out_cap), jnp.int32),
             ledger={k: z() for k in TRAFFIC_KEYS},
+            draft_cache=draft_cache,
+            drafted=z(),
+            accepted=z(),
         )
 
     def _cache_batch_axes(self):
@@ -481,6 +581,8 @@ class Engine:
                 cache=cache, tok=tok, key=key_next, allocated=state.allocated,
                 done=done, seq_len=seq_len, n_gen=n_gen,
                 max_new=state.max_new, out=out, ledger=ledger,
+                draft_cache=state.draft_cache, drafted=state.drafted,
+                accepted=state.accepted,
             )
 
         fn = jax.jit(step, donate_argnums=(1,))
@@ -515,6 +617,9 @@ class Engine:
                 max_new=state.max_new.at[idx].set(max_new),
                 out=state.out.at[idx].set(0),
                 ledger={k: state.ledger[k].at[idx].set(z) for k in TRAFFIC_KEYS},
+                draft_cache=state.draft_cache,
+                drafted=state.drafted.at[idx].set(0),
+                accepted=state.accepted.at[idx].set(0),
             )
 
         self._admit_fn = jax.jit(admit, donate_argnums=(0,))
@@ -571,10 +676,154 @@ class Engine:
                 max_new=jnp.where(is_last, max_new, state.max_new),
                 out=jnp.where(is_first[:, None], 0, state.out),
                 ledger=ledger,
+                draft_cache=state.draft_cache,
+                drafted=jnp.where(is_first, 0, state.drafted),
+                accepted=jnp.where(is_first, 0, state.accepted),
             )
 
         self._chunk_step_fn = jax.jit(chunk_step, donate_argnums=(1,))
         return self._chunk_step_fn
+
+    # ------------------------------------------------------------------
+    # speculative decoding: draft prefill + the jitted draft-verify round
+    # ------------------------------------------------------------------
+
+    def _get_draft_chunk(self):
+        """Jitted chunked prefill of the DRAFT cache: same wave protocol
+        as ``_get_chunk_step`` (idle slots ride along with ``n_valid=0``)
+        but only the cache matters — the draft's prompt logits are
+        discarded, the target samples every emitted token. Compiles once
+        per engine."""
+        if self._draft_chunk_fn is not None:
+            return self._draft_chunk_fn
+        dcfg, mode = self.draft_cfg, self.mode
+
+        def dchunk(dparams, state: DecodeState, tokens, n_valid,
+                   is_first) -> DecodeState:
+            dcache = {
+                k: c._replace(
+                    lengths=jnp.where(is_first[None, :], 0, c.lengths)
+                )
+                for k, c in state.draft_cache.items()
+            }
+            _, dcache = T.prefill_chunk_step(
+                dparams, dcfg, tokens, dcache, n_valid, mode=mode
+            )
+            return state._replace(draft_cache=dcache)
+
+        self._draft_chunk_fn = jax.jit(dchunk, donate_argnums=(1,))
+        return self._draft_chunk_fn
+
+    def _get_spec_step(self, out_cap: int, stop_token: Optional[int]):
+        """One speculative draft-verify round, fully on device (the
+        spec-mode replacement for ``_get_step``; same compile-key
+        discipline). K draft ``decode_step``s propose a chunk, ONE
+        ``transformer.spec_verify_chunk`` scores it without appending,
+        the acceptance rule picks ``n_emit``, and the commit path writes
+        exactly the surviving rows (ring) or writes-then-truncates
+        (linear — the paged trailing pages are decrefed host-side at the
+        iteration boundary). Every emitted token is the target's argmax,
+        so greedy outputs match the sequential loop bit-for-bit."""
+        key = (out_cap, stop_token)
+        if key in self._spec_step_fns:
+            return self._spec_step_fns[key]
+        cfg, dcfg, mode = self.cfg, self.draft_cfg, self.mode
+        hot_cap, k_spec = self.hot_cap, self.spec_k
+        ring = cfg.attn_type == "swa"
+        force_reject = self.spec_force == "reject"
+
+        def spec_step(params, dparams, state: DecodeState) -> DecodeState:
+            active = state.allocated & ~state.done
+            act32 = active.astype(jnp.int32)
+            seq0 = state.seq_len
+            remaining = jnp.maximum(state.max_new - state.n_gen, 0)
+            chunk_valid = jnp.where(
+                active, jnp.minimum(k_spec, remaining), 0
+            )
+            # -- draft: K cheap greedy steps against the draft cache.
+            # chunk[:, 0] is the pending token; step i appends row i's
+            # KV (gated by chunk_valid, so draft lengths advance by
+            # exactly chunk_valid) and its argmax proposes row i+1.
+            dcache = dict(state.draft_cache)
+            cols = [state.tok]
+            tok_i = state.tok
+            for i in range(k_spec):
+                gate = active & (i < chunk_valid)
+                dlogits, dcache = T.decode_step(
+                    dparams, dcfg, tok_i, dcache, mode=mode, active=gate
+                )
+                prop = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)
+                tok_i = jnp.where(gate, prop, tok_i)
+                if i + 1 < k_spec:
+                    cols.append(tok_i)
+            chunk = jnp.stack(cols, axis=1)  # (slots, K)
+            # -- verify: one fixed-shape chunk dispatch, no append
+            logits, kvs = T.spec_verify_chunk(
+                params, cfg, chunk, state.cache, chunk_valid, mode=mode
+            )
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            n_emit = spec_lib.longest_accepted_prefix(
+                chunk, greedy, chunk_valid, stop_token,
+                force_reject=force_reject,
+            )
+            # -- commit: a wrapped ring append is destructive, so ring
+            # layouts commit only the accepted rows; linear layouts
+            # commit the whole chunk and roll back via truncate (the
+            # path the paged page-table machinery audits)
+            commit_n = n_emit if ring else chunk_valid
+            cache = T.spec_commit_chunk(cfg, state.cache, kvs, commit_n)
+            if not ring:
+                cache = {
+                    kk: kv_cache.truncate(c, seq0 + n_emit)
+                    for kk, c in cache.items()
+                }
+            # draft rollback keeps draft lengths == target lengths at
+            # every round boundary (the draft re-proposes the rejected
+            # suffix next round, now conditioned on the corrected token)
+            dcache = {
+                kk: kv_cache.truncate(c, seq0 + n_emit)
+                for kk, c in dcache.items()
+            }
+            # -- emit the accepted run into the output buffer
+            pos = (
+                jnp.arange(out_cap, dtype=jnp.int32)[None]
+                - state.n_gen[:, None]
+            )
+            emit = (pos >= 0) & (pos < n_emit[:, None])
+            vals = jnp.take_along_axis(
+                chunk, jnp.clip(pos, 0, k_spec - 1), axis=1
+            )
+            out = jnp.where(emit, vals, state.out)
+            n_gen = state.n_gen + n_emit
+            seq_len = seq0 + n_emit
+            # pending token for the next round: the target's own
+            # continuation after the last emitted token — exactly what
+            # the sequential loop would have sampled there
+            new_tok = jnp.take_along_axis(
+                greedy, jnp.clip(n_emit - 1, 0, k_spec - 1)[:, None], axis=1
+            )[:, 0]
+            tok = jnp.where(active, new_tok, state.tok)
+            done = state.done | (active & (n_gen >= state.max_new))
+            if stop_token is not None:
+                done = done | (active & (tok == stop_token))
+            tr = kv_cache.spec_traffic_tokens(
+                seq0, chunk_valid, commit_n, hot_cap
+            )
+            ledger = {
+                kk: state.ledger[kk] + tr[kk] * act32 for kk in TRAFFIC_KEYS
+            }
+            return DecodeState(
+                cache=cache, tok=tok, key=state.key,
+                allocated=state.allocated, done=done, seq_len=seq_len,
+                n_gen=n_gen, max_new=state.max_new, out=out, ledger=ledger,
+                draft_cache=dcache,
+                drafted=state.drafted + jnp.maximum(chunk_valid - 1, 0),
+                accepted=state.accepted + jnp.maximum(n_emit - 1, 0),
+            )
+
+        fn = jax.jit(spec_step, donate_argnums=(2,))
+        self._spec_step_fns[key] = fn
+        return fn
 
     # ------------------------------------------------------------------
     # paged admission: page-table install + hot restore + COW, one dispatch
@@ -614,6 +863,9 @@ class Engine:
                 out=jnp.where(reset[:, None], 0, state.out),
                 ledger={k: jnp.where(reset, z32, state.ledger[k])
                         for k in TRAFFIC_KEYS},
+                draft_cache=state.draft_cache,
+                drafted=jnp.where(reset, 0, state.drafted),
+                accepted=jnp.where(reset, 0, state.accepted),
             )
 
         self._paged_admit_fn = jax.jit(admit, donate_argnums=(0,))
@@ -679,6 +931,11 @@ class Engine:
                 k: kv_cache.release_slots(c, mj)
                 for k, c in state.cache.items()
             }
+            if self.spec and state.draft_cache is not None:
+                kw["draft_cache"] = {
+                    k: kv_cache.release_slots(c, mj)
+                    for k, c in state.draft_cache.items()
+                }
         return state._replace(
             allocated=state.allocated & ~mj, done=state.done & ~mj, **kw
         )
@@ -719,6 +976,13 @@ class Engine:
                 p_attempt, ctx.prefix_used[s], self.hot_cap)
             for k in TRAFFIC_KEYS:
                 carry[k] += (prompt[k] + int(np.asarray(st.ledger[k][s]))) * tb
+            if self.spec:
+                # speculation accounting survives preemption the same way
+                # traffic does: fold this attempt's counters into the
+                # request, the re-admission resets the device rows
+                req.carry_drafted += int(np.asarray(st.drafted[s]))
+                req.carry_accepted += int(np.asarray(st.accepted[s]))
+        ctx.draft_prefilling.pop(s, None)
         req.carry_traffic = carry
         req.carry_reused += ctx.prefix_used[s]
         req.n_preemptions += 1
@@ -784,7 +1048,7 @@ class Engine:
                 ctx.seq_mirror[s] + min(chunk, ctx.remaining[s]),
                 self.max_len,
             )
-            need = -(-max(target - hc, 0) // ps) - len(ctx.slot_pages[s])
+            need = pages_needed(target, hc, ps) - len(ctx.slot_pages[s])
             if need <= 0:
                 continue
             pages = self._paged_alloc(ctx, need, req, exclude=(s,))
@@ -840,7 +1104,7 @@ class Engine:
                     mine.append(m.cow_src)
                 # the slot's own (retained) reader refs on adopted pages
                 ctx.pool.incref(m.shared_pages)
-            n_cold = min(-(-max(req.prompt_len - hc, 0) // ps), pps)
+            n_cold = min(pages_needed(req.prompt_len, hc, ps), pps)
             shared = list(m.shared_pages)
             n_fresh = n_cold - len(shared)
             fresh = self._paged_alloc(ctx, n_fresh, req, exclude=fill_slots)
@@ -916,7 +1180,8 @@ class Engine:
     def _build_finished(self, req: Request, out_row: np.ndarray,
                         seq_len: int, decode_ledger: Dict[str, int],
                         prefilled_len: int, prefix_used: int,
-                        outcome: str, token_bytes: int) -> FinishedRequest:
+                        outcome: str, token_bytes: int,
+                        drafted: int = 0, accepted: int = 0) -> FinishedRequest:
         """Assemble a FinishedRequest from one slot's harvest. For a
         request that was preempted along the way, the prompt that the
         final attempt decoded from contains earlier attempts' emitted
@@ -952,6 +1217,8 @@ class Engine:
             prefix_tokens_reused=prefix_used + req.carry_reused,
             outcome=outcome,
             n_preemptions=req.n_preemptions,
+            drafted_tokens=drafted + req.carry_drafted,
+            accepted_tokens=accepted + req.carry_accepted,
         )
 
     def _finish_queued(self, req: Request, outcome: str) -> FinishedRequest:
@@ -972,6 +1239,8 @@ class Engine:
             seq_len=prompt_len + len(tokens), steps=len(tokens),
             traffic=traffic, prefix_tokens_reused=req.carry_reused,
             outcome=outcome, n_preemptions=req.n_preemptions,
+            drafted_tokens=req.carry_drafted,
+            accepted_tokens=req.carry_accepted,
         )
 
     def _cancel_slot(self, ctx: _ServeCtx, s: int, outcome: str) -> None:
@@ -980,6 +1249,7 @@ class Engine:
         release its device row."""
         req = ctx.sched.retire(s)
         st = ctx.state
+        ctx.draft_prefilling.pop(s, None)
         if s in ctx.prefilling:
             off = ctx.prefilling.pop(s)[1]
             fin = self._build_finished(
@@ -992,15 +1262,21 @@ class Engine:
             n_gen = int(np.asarray(st.n_gen[s]))
             out_row = (np.asarray(st.out[s, :n_gen], np.int32)
                        if n_gen else np.zeros((0,), np.int32))
+            spec_kw = (
+                dict(drafted=int(np.asarray(st.drafted[s])),
+                     accepted=int(np.asarray(st.accepted[s])))
+                if self.spec else {}
+            )
             fin = self._build_finished(
                 req, out_row, seq_len=int(np.asarray(st.seq_len[s])),
                 decode_ledger={k: int(np.asarray(st.ledger[k][s]))
                                for k in TRAFFIC_KEYS},
                 prefilled_len=self._attempt_prompt_len(req),
                 prefix_used=ctx.prefix_used[s],
-                outcome=outcome, token_bytes=ctx.token_bytes,
+                outcome=outcome, token_bytes=ctx.token_bytes, **spec_kw,
             )
         ctx.finished.append(fin)
+        ctx.stats.record_spec(fin)
         if ctx.slot_pages[s]:
             ctx.pool.decref(ctx.slot_pages[s])
             ctx.slot_pages[s] = []
@@ -1020,7 +1296,9 @@ class Engine:
             outcome = self._terminal_outcome(req, now)
             if outcome:
                 ctx.sched.drop(req)
-                ctx.finished.append(self._finish_queued(req, outcome))
+                fin = self._finish_queued(req, outcome)
+                ctx.finished.append(fin)
+                ctx.stats.record_spec(fin)
                 setattr(ctx.stats, outcome,
                         getattr(ctx.stats, outcome) + 1)
                 events += 1
@@ -1057,7 +1335,9 @@ class Engine:
     def _stream_chunks(self, state: DecodeState, n_slots: int,
                        prefilling: Dict[int, list],
                        max_waves: Optional[int] = None,
-                       on_last=None) -> DecodeState:
+                       on_last=None,
+                       draft_prefilling: Optional[Dict[int, list]] = None,
+                       ) -> DecodeState:
         """Stream pending prompt chunks: one dispatch per wave, one
         C-token chunk per prefilling slot per wave. With ``max_waves``
         set the drain stops early and ``prefilling`` carries the
@@ -1065,19 +1345,35 @@ class Engine:
         long prompt interleaves with decode chunks instead of stalling
         every active slot until the whole queue's prompts are cached.
         ``on_last(state, slot, req)`` runs after the wave that completes
-        a slot's prompt (paged serving records the prefix there)."""
+        a slot's prompt (paged serving records the prefix there).
+
+        Speculative engines stream the DRAFT cache's prefill alongside
+        (``draft_prefilling``, one extra dispatch per wave). The draft
+        always starts at offset 0 — prefix sharing is a target-cache
+        concept — so it can lag a target that resumed mid-prompt; the
+        target's FINAL chunk is withheld until the draft catches up,
+        because the slot enters the speculative decode rounds the moment
+        its target prefill completes (``allocated`` is device state) and
+        a round against a partial draft cache would propose garbage."""
         step = self._get_chunk_step()
         c = self.prefill_chunk
+        dp = draft_prefilling if draft_prefilling is not None else {}
         waves = 0
-        while prefilling and (max_waves is None or waves < max_waves):
+        while ((prefilling or dp)
+               and (max_waves is None or waves < max_waves)):
             toks = np.zeros((n_slots, c), np.int32)
             n_valid = np.zeros((n_slots,), np.int32)
             is_first = np.zeros((n_slots,), bool)
             is_last = np.zeros((n_slots,), bool)
             max_new = np.zeros((n_slots,), np.int32)
             finished_slots = []
+            any_target = False
             for s, (req, off) in prefilling.items():
                 part = np.asarray(req.tokens, np.int32)[off : off + c]
+                if (s in dp and off + len(part) >= req.prompt_len
+                        and dp[s][1] + c < req.prompt_len):
+                    continue  # withhold the last chunk; draft still lags
+                any_target = True
                 toks[s, : len(part)] = part
                 n_valid[s] = len(part)
                 # paged slots were fully reset by the fused admit dispatch
@@ -1090,12 +1386,33 @@ class Engine:
                     finished_slots.append(s)
                 else:
                     prefilling[s] = [req, off + len(part)]
-            self.key, sub = jax.random.split(self.key)
-            state = step(
-                self.params, state, jnp.asarray(toks), jnp.asarray(n_valid),
-                jnp.asarray(is_first), jnp.asarray(is_last),
-                jnp.asarray(max_new), sub,
-            )
+            if dp:
+                dtoks = np.zeros((n_slots, c), np.int32)
+                dn_valid = np.zeros((n_slots,), np.int32)
+                d_first = np.zeros((n_slots,), bool)
+                d_done = []
+                for s, (req, doff) in dp.items():
+                    part = np.asarray(req.tokens, np.int32)[doff : doff + c]
+                    dtoks[s, : len(part)] = part
+                    dn_valid[s] = len(part)
+                    d_first[s] = doff == 0
+                    if doff + len(part) >= req.prompt_len:
+                        d_done.append(s)
+                    else:
+                        dp[s] = [req, doff + len(part)]
+                state = self._get_draft_chunk()(
+                    self.draft_params, state, jnp.asarray(dtoks),
+                    jnp.asarray(dn_valid), jnp.asarray(d_first),
+                )
+                for s in d_done:
+                    dp.pop(s)
+            if any_target:
+                self.key, sub = jax.random.split(self.key)
+                state = step(
+                    self.params, state, jnp.asarray(toks),
+                    jnp.asarray(n_valid), jnp.asarray(is_first),
+                    jnp.asarray(is_last), jnp.asarray(max_new), sub,
+                )
             waves += 1
             for s in finished_slots:
                 req, _ = prefilling.pop(s)
@@ -1186,8 +1503,9 @@ class Engine:
                 # pool will eventually complete (the strongest claim can
                 # reclaim every other page); one that cannot fit alone
                 # can never be served and must be refused up front
-                peak = -(-max(min(need + r.max_new_tokens, self.max_len)
-                              - self.hot_cap, 0) // self._page_size)
+                peak = pages_needed(
+                    min(need + r.max_new_tokens, self.max_len),
+                    self.hot_cap, self._page_size)
                 if peak > self._pool_pages(n_slots):
                     raise ValueError(
                         f"request {r.rid}: needs {peak} cold pages at its "
@@ -1211,7 +1529,8 @@ class Engine:
                 finished.append(self._finish_queued(r, "rejected"))
 
         state = self._init_state(n_slots, out_cap)
-        step = self._get_step(out_cap, stop_token)
+        step = (self._get_spec_step(out_cap, stop_token) if self.spec
+                else self._get_step(out_cap, stop_token))
         ctx = _ServeCtx(
             state=state,
             sched=sched,
@@ -1234,8 +1553,11 @@ class Engine:
             # cached
             prefilling={},
             slot_pages=[[] for _ in range(n_slots)],
+            spec=self.spec,
+            hot_cap=self.hot_cap,
         )
         if self.paged:
+            ctx.page_size = self._page_size
             ctx.pool = PagePool(self._pool_pages(n_slots))
             ctx.ptree = PrefixCache(ctx.pool, self.hot_cap, self._page_size)
             ctx.host_table = np.zeros((n_slots, self._pps), np.int32)
@@ -1264,10 +1586,19 @@ class Engine:
                     on_last = lambda st, s, r: self._record_prefix(  # noqa: E731
                         st, s, r, ctx.ptree, ctx.host_table
                     )
-                progress |= bool(ctx.prefilling)
+                if self.spec:
+                    # every freshly admitted slot also prefills the draft
+                    # cache, always from offset 0 (the draft never shares
+                    # prefixes — it is private per-slot scratch)
+                    for s, (req, _off) in ctx.prefilling.items():
+                        if s not in ctx.draft_prefilling:
+                            ctx.draft_prefilling[s] = [req, 0]
+                progress |= bool(ctx.prefilling) or bool(ctx.draft_prefilling)
                 ctx.state = self._stream_chunks(
                     ctx.state, n_slots, ctx.prefilling,
                     max_waves=chunk, on_last=on_last,
+                    draft_prefilling=(ctx.draft_prefilling
+                                      if self.spec else None),
                 )
             else:
                 while True:
@@ -1281,7 +1612,11 @@ class Engine:
                     progress = True
             # -- fund mid-decode cold growth (may preempt) -------------
             if self.paged:
-                self._ensure_pages(ctx, chunk)
+                # a speculative round transiently appends up to K rows
+                # before rollback, so fund the worst-case advance — the
+                # trailing decref below returns what rollback strands
+                self._ensure_pages(
+                    ctx, chunk * self.spec_k if self.spec else chunk)
             # -- decode chunk: no host syncs inside --------------------
             # clip the chunk so no dispatch runs past the earliest
             # budget-exhaustion among decoding slots (those steps would be
@@ -1291,17 +1626,51 @@ class Engine:
             # if every decoding slot has exhausted its budget mirror (e.g.
             # max_new_tokens=0 admissions) skip straight to harvest
             decoding = [
-                s for s in sched.active_slots() if s not in ctx.prefilling
+                s for s in sched.active_slots()
+                if s not in ctx.prefilling and s not in ctx.draft_prefilling
             ]
             budgets = [ctx.remaining[s] for s in decoding
                        if ctx.remaining[s] > 0]
             n_steps = min([chunk] + budgets) if budgets else 0
             for _ in range(n_steps):
-                ctx.state = step(self.params, ctx.state)
-            for s in decoding:
-                ctx.remaining[s] = max(ctx.remaining[s] - n_steps, 0)
-                ctx.seq_mirror[s] = min(
-                    ctx.seq_mirror[s] + n_steps, self.max_len)
+                ctx.state = (step(self.params, self.draft_params, ctx.state)
+                             if self.spec else step(self.params, ctx.state))
+            if self.spec and n_steps:
+                # a speculative round emits a data-dependent 1..K tokens,
+                # so the deterministic host mirrors no longer hold —
+                # refresh them from the device at the sync point (the
+                # harvest below reads `done` anyway), then return the
+                # pages the rollback stranded past each slot's real
+                # length so pool occupancy tracks acceptance, not the
+                # funded worst case
+                n_gen_dev = np.asarray(ctx.state.n_gen)
+                seq_dev = np.asarray(ctx.state.seq_len)
+                for s in decoding:
+                    req = sched.slot_req[s]
+                    if req is None:
+                        continue
+                    ctx.remaining[s] = max(
+                        int(req.max_new_tokens) - int(n_gen_dev[s]), 0)
+                    ctx.seq_mirror[s] = int(seq_dev[s])
+                    if not self.paged or not ctx.slot_pages[s]:
+                        continue
+                    keep = pages_needed(
+                        ctx.seq_mirror[s], self.hot_cap, self._page_size)
+                    extra = ctx.slot_pages[s][keep:]
+                    if extra:
+                        ctx.pool.decref(extra)
+                        del ctx.slot_pages[s][keep:]
+                        # unused table entries must hold a VALID page
+                        # index (PagedKVCache convention); the device
+                        # copy may keep stale entries — safe, because
+                        # any row a future round writes there is re-
+                        # funded and re-installed by _ensure_pages first
+                        ctx.host_table[s, keep:] = 0
+            else:
+                for s in decoding:
+                    ctx.remaining[s] = max(ctx.remaining[s] - n_steps, 0)
+                    ctx.seq_mirror[s] = min(
+                        ctx.seq_mirror[s] + n_steps, self.max_len)
             progress |= n_steps > 0
             # -- sync point: harvest finished slots --------------------
             # (the slot table mirrors `allocated`, so only the small
@@ -1315,14 +1684,25 @@ class Engine:
                 out = np.asarray(ctx.state.out)
                 ledger = {k: np.asarray(ctx.state.ledger[k])
                           for k in TRAFFIC_KEYS}
+                drafted_dev = (np.asarray(ctx.state.drafted)
+                               if self.spec else None)
+                accepted_dev = (np.asarray(ctx.state.accepted)
+                                if self.spec else None)
                 for s in ripe:
                     req = sched.retire(s)
-                    finished.append(self._build_finished(
+                    spec_kw = (
+                        dict(drafted=int(drafted_dev[s]),
+                             accepted=int(accepted_dev[s]))
+                        if self.spec else {}
+                    )
+                    fin = self._build_finished(
                         req, out[s, : n_gen[s]].copy(), int(seq_len[s]),
                         {k: ledger[k][s] for k in TRAFFIC_KEYS},
                         self._attempt_prompt_len(req), ctx.prefix_used[s],
-                        "finished", ctx.token_bytes,
-                    ))
+                        "finished", ctx.token_bytes, **spec_kw,
+                    )
+                    finished.append(fin)
+                    stats.record_spec(fin)
                     self._cancel_requested.discard(req.rid)
                     ctx.prefix_used[s] = 0
                     ctx.remaining[s] = 0

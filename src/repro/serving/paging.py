@@ -47,6 +47,15 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+def pages_needed(length: int, hot_cap: int, page_size: int) -> int:
+    """Cold pages a slot of ``length`` tokens occupies: the hot tier
+    absorbs the first ``hot_cap`` rows, the rest rounds up to whole
+    pages. The engine's growth funding, the speculative trailing-decref
+    and the invariant checker's occupancy audit must all agree on this
+    arithmetic — one definition, three call sites."""
+    return -(-max(length - hot_cap, 0) // page_size)
+
+
 class PagePoolError(RuntimeError):
     """Refcount-protocol violation (or an unservable allocation): carries
     the page id and its count so the report survives ``python -O`` and

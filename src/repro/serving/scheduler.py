@@ -100,6 +100,11 @@ class Request:
     orig_prompt_len: Optional[int] = None  # set when emitted tokens fold in
     carry_traffic: Optional[Dict[str, int]] = None  # bytes, prior attempts
     carry_reused: int = 0  # prefix tokens reused by prior attempts
+    # speculative-decoding ledger of prior attempts (draft proposals
+    # scored / accepted before a preemption), folded into the terminal
+    # FinishedRequest so acceptance accounting survives eviction
+    carry_drafted: int = 0
+    carry_accepted: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -150,6 +155,21 @@ class FinishedRequest:
     prefix_tokens_reused: int = 0
     outcome: str = "finished"
     n_preemptions: int = 0
+    # speculative decoding (Engine(spec_k=K)): draft proposals the
+    # verifier scored for this request, and how many it accepted. Every
+    # round emits 1 + accepted tokens, so the per-request identity
+    # ``len(tokens) == accepted + rounds`` reconciles the ledger exactly
+    # (asserted in tests/test_speculative.py); both stay 0 on
+    # non-speculative engines.
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the target confirmed (0.0 when
+        nothing was drafted — non-speculative runs, empty generations)."""
+        return (self.accepted_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
 
     @property
     def external_reduction(self) -> float:

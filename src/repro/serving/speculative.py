@@ -1,0 +1,129 @@
+"""Draft-verify speculative decoding: acceptance rule + draft config.
+
+The serving engine (``serving/engine.py``, ``Engine(draft_cfg=...,
+draft_params=..., spec_k=K)``) decodes K tokens per dispatch round:
+
+  1. **draft** — a small ternary model proposes K-1 greedy continuations
+     of the slot's pending token (K cheap ``decode_step`` calls against
+     the slot's private draft KV cache),
+  2. **verify** — the target model scores the whole K-token chunk in ONE
+     fixed-shape ``transformer.spec_verify_chunk`` dispatch against its
+     live cache (the chunked-prefill machinery; no new kernel), without
+     appending,
+  3. **accept** — :func:`longest_accepted_prefix` below keeps the
+     longest prefix the target itself would have produced, then the
+     engine commits exactly that many KV rows (linear layouts commit
+     the full chunk and roll back via ``kv_cache.truncate``; ring
+     layouts commit only the accepted rows).
+
+Greedy speculation is *output-invariant*: every emitted token is the
+target model's own argmax — the draft only decides how many of them
+land per round — so speculative greedy decode is bit-identical to the
+sequential loop for every accept/reject mix (asserted end-to-end in
+tests/test_speculative.py). Temperature sampling needs rejection
+sampling to keep the target distribution; that path is stubbed
+(:func:`rejection_sample`) and the engine refuses the combination.
+
+Why a ternary draft is nearly free (ROADMAP / TOM, ROMA): the draft's
+packed weights are resident on-die next to the target's, so K draft
+steps add no weight traffic — the classic speculation bandwidth cost
+(stream the draft from DRAM) does not exist in the BitROM deployment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def longest_accepted_prefix(
+    chunk: jax.Array,  # (slots, K) int32 — pending token ‖ draft proposals
+    greedy: jax.Array,  # (slots, K) int32 — target argmax after chunk[:, i]
+    chunk_valid: jax.Array,  # (slots,) int32 — valid chunk rows (<= K)
+    stop_token: Optional[int] = None,
+    force_reject: bool = False,
+) -> jax.Array:
+    """Vectorized accept rule: tokens to emit this round, (slots,) int32
+    in ``[1, chunk_valid]`` (0 where ``chunk_valid`` is 0).
+
+    ``chunk[:, 0]`` is the slot's pending token — already sampled by the
+    target, so it always emits (speculation never yields less than one
+    token per round). Proposal ``chunk[:, i]`` (i >= 1) is accepted iff
+    every earlier proposal was accepted and it equals ``greedy[:, i-1]``
+    — the token the sequential loop would have sampled next. The count
+    is ``1 + sum(cumprod(match))``: pure vectorized ops, no per-slot
+    control flow, XLA-safe inside the jitted round.
+
+    Two clips keep parity with the sequential loop's stop handling:
+    the emitted count never passes the first position whose *target*
+    continuation is the stop token (the sequential loop retires the slot
+    there, leaving the stop token pending and unemitted — even if the
+    draft correctly predicted it), and padding rows past ``chunk_valid``
+    never match. ``force_reject=True`` statically folds every proposal
+    to rejected — the engine's ``spec_force="reject"`` knob, which makes
+    the maximal-rollback path deterministic for CI.
+    """
+    k = chunk.shape[1]
+    n_valid = chunk_valid.astype(jnp.int32)
+    if k > 1 and not force_reject:
+        i = jnp.arange(1, k, dtype=jnp.int32)[None]  # (1, K-1)
+        match = (chunk[:, 1:] == greedy[:, :-1]) & (i < n_valid[:, None])
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    else:
+        n_acc = jnp.zeros(chunk.shape[:1], jnp.int32)
+    n_emit = jnp.minimum(1 + n_acc, jnp.maximum(n_valid, 1))
+    if stop_token is not None:
+        j = jnp.arange(k, dtype=jnp.int32)[None]
+        is_stop = (greedy == jnp.int32(stop_token)) & (j < n_valid[:, None])
+        first_stop = jnp.where(
+            is_stop.any(axis=1),
+            jnp.argmax(is_stop, axis=1).astype(jnp.int32),
+            jnp.int32(k),
+        )
+        n_emit = jnp.minimum(n_emit, first_stop + 1)
+    return jnp.where(n_valid > 0, n_emit, 0)
+
+
+def make_draft_config(target: ModelConfig, n_layers: int = 2,
+                      d_model: int = 64) -> ModelConfig:
+    """Derive a draft config from any target: a small dense full-
+    attention model sharing the target's vocabulary (the only hard
+    coupling — draft proposals are token ids scored by the target).
+    Everything speculative about the draft is architectural freedom;
+    greedy outputs do not depend on it, only acceptance rates do.
+    Real deployments register a trained draft (``falcon3-draft`` in
+    ``configs/falcon3_1b.py``); this helper is for tests/benches that
+    need a vocab-matched draft for arbitrary smoke targets."""
+    return ModelConfig(
+        name=target.name + "-draft",
+        family="dense",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=2 * d_model,
+        vocab_size=target.vocab_size,
+        rope_theta=target.rope_theta,
+        tie_embeddings=True,
+        bitnet=dataclasses.replace(target.bitnet, lora_rank=0),
+        source="derived draft (speculative decoding)",
+    )
+
+
+def rejection_sample(*args, **kwargs):
+    """Temperature-sampled speculation (Leviathan-style rejection
+    sampling over draft vs target probabilities) is not implemented:
+    the engine's greedy acceptance emits target-argmax tokens only.
+    Stubbed so the API surface names the missing piece; the engine
+    raises before any sampling engine-side state exists."""
+    raise NotImplementedError(
+        "speculative decoding is greedy-only: temperature speculation "
+        "needs draft/target rejection sampling (see docs/serving.md, "
+        "'Speculative decoding')"
+    )

@@ -1,0 +1,171 @@
+"""Cross-config serving conformance matrix.
+
+One behavioural contract, every config in ``repro.configs``: the serving
+engine must either serve a config correctly or refuse it loudly — never
+a third thing. Concretely, for each registered config (smoke-sized):
+
+  * **decoder families** (dense / MoE / SSM / hybrid / VLM) generate
+    deterministically through ``Engine.generate`` — same prompts, same
+    tokens, run over run;
+  * the **encoder-only family** (audio) is refused with a ``ValueError``
+    naming the family — it has no decode phase to serve;
+  * **speculative decoding** partitions the registry the same way
+    chunked prefill does: chunk-capable attention families (dense/MoE
+    with full or sliding-window attention, no frontend) run draft-verify
+    rounds and stay bit-identical to their own non-speculative greedy
+    output; everything else (MLA, SSM, hybrid, VLM) falls back to
+    non-speculative decode with an asserted ``RuntimeWarning`` and then
+    serves exactly as before;
+  * **paged + speculative** composes on the full-attention subset, with
+    the refcount/rollback invariants checked every loop iteration.
+
+The matrix is in the full-CI lane (``slow`` marker): it compiles a pair
+of engines per config, which is minutes of work, not seconds.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_configs
+from repro.models import transformer as T
+from repro.serving import speculative as spec_lib
+from repro.serving.chaos import check_serving_invariants
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request
+
+pytestmark = pytest.mark.slow
+
+HOT, ML, NEW = 4, 64, 8
+
+ALL = list_configs()
+
+
+def _chunk_capable(cfg):
+    # mirror of Engine._chunked_capable, kept separate on purpose: if the
+    # engine's notion of capability drifts, the matrix below fails on the
+    # config that moved rather than silently re-sorting itself
+    return (cfg.family in ("dense", "moe")
+            and cfg.attn_type in ("full", "swa")
+            and cfg.frontend == "none")
+
+
+AUDIO = [n for n in ALL if get_smoke_config(n).family == "audio"]
+SPEC_OK = [n for n in ALL if _chunk_capable(get_smoke_config(n))]
+FALLBACK = [n for n in ALL
+            if n not in AUDIO and not _chunk_capable(get_smoke_config(n))]
+PAGED_OK = [n for n in SPEC_OK if get_smoke_config(n).attn_type == "full"]
+
+_setup_cache = {}
+
+
+def _setup(name):
+    if name not in _setup_cache:
+        cfg = get_smoke_config(name)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        _setup_cache[name] = (cfg, params)
+    return _setup_cache[name]
+
+
+def _inputs(cfg, b=2, n=8):
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (b, n), 0, cfg.vocab_size)
+    patches = None
+    if cfg.family == "vlm":
+        patches = np.zeros((b, cfg.n_patches, cfg.frontend_dim), np.float32)
+    return prompts, patches
+
+
+def test_registry_partition_is_total():
+    """Every config lands in exactly one serving category — a new config
+    that fits none of them must extend this matrix, not skip it."""
+    assert sorted(AUDIO + SPEC_OK + FALLBACK) == sorted(ALL)
+    assert AUDIO  # the encoder-refusal path stays exercised
+    assert "mamba2-130m" in FALLBACK and "zamba2-7b" in FALLBACK
+    assert "falcon3-draft" in SPEC_OK  # the draft model serves standalone
+
+
+@pytest.mark.parametrize("name", [n for n in ALL if n not in AUDIO])
+def test_generate_deterministic(name):
+    cfg, params = _setup(name)
+    prompts, patches = _inputs(cfg)
+    eng = Engine(cfg, params, hot_cap=HOT, max_len=ML)
+    a = eng.generate(prompts, max_new_tokens=NEW, patches=patches)
+    b = eng.generate(prompts, max_new_tokens=NEW, patches=patches)
+    assert a.tokens.shape == (2, NEW)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+
+
+@pytest.mark.parametrize("name", AUDIO)
+def test_encoder_only_is_refused(name):
+    cfg, params = _setup(name)
+    prompts, _ = _inputs(cfg)
+    eng = Engine(cfg, params, hot_cap=HOT, max_len=ML)
+    with pytest.raises(ValueError, match=cfg.family):
+        eng.generate(prompts, max_new_tokens=NEW)
+
+
+@pytest.mark.parametrize("name", SPEC_OK)
+def test_speculative_parity(name):
+    """Chunk-capable configs: draft-verify greedy == sequential greedy,
+    token for token."""
+    cfg, params = _setup(name)
+    dcfg = spec_lib.make_draft_config(cfg)
+    dparams = T.init_params(jax.random.PRNGKey(7), dcfg)
+    prompts, _ = _inputs(cfg)
+    base = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4)
+    ref = base.generate(prompts, max_new_tokens=NEW)
+    eng = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4,
+                 draft_cfg=dcfg, draft_params=dparams, spec_k=4)
+    assert eng.spec
+    res = eng.generate(prompts, max_new_tokens=NEW)
+    np.testing.assert_array_equal(
+        np.asarray(ref.tokens), np.asarray(res.tokens))
+    st = eng.last_stats
+    assert st.accepted_tokens <= st.drafted_tokens
+    assert st.drafted_tokens > 0
+
+
+@pytest.mark.parametrize("name", FALLBACK)
+def test_speculative_fallback_warns_then_serves(name):
+    """MLA / SSM / hybrid / VLM configs cannot run the chunked verify
+    dispatch: the engine must say so (RuntimeWarning) and then serve
+    identically to a plain engine — never crash, never go silent."""
+    cfg, params = _setup(name)
+    dcfg = spec_lib.make_draft_config(cfg)
+    dparams = T.init_params(jax.random.PRNGKey(7), dcfg)
+    prompts, patches = _inputs(cfg)
+    plain = Engine(cfg, params, hot_cap=HOT, max_len=ML)
+    ref = plain.generate(prompts, max_new_tokens=NEW, patches=patches)
+    with pytest.warns(RuntimeWarning, match="falls back"):
+        eng = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4,
+                     draft_cfg=dcfg, draft_params=dparams, spec_k=4)
+    assert not eng.spec
+    res = eng.generate(prompts, max_new_tokens=NEW, patches=patches)
+    np.testing.assert_array_equal(
+        np.asarray(ref.tokens), np.asarray(res.tokens))
+    assert eng.last_stats.drafted_tokens == 0
+
+
+@pytest.mark.parametrize("name", PAGED_OK)
+def test_paged_speculative_parity_with_invariants(name):
+    """Full-attention configs: speculation over the paged cold tier
+    matches contiguous non-speculative output, with the page-pool
+    refcount census (including the rollback occupancy check) green
+    after every loop iteration."""
+    cfg, params = _setup(name)
+    dcfg = spec_lib.make_draft_config(cfg)
+    dparams = T.init_params(jax.random.PRNGKey(7), dcfg)
+    prompts, _ = _inputs(cfg)
+    base = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4)
+    ref = np.asarray(base.generate(prompts, max_new_tokens=NEW).tokens)
+    eng = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4,
+                 paged=True, page_size=8,
+                 draft_cfg=dcfg, draft_params=dparams, spec_k=4)
+    reqs = [Request(i, np.asarray(prompts)[i], NEW) for i in range(2)]
+    fins = {f.rid: f for f in eng.serve(
+        reqs, slots=2, on_iteration=check_serving_invariants)}
+    for i in range(2):
+        np.testing.assert_array_equal(ref[i], fins[i].tokens)

@@ -1,0 +1,491 @@
+"""Speculative decoding: bit-exact greedy parity + rollback correctness.
+
+The speculative engine's contract (docs/serving.md, "Speculative
+decoding") is that the draft model can only change HOW FAST tokens are
+emitted, never WHICH tokens — every emitted token is the target's own
+argmax. These tests pin that end-to-end:
+
+  * **bit-exactness** across cache families (dense, MoE, SWA ring) and
+    layouts (contiguous, paged) for K in {1, 2, 4, 8}, against the
+    non-speculative engine's greedy output;
+  * the **degenerate mixes**: forced full-reject (``spec_force``, the
+    maximal-rollback path CI pins) and full-accept (draft == target);
+  * **rollback hygiene**: the paged refcount census
+    (``check_serving_invariants``) after every loop iteration, including
+    its speculation check — no page the rejected suffix transiently
+    occupied stays live;
+  * **accounting**: drafted/accepted ledgers reconcile exactly with the
+    emitted token counts, per request and in aggregate;
+  * the **control plane**: cancellation and preemption landing mid-
+    speculation (and mid-draft-prefill);
+  * a **property test** for ``kv_cache.truncate``: random
+    append/truncate/append sequences are indistinguishable from a
+    from-scratch rebuild of the surviving rows, on contiguous and paged
+    caches alike (hypothesis-driven when installed, fixed seeds always).
+"""
+
+import random
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.core import kv_cache
+from repro.models import transformer as T
+from repro.serving import speculative as spec_lib
+from repro.serving.chaos import check_serving_invariants
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request
+
+HOT, ML = 4, 64
+
+
+def _prompt(seed, n, vocab):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, vocab), np.int32
+    )
+
+
+def _setup(name):
+    cfg = get_smoke_config(name)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    dcfg = spec_lib.make_draft_config(cfg)
+    dparams = T.init_params(jax.random.PRNGKey(7), dcfg)
+    return cfg, params, dcfg, dparams
+
+
+@pytest.fixture(scope="module")
+def dense():
+    return _setup("falcon3-1b")
+
+
+@pytest.fixture(scope="module")
+def swa():
+    return _setup("mixtral-8x22b")  # smoke mixtral is the SWA-ring config
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _setup("gemma-7b")  # full-attention; mixtral covers MoE+SWA
+
+
+def _spec_engine(cfg, params, dcfg, dparams, k, paged=False, **kw):
+    kw.setdefault("hot_cap", HOT)
+    kw.setdefault("max_len", ML)
+    kw.setdefault("prefill_chunk", 4)
+    if paged:
+        kw.setdefault("page_size", 8)
+        kw["paged"] = True
+    return Engine(cfg, params, draft_cfg=dcfg, draft_params=dparams,
+                  spec_k=k, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance kernel (pure function)
+# ---------------------------------------------------------------------------
+
+
+def _lap(chunk, greedy, valid, **kw):
+    return np.asarray(spec_lib.longest_accepted_prefix(
+        jnp.asarray(chunk, jnp.int32), jnp.asarray(greedy, jnp.int32),
+        jnp.asarray(valid, jnp.int32), **kw))
+
+
+def test_acceptance_kernel_prefix_rule():
+    # chunk[0] always emits; proposal i accepted iff it equals the
+    # target's continuation of position i-1 AND everything before held
+    chunk = [[5, 7, 9, 4]]
+    greedy = [[7, 9, 1, 0]]  # 7 ok, 9 ok, 4 != 1 -> emit 3
+    assert _lap(chunk, greedy, [4]) == [3]
+    # first proposal already wrong: only the pending token emits
+    assert _lap(chunk, [[6, 9, 1, 0]], [4]) == [1]
+    # everything matches: whole chunk emits
+    assert _lap([[5, 7, 9, 4]], [[7, 9, 4, 2]], [4]) == [4]
+    # a hole does not recover even if later positions match again
+    assert _lap([[5, 7, 9, 4]], [[7, 0, 4, 2]], [4]) == [2]
+
+
+def test_acceptance_kernel_valid_and_reject():
+    chunk = [[5, 7, 9, 4]]
+    greedy = [[7, 9, 4, 2]]
+    assert _lap(chunk, greedy, [2]) == [2]  # clipped by chunk_valid
+    assert _lap(chunk, greedy, [1]) == [1]
+    assert _lap(chunk, greedy, [0]) == [0]  # inactive slot emits nothing
+    assert _lap(chunk, greedy, [4], force_reject=True) == [1]
+
+
+def test_acceptance_kernel_stop_clip():
+    # the sequential loop retires a slot the moment the TARGET samples
+    # the stop token: speculation must not emit past that position even
+    # when the draft predicted the stop correctly
+    chunk = [[5, 7, 9, 4]]
+    greedy = [[7, 9, 4, 2]]
+    assert _lap(chunk, greedy, [4], stop_token=9) == [2]
+    assert _lap(chunk, greedy, [4], stop_token=7) == [1]
+    assert _lap(chunk, greedy, [4], stop_token=2) == [4]
+    # stop past chunk_valid is invisible this round
+    assert _lap(chunk, greedy, [2], stop_token=4) == [2]
+
+
+# ---------------------------------------------------------------------------
+# bit-exact end-to-end parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["dense", "swa", "moe"])
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_bitexact_contiguous(arch, k, request):
+    """Speculative greedy == sequential greedy, token for token, for
+    every draft quality (a random draft gives a mixed accept/reject
+    stream) across the dense / MoE / SWA-ring cache families."""
+    cfg, params, dcfg, dparams = request.getfixturevalue(arch)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (3, 9), 0, cfg.vocab_size)
+    base = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4)
+    ref = np.asarray(base.generate(prompts, max_new_tokens=12).tokens)
+    eng = _spec_engine(cfg, params, dcfg, dparams, k)
+    assert eng.spec
+    res = eng.generate(prompts, max_new_tokens=12)
+    np.testing.assert_array_equal(ref, np.asarray(res.tokens))
+    st_ = eng.last_stats
+    assert st_.accepted_tokens <= st_.drafted_tokens
+    if k == 1:
+        assert st_.drafted_tokens == 0  # K=1 proposes nothing
+
+
+@pytest.mark.parametrize("k", [2, 8])
+def test_bitexact_paged_with_invariants(dense, k):
+    """Paged speculation: the commit-then-truncate rollback plus the
+    trailing-page decref leave the refcount protocol intact after EVERY
+    loop iteration, and the tokens still match the non-speculative run."""
+    cfg, params, dcfg, dparams = dense
+    prompts = np.stack([_prompt(20 + i, 9, cfg.vocab_size) for i in range(3)])
+    base = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4,
+                  paged=True, page_size=8)
+    ref = np.asarray(base.generate(jnp.asarray(prompts),
+                                   max_new_tokens=20).tokens)
+    eng = _spec_engine(cfg, params, dcfg, dparams, k, paged=True)
+    reqs = [Request(i, prompts[i], 20) for i in range(3)]
+    fins = {f.rid: f for f in eng.serve(
+        reqs, slots=3, on_iteration=check_serving_invariants)}
+    for i in range(3):
+        np.testing.assert_array_equal(ref[i], fins[i].tokens)
+
+
+def test_bitexact_with_stop_token(dense):
+    """Stop handling mid-chunk: a slot retires exactly where the
+    sequential loop would, with the stop token left pending/unemitted."""
+    cfg, params, dcfg, dparams = dense
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(3), (3, 8), 0, cfg.vocab_size)
+    base = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4)
+    free = np.asarray(base.generate(prompts, max_new_tokens=12).tokens)
+    # pick a token that actually occurs mid-stream so the clip matters
+    stop = int(free[0, 4])
+    ref = base.generate(prompts, max_new_tokens=12, stop_token=stop)
+    for k in (2, 4):
+        eng = _spec_engine(cfg, params, dcfg, dparams, k)
+        res = eng.generate(prompts, max_new_tokens=12, stop_token=stop)
+        np.testing.assert_array_equal(
+            np.asarray(ref.tokens), np.asarray(res.tokens))
+        assert ref.steps_per_row == res.steps_per_row
+
+
+# ---------------------------------------------------------------------------
+# degenerate accept mixes + accounting
+# ---------------------------------------------------------------------------
+
+
+def test_full_accept_and_ledger(dense):
+    """Draft == target accepts every proposal: each round emits
+    min(K, remaining) tokens, so the ledger is exactly predictable."""
+    cfg, params, _, _ = dense
+    k, new = 4, 14
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(5), (2, 9), 0, cfg.vocab_size)
+    base = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4)
+    ref = np.asarray(base.generate(prompts, max_new_tokens=new).tokens)
+    eng = _spec_engine(cfg, params, cfg, params, k)
+    reqs = [Request(i, np.asarray(prompts)[i], new) for i in range(2)]
+    fins = {f.rid: f for f in eng.serve(reqs, slots=2)}
+    rounds = -(-new // k)  # every round emits min(K, remaining)
+    for i in range(2):
+        f = fins[i]
+        np.testing.assert_array_equal(ref[i], f.tokens)
+        assert f.accepted_tokens == f.drafted_tokens == new - rounds
+        assert f.acceptance_rate == 1.0
+        # the speculation identity: emitted == accepted + rounds
+        assert len(f.tokens) == f.accepted_tokens + rounds
+    st_ = eng.last_stats
+    assert st_.drafted_tokens == sum(f.drafted_tokens for f in fins.values())
+    assert st_.accepted_tokens == sum(f.accepted_tokens for f in fins.values())
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_forced_full_reject(dense, paged):
+    """``spec_force="reject"`` statically rejects every proposal: each
+    round emits exactly one token through the maximal-rollback path —
+    deterministic worst case for CI — and outputs stay bit-exact."""
+    cfg, params, dcfg, dparams = dense
+    k, new = 4, 12
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(6), (2, 9), 0, cfg.vocab_size)
+    base = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4)
+    ref = np.asarray(base.generate(prompts, max_new_tokens=new).tokens)
+    eng = _spec_engine(cfg, params, dcfg, dparams, k, paged=paged,
+                       spec_force="reject")
+    reqs = [Request(i, np.asarray(prompts)[i], new) for i in range(2)]
+    fins = {f.rid: f for f in eng.serve(
+        reqs, slots=2,
+        on_iteration=check_serving_invariants if paged else None)}
+    # full reject: one round per token; round r drafts min(K, new-r) - 1
+    drafted = sum(min(k, new - r) - 1 for r in range(new))
+    for i in range(2):
+        np.testing.assert_array_equal(ref[i], fins[i].tokens)
+        assert fins[i].accepted_tokens == 0
+        assert fins[i].drafted_tokens == drafted
+        assert fins[i].acceptance_rate == 0.0
+
+
+def test_spec_step_compiles_once(dense):
+    """The draft-verify round is one cached compilation per (out_cap,
+    stop) — serving twice must not re-trace."""
+    cfg, params, dcfg, dparams = dense
+    eng = _spec_engine(cfg, params, dcfg, dparams, 4)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(8), (2, 6), 0, cfg.vocab_size)
+    eng.generate(prompts, max_new_tokens=6)
+    eng.generate(prompts, max_new_tokens=6)
+    assert len(eng._spec_step_fns) == 1
+    (fn,) = eng._spec_step_fns.values()
+    assert fn._cache_size() == 1
+    assert eng._draft_chunk_fn._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# control plane: cancel / preempt mid-speculation
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_mid_speculation(dense):
+    """A cancel landing between draft-verify rounds harvests a clean
+    prefix of the uncancelled output and a consistent ledger."""
+    cfg, params, dcfg, dparams = dense
+    prompts = np.stack([_prompt(40 + i, 8, cfg.vocab_size) for i in range(2)])
+    base = Engine(cfg, params, hot_cap=HOT, max_len=ML, prefill_chunk=4)
+    ref = np.asarray(base.generate(jnp.asarray(prompts),
+                                   max_new_tokens=20).tokens)
+    eng = _spec_engine(cfg, params, dcfg, dparams, 4)
+
+    def hook(ctx):
+        if ctx.iteration == 1:
+            eng.cancel(0)
+
+    reqs = [Request(i, prompts[i], 20) for i in range(2)]
+    fins = {f.rid: f for f in eng.serve(
+        reqs, slots=2, sync_every=2, on_iteration=hook)}
+    f0 = fins[0]
+    assert f0.outcome == "cancelled"
+    assert 0 < len(f0.tokens) < 20
+    np.testing.assert_array_equal(ref[0, : len(f0.tokens)], f0.tokens)
+    assert f0.accepted_tokens <= f0.drafted_tokens
+    assert fins[1].outcome == "finished"
+    np.testing.assert_array_equal(ref[1], fins[1].tokens)
+    assert eng.last_stats.cancelled == 1
+
+
+def test_cancel_mid_draft_prefill(dense):
+    """A cancel landing while the DRAFT cache is still streaming its
+    prompt pops both prefill trackers and leaves the engine serving."""
+    cfg, params, dcfg, dparams = dense
+    long, short = _prompt(50, 24, cfg.vocab_size), _prompt(51, 6, cfg.vocab_size)
+    eng = _spec_engine(cfg, params, dcfg, dparams, 4)
+
+    def hook(ctx):
+        if ctx.iteration == 1:
+            eng.cancel(0)
+
+    fins = {f.rid: f for f in eng.serve(
+        [Request(0, long, 8), Request(1, short, 8)],
+        slots=2, sync_every=1, on_iteration=hook)}
+    assert fins[0].outcome == "cancelled"
+    assert fins[1].outcome == "finished" and len(fins[1].tokens) == 8
+    ctx = eng._last_ctx
+    assert not ctx.prefilling and not ctx.draft_prefilling
+
+
+def test_preemption_mid_speculation_bit_exact(dense):
+    """Page pressure preempting a slot between speculative rounds:
+    recompute-from-prefix (target AND draft cache rebuilt) keeps greedy
+    output bit-identical, carries the drafted/accepted counters across
+    attempts, and the refcount census holds every iteration."""
+    cfg, params, dcfg, dparams = dense
+    reqs = [Request(i, _prompt(60 + i, 10 + i, cfg.vocab_size), 16)
+            for i in range(4)]
+    big = _spec_engine(cfg, params, dcfg, dparams, 4, paged=True)
+    fin_big = {f.rid: f for f in big.serve(
+        [Request(r.rid, r.tokens, r.max_new_tokens) for r in reqs],
+        slots=2, sync_every=4)}
+    assert big.last_stats.preemptions == 0
+    small = _spec_engine(cfg, params, dcfg, dparams, 4, paged=True,
+                         n_pages=6)
+    fins = {f.rid: f for f in small.serve(
+        [Request(r.rid, r.tokens, r.max_new_tokens) for r in reqs],
+        slots=2, sync_every=4, on_iteration=check_serving_invariants)}
+    assert small.last_stats.preemptions > 0
+    for rid, f in fins.items():
+        assert f.outcome == "finished"
+        np.testing.assert_array_equal(fin_big[rid].tokens, f.tokens)
+        assert f.accepted_tokens <= f.drafted_tokens
+    st_ = small.last_stats
+    assert st_.drafted_tokens == sum(f.drafted_tokens for f in fins.values())
+    assert st_.accepted_tokens == sum(f.accepted_tokens for f in fins.values())
+
+
+# ---------------------------------------------------------------------------
+# construction gates
+# ---------------------------------------------------------------------------
+
+
+def test_incapable_arch_falls_back_with_warning():
+    cfg = get_smoke_config("mamba2-130m")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    dcfg = spec_lib.make_draft_config(cfg)
+    dparams = T.init_params(jax.random.PRNGKey(7), dcfg)
+    with pytest.warns(RuntimeWarning, match="falls back"):
+        eng = Engine(cfg, params, hot_cap=HOT, max_len=48,
+                     draft_cfg=dcfg, draft_params=dparams, spec_k=4)
+    assert not eng.spec
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab_size)
+    res = eng.generate(prompts, max_new_tokens=4)
+    assert res.tokens.shape == (2, 4)
+    assert eng.last_stats.drafted_tokens == 0
+
+
+def test_construction_gates(dense):
+    cfg, params, dcfg, dparams = dense
+    with pytest.raises(NotImplementedError, match="greedy-only"):
+        Engine(cfg, params, prefill_chunk=4, sample="temperature",
+               draft_cfg=dcfg, draft_params=dparams, spec_k=4)
+    import dataclasses
+    bad = dataclasses.replace(dcfg, vocab_size=cfg.vocab_size + 1)
+    with pytest.raises(ValueError, match="vocab"):
+        Engine(cfg, params, prefill_chunk=4, draft_cfg=bad,
+               draft_params=dparams, spec_k=4)
+    with pytest.raises(ValueError, match="draft_cfg"):
+        Engine(cfg, params, prefill_chunk=4, draft_params=dparams, spec_k=4)
+    with pytest.raises(ValueError, match="spec_force"):
+        Engine(cfg, params, prefill_chunk=4, draft_cfg=dcfg,
+               draft_params=dparams, spec_k=4, spec_force="accept")
+
+
+def test_rejection_sampling_stub_names_the_gap():
+    with pytest.raises(NotImplementedError, match="rejection"):
+        spec_lib.rejection_sample()
+
+
+# ---------------------------------------------------------------------------
+# kv_cache.truncate: property test (hypothesis + seeded fallback)
+# ---------------------------------------------------------------------------
+
+
+def _cache_rows(cache, s, n):
+    """Slot ``s``'s first ``n`` effective KV rows, hot then cold."""
+    t = (kv_cache.as_tiered(cache)
+         if isinstance(cache, kv_cache.PagedKVCache) else cache)
+    k = np.concatenate([np.asarray(t.hot_k[s]), np.asarray(t.cold_k[s])])
+    v = np.concatenate([np.asarray(t.hot_v[s]), np.asarray(t.cold_v[s])])
+    return k[:n], v[:n]
+
+
+def _run_truncate_fuzz(seed, paged):
+    """Random append/truncate/append sequence vs a from-scratch rebuild:
+    the cache's effective rows (everything reads are allowed to see)
+    must be indistinguishable after every op, and a final rebuild from
+    the surviving history must match row for row — i.e. truncate is
+    exactly 'forget the suffix', nothing more."""
+    rng = random.Random(seed)
+    b, hot, cold, ps = 2, 3, 12, 4
+    kv_shape = (2,)
+    cap = hot + cold
+
+    def fresh():
+        if paged:
+            return kv_cache.init_paged_cache(
+                b, hot, cold, kv_shape, jnp.float32, page_size=ps)
+        return kv_cache.init_cache(b, hot, cold, kv_shape, jnp.float32)
+
+    cache = fresh()
+    hist = [[] for _ in range(b)]  # python mirror of each slot's rows
+    stamp = 1.0
+
+    def check():
+        assert list(np.asarray(cache.lengths)) == [len(h) for h in hist]
+        for s in range(b):
+            if hist[s]:
+                k, v = _cache_rows(cache, s, len(hist[s]))
+                want = np.stack([r[0] for r in hist[s]])
+                np.testing.assert_array_equal(k, want)
+                np.testing.assert_array_equal(
+                    v, np.stack([r[1] for r in hist[s]]))
+
+    for _ in range(rng.randrange(5, 14)):
+        if rng.random() < 0.55:
+            t = rng.randrange(1, 5)
+            valid = np.zeros((b,), np.int32)
+            k_new = np.zeros((b, t) + kv_shape, np.float32)
+            v_new = np.zeros((b, t) + kv_shape, np.float32)
+            for s in range(b):
+                valid[s] = rng.randrange(0, min(t, cap - len(hist[s])) + 1)
+                for i in range(int(valid[s])):
+                    k_new[s, i] = stamp
+                    v_new[s, i] = -stamp
+                    hist[s].append((k_new[s, i].copy(), v_new[s, i].copy()))
+                    stamp += 1.0
+            cache = kv_cache.append(
+                cache, jnp.asarray(k_new), jnp.asarray(v_new),
+                valid=jnp.asarray(valid))
+        else:
+            new_len = np.asarray(
+                [rng.randrange(0, len(h) + 1) for h in hist], np.int32)
+            cache = kv_cache.truncate(cache, jnp.asarray(new_len))
+            for s in range(b):
+                hist[s] = hist[s][: new_len[s]]
+        check()
+
+    # from-scratch rebuild of the surviving history == the fuzzed cache
+    rebuilt = fresh()
+    t_max = max((len(h) for h in hist), default=0)
+    if t_max:
+        k_new = np.zeros((b, t_max) + kv_shape, np.float32)
+        v_new = np.zeros((b, t_max) + kv_shape, np.float32)
+        for s in range(b):
+            for i, (kr, vr) in enumerate(hist[s]):
+                k_new[s, i], v_new[s, i] = kr, vr
+        rebuilt = kv_cache.append(
+            rebuilt, jnp.asarray(k_new), jnp.asarray(v_new),
+            valid=jnp.asarray([len(h) for h in hist], np.int32))
+    for s in range(b):
+        ka, va = _cache_rows(cache, s, len(hist[s]))
+        kb, vb = _cache_rows(rebuilt, s, len(hist[s]))
+        np.testing.assert_array_equal(ka, kb)
+        np.testing.assert_array_equal(va, vb)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_truncate_fuzz_seeded(seed, paged):
+    """Always-on fallback of the hypothesis property below."""
+    _run_truncate_fuzz(seed, paged)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30), paged=st.booleans())
+def test_truncate_fuzz_property(seed, paged):
+    _run_truncate_fuzz(seed, paged)

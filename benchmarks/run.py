@@ -14,8 +14,10 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   serving/* packed decode + DR traffic (measured), the
             continuous-batching vs lock-step throughput comparison,
             chunked vs grouped admission, prefix sharing, the overload
-            degradation sweep, and the speculative-decoding K x
-            draft-quality sweep (tokens per verify round + ledger)
+            degradation sweep, the speculative-decoding K x
+            draft-quality sweep (tokens per verify round + ledger), and
+            the router-failover replicas x kill-rate sweep (goodput +
+            migration ledger, bit-exactness asserted under kills)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--fast] [--only PREFIX]
                                               [--json [PATH]]
@@ -66,6 +68,7 @@ def main() -> None:
         ("serving/prefix", serving_bench.shared_prefix),
         ("serving/overload", serving_bench.overload),
         ("serving/speculative", serving_bench.speculative_sweep),
+        ("serving/router", serving_bench.router_failover),
     ]
     if not args.fast:
         sections.append(("fig6a", paper_tables.fig6a))

@@ -425,6 +425,88 @@ def speculative_sweep(slots: int = 2) -> list:
     return out
 
 
+def router_failover(slots: int = 2) -> list:
+    """Fault-tolerant fleet sweep: replicas × kill-rate → goodput and
+    the failover ledger.
+
+    The same burst is served by a faultless single engine (the oracle),
+    then by 2- and 3-replica fleets behind the router, each fleet once
+    quiet and once under seeded replica-kill chaos (the fleet-invariant
+    checker runs after every tick). Every cell asserts the hard failover
+    guarantees — every request reaches the ``finished`` terminal and its
+    greedy tokens are BIT-IDENTICAL to the oracle — and reports what
+    fault tolerance *cost*: cold/warm migrations, the recompute tokens
+    re-admission actually paid (summed from every session's
+    ``ServeStats``) vs the prefix-cache tokens it got back for free, and
+    router retries/restarts. Kills change throughput, never output.
+    """
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving import (FleetChaosConfig, FleetChaosInjector,
+                               LocalTransport, Replica, Router)
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke_config("falcon3-1b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(0, cfg.vocab_size, size=(int(p),)).astype(np.int32)
+               for p in (6, 9, 13, 8, 11, 7, 15, 10)]
+
+    def mk():
+        return [Request(rid=i, tokens=t.copy(), max_new_tokens=12)
+                for i, t in enumerate(prompts)]
+
+    def build():
+        # sync_every=2 keeps router ticks fine-grained, so the seeded
+        # kill schedule has real injection points mid-decode
+        return Engine(cfg, params, hot_cap=8, max_len=64, slots=slots,
+                      prefill_chunk=8, paged=True, page_size=8,
+                      sync_every=2)
+
+    ref_eng = build()
+    ref = {f.rid: f.tokens.tolist() for f in ref_eng.serve(mk(), slots=slots)}
+
+    out = []
+    for n_rep in (2, 3):
+        engines = [build() for _ in range(n_rep)]
+        # warm pass: compiles every engine's dispatch shapes untimed
+        Router([Replica(f"r{i}", e) for i, e in enumerate(engines)],
+               seed=0).serve(mk())
+        for kill_rate in (0.0, 0.08):
+            replicas = [Replica(f"r{i}", e) for i, e in enumerate(engines)]
+            # retry_limit is generous on purpose: wall-clock noise (jit
+            # pauses) can trigger straggler drains, and each drain
+            # re-dispatch spends an attempt — the budget must outlast
+            # benign migrations so only real pathology ever "fail"s
+            router = Router(replicas, seed=0, retry_limit=8,
+                            transport=LocalTransport())
+            chaos = FleetChaosInjector(FleetChaosConfig(
+                seed=3, kill_rate=kill_rate, max_kills=n_rep - 1))
+            t0 = time.perf_counter()
+            fin = {f.rid: f for f in router.serve(mk(), on_tick=chaos.on_tick)}
+            dt = time.perf_counter() - t0
+            for rid, want in ref.items():
+                assert fin[rid].outcome == "finished", (n_rep, kill_rate, rid)
+                assert fin[rid].tokens.tolist() == want, \
+                    f"tokens diverged: replicas={n_rep} kill={kill_rate} rid={rid}"
+            useful = sum(len(f.tokens) for f in fin.values())
+            reused = sum(f.prefix_tokens_reused for f in fin.values())
+            recompute = 0
+            for rep in replicas:
+                stats = rep.past_stats + ([rep.ctx.stats] if rep.ctx else [])
+                recompute += sum(s.recompute_tokens for s in stats)
+            st = router.stats
+            out.append(row(
+                f"serving/router_r{n_rep}_kill{kill_rate:g}",
+                dt / max(useful, 1) * 1e6,
+                f"tok_s={useful / dt:.1f} kills={len(chaos.kills)} "
+                f"cold={st.cold_migrations} warm={st.warm_migrations} "
+                f"imported={st.handoffs_imported} recompute={recompute}tok "
+                f"reused={reused}tok retries={st.retries} "
+                f"restarts={st.restarts} (bit-exact vs single engine)"))
+    return out
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     for r in serving_throughput():
@@ -436,6 +518,8 @@ def main() -> None:
     for r in overload():
         print(r)
     for r in speculative_sweep():
+        print(r)
+    for r in router_failover():
         print(r)
 
 

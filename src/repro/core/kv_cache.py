@@ -46,6 +46,7 @@ from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class TieredKVCache(NamedTuple):
@@ -1011,3 +1012,287 @@ def prompt_traffic_tokens_resumed(
     out["ext_read"] += reload_hot
     out["ondie_write"] += reload_hot
     return out
+
+
+# ---------------------------------------------------------------------------
+# Slot-state serialization (replica KV handoff; serving/replica.py)
+# ---------------------------------------------------------------------------
+#
+# Warm migration between engine replicas ships ONE slot's live KV rows in
+# the tier STORAGE dtype — with kv_fp8 on, the wire payload is fp8 (one
+# byte per element: 4x smaller than an f32 serialization, 2x smaller than
+# bf16). The frame carries a crc32 per `page_size` rows of every array
+# plus a whole-payload trailer, so a corrupted or torn handoff is
+# *detected* (typed `HandoffError`) and the receiver falls back to cold
+# recompute-from-prefix instead of serving wrong tokens.
+
+
+class HandoffError(RuntimeError):
+    """A serialized slot-state payload failed verification: truncated
+    ("torn") framing, unknown dtype, or a per-page / whole-payload
+    checksum mismatch. Receivers treat this as "no handoff" and recompute
+    the migrated request from its (prefix-cached) prompt — never import
+    unverified KV rows."""
+
+    def __init__(self, msg: str, key: Optional[str] = None,
+                 page: Optional[int] = None):
+        super().__init__(msg)
+        self.key = key
+        self.page = page
+
+
+_HANDOFF_MAGIC = b"KVH1"
+_HANDOFF_ARRAYS = ("hot_k", "hot_v", "cold_k", "cold_v")
+
+
+def _np_storage_dtype(name: str):
+    """Resolve a serialized dtype name back to a numpy dtype — including
+    the ml_dtypes extension types (bfloat16, float8_e4m3fn, ...) jax
+    stores KV tiers in."""
+    import ml_dtypes  # ships with jax
+
+    try:
+        return np.dtype(name)
+    except TypeError:
+        pass
+    ext = getattr(ml_dtypes, name, None)
+    if ext is None:
+        raise HandoffError(f"unknown storage dtype {name!r} in handoff")
+    return np.dtype(ext)
+
+
+def slot_state_length(cache) -> "np.ndarray":
+    """Per-slot cached length, collapsed over a stacked layer axis."""
+    lengths = np.asarray(cache.lengths)
+    return lengths.max(axis=0) if lengths.ndim == 2 else lengths
+
+
+def export_slot_state(cache, slot: int) -> dict:
+    """Host copy of one slot's live KV rows, in the tier storage dtype.
+
+    Works on tiered and paged caches, stacked (leading layer axis, the
+    engine's per-layer-stack layout) or not; the returned arrays always
+    carry a leading layer axis (size 1 when unstacked). ``hot_k/hot_v``
+    hold the first ``min(length, hot_cap)`` rows, ``cold_k/cold_v`` the
+    remaining ``length - hot_cap`` rows — for a paged cache they are
+    gathered through the slot's page-table row, so the export is
+    layout-independent: importing on either layout is bit-identical.
+    """
+    lengths = np.asarray(cache.lengths)
+    stacked = lengths.ndim == 2
+    length = int(lengths[:, slot].max()) if stacked else int(lengths[slot])
+    hot_k = cache.hot_k if stacked else cache.hot_k[None]
+    hot_v = cache.hot_v if stacked else cache.hot_v[None]
+    hc = hot_k.shape[2]
+    n_hot = min(length, hc)
+    n_cold = max(length - hc, 0)
+    state = {
+        "length": length,
+        "stacked": stacked,
+        "hot_k": np.asarray(hot_k[:, slot, :n_hot]),
+        "hot_v": np.asarray(hot_v[:, slot, :n_hot]),
+    }
+    if hasattr(cache, "page_table"):
+        pool_k = cache.pool_k if stacked else cache.pool_k[None]
+        pool_v = cache.pool_v if stacked else cache.pool_v[None]
+        ps = pool_k.shape[2]
+        table = np.asarray(cache.page_table)
+        row = table[0, slot] if stacked else table[slot]
+        kp = -(-n_cold // ps) if n_cold else 0
+        ids = np.asarray(row[:kp], np.int32)
+        ck = np.asarray(pool_k[:, ids])  # (layers, kp, ps, ...)
+        cv = np.asarray(pool_v[:, ids])
+        tail = ck.shape[3:]
+        state["cold_k"] = ck.reshape((ck.shape[0], kp * ps) + tail)[:, :n_cold]
+        state["cold_v"] = cv.reshape((cv.shape[0], kp * ps) + tail)[:, :n_cold]
+    else:
+        cold_k = cache.cold_k if stacked else cache.cold_k[None]
+        cold_v = cache.cold_v if stacked else cache.cold_v[None]
+        state["cold_k"] = np.asarray(cold_k[:, slot, :n_cold])
+        state["cold_v"] = np.asarray(cold_v[:, slot, :n_cold])
+    return state
+
+
+def import_slot_state(cache, slot: int, state: dict):
+    """Write an exported slot state into ``slot`` of ``cache`` (the
+    inverse of :func:`export_slot_state`; bit-identical round trip when
+    the dtypes match — enforced, a silent cast would corrupt fp8 bits).
+
+    For a paged cache the cold rows are scattered through the slot's
+    CURRENT page-table row, overwriting whole pages — the caller must
+    have pointed the row at exclusively-owned (refcount-1) pool pages
+    first, exactly like a fresh admission."""
+    lengths = np.asarray(cache.lengths)
+    stacked = lengths.ndim == 2
+    length = int(state["length"])
+    hot_k = cache.hot_k if stacked else cache.hot_k[None]
+    hc = hot_k.shape[2]
+    n_hot = min(length, hc)
+    n_cold = max(length - hc, 0)
+    for name in _HANDOFF_ARRAYS:
+        want = np.dtype(cache.hot_k.dtype.name)
+        got = np.dtype(state[name].dtype)
+        if want != got:
+            raise HandoffError(
+                f"handoff dtype {got} does not match cache storage dtype "
+                f"{want} for {name!r} — refusing to cast KV bits", key=name)
+    hk = jnp.asarray(state["hot_k"])
+    hv = jnp.asarray(state["hot_v"])
+    if stacked:
+        new_hk = cache.hot_k.at[:, slot, :n_hot].set(hk)
+        new_hv = cache.hot_v.at[:, slot, :n_hot].set(hv)
+        new_lengths = cache.lengths.at[:, slot].set(length)
+    else:
+        new_hk = cache.hot_k.at[slot, :n_hot].set(hk[0])
+        new_hv = cache.hot_v.at[slot, :n_hot].set(hv[0])
+        new_lengths = cache.lengths.at[slot].set(length)
+    kw = dict(hot_k=new_hk, hot_v=new_hv, lengths=new_lengths)
+    if hasattr(cache, "page_table"):
+        pool_k = cache.pool_k if stacked else cache.pool_k[None]
+        ps = pool_k.shape[2]
+        kp = -(-n_cold // ps) if n_cold else 0
+        if kp:
+            table = np.asarray(cache.page_table)
+            row = (table[0, slot] if stacked else table[slot])[:kp]
+            ck, cv = state["cold_k"], state["cold_v"]
+            tail = ck.shape[2:]
+            pad = kp * ps - n_cold
+            if pad:
+                z = np.zeros((ck.shape[0], pad) + tail, ck.dtype)
+                ck = np.concatenate([ck, z], axis=1)
+                cv = np.concatenate([cv, z], axis=1)
+            ck = jnp.asarray(ck.reshape((ck.shape[0], kp, ps) + tail))
+            cv = jnp.asarray(cv.reshape((cv.shape[0], kp, ps) + tail))
+            ids = jnp.asarray(row, jnp.int32)
+            if stacked:
+                kw["pool_k"] = cache.pool_k.at[:, ids].set(ck)
+                kw["pool_v"] = cache.pool_v.at[:, ids].set(cv)
+            else:
+                kw["pool_k"] = cache.pool_k.at[ids].set(ck[0])
+                kw["pool_v"] = cache.pool_v.at[ids].set(cv[0])
+    else:
+        ck = jnp.asarray(state["cold_k"])
+        cv = jnp.asarray(state["cold_v"])
+        if stacked:
+            kw["cold_k"] = cache.cold_k.at[:, slot, :n_cold].set(ck)
+            kw["cold_v"] = cache.cold_v.at[:, slot, :n_cold].set(cv)
+        else:
+            kw["cold_k"] = cache.cold_k.at[slot, :n_cold].set(ck[0])
+            kw["cold_v"] = cache.cold_v.at[slot, :n_cold].set(cv[0])
+    return cache._replace(**kw)
+
+
+def write_pool_pages(cache: PagedKVCache, page_ids,
+                     k_pages, v_pages) -> PagedKVCache:
+    """Write whole pages into the shared pool: ``k_pages/v_pages`` are
+    (layers, n, page_size, ...) rows for pool pages ``page_ids`` ((n,)
+    int32). The receiver-side primitive of warm migration — imported
+    cold pages land in freshly allocated pool pages, then the prefix
+    tree adopts them by id (Engine.import_handoff)."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    stacked = np.asarray(cache.lengths).ndim == 2
+    kp = jnp.asarray(k_pages)
+    vp = jnp.asarray(v_pages)
+    if stacked:
+        return cache._replace(pool_k=cache.pool_k.at[:, ids].set(kp),
+                              pool_v=cache.pool_v.at[:, ids].set(vp))
+    return cache._replace(pool_k=cache.pool_k.at[ids].set(kp[0]),
+                          pool_v=cache.pool_v.at[ids].set(vp[0]))
+
+
+def pack_slot_state(states: dict, page_size: int) -> bytes:
+    """Serialize ``{cache_key: export_slot_state(...)}`` into one framed
+    byte payload. Arrays ship in their storage dtype (fp8 stays one byte
+    per element on the wire) with a crc32 per ``page_size`` rows and a
+    whole-payload crc32 trailer; :func:`unpack_slot_state` verifies both
+    and raises :class:`HandoffError` on any mismatch."""
+    import struct
+    import zlib
+
+    ps = max(int(page_size), 1)
+    out = [_HANDOFF_MAGIC, struct.pack("<II", len(states), ps)]
+    for key in sorted(states):
+        st = states[key]
+        kb = key.encode()
+        out.append(struct.pack("<H", len(kb)))
+        out.append(kb)
+        out.append(struct.pack("<IB", int(st["length"]),
+                               1 if st["stacked"] else 0))
+        for name in _HANDOFF_ARRAYS:
+            arr = np.ascontiguousarray(st[name])
+            dt = arr.dtype.name.encode()
+            rows = arr.shape[1]
+            n_pages = -(-rows // ps) if rows else 0
+            out.append(struct.pack("<H", len(dt)))
+            out.append(dt)
+            out.append(struct.pack("<B", arr.ndim))
+            out.append(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            out.append(struct.pack("<I", n_pages))
+            for p in range(n_pages):
+                chunk = np.ascontiguousarray(
+                    arr[:, p * ps:(p + 1) * ps]).tobytes()
+                out.append(struct.pack("<II", len(chunk),
+                                       zlib.crc32(chunk) & 0xFFFFFFFF))
+                out.append(chunk)
+    body = b"".join(out)
+    return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
+
+
+def unpack_slot_state(buf: bytes) -> dict:
+    """Parse + verify a :func:`pack_slot_state` payload. Raises
+    :class:`HandoffError` on torn framing, unknown dtypes, a per-page
+    crc mismatch (``.key``/``.page`` name the damage) or a payload-crc
+    mismatch (header corruption) — never returns unverified rows."""
+    import struct
+    import zlib
+
+    try:
+        pos = [0]
+
+        def take(n):
+            a, b = pos[0], pos[0] + n
+            if b > len(buf):
+                raise HandoffError("torn handoff payload: truncated frame")
+            pos[0] = b
+            return buf[a:b]
+
+        if take(4) != _HANDOFF_MAGIC:
+            raise HandoffError("not a slot-state handoff payload (bad magic)")
+        n_entries, ps = struct.unpack("<II", take(8))
+        states = {}
+        for _ in range(n_entries):
+            klen, = struct.unpack("<H", take(2))
+            key = take(klen).decode()
+            length, stacked = struct.unpack("<IB", take(5))
+            st = {"length": int(length), "stacked": bool(stacked)}
+            for name in _HANDOFF_ARRAYS:
+                dlen, = struct.unpack("<H", take(2))
+                dtype = _np_storage_dtype(take(dlen).decode())
+                ndim, = struct.unpack("<B", take(1))
+                shape = struct.unpack(f"<{ndim}I", take(4 * ndim))
+                n_pages, = struct.unpack("<I", take(4))
+                arr = np.zeros(shape, dtype)
+                rows = shape[1] if ndim > 1 else 0
+                for p in range(n_pages):
+                    nbytes, crc = struct.unpack("<II", take(8))
+                    chunk = take(nbytes)
+                    if (zlib.crc32(chunk) & 0xFFFFFFFF) != crc:
+                        raise HandoffError(
+                            f"handoff page checksum mismatch: {key}.{name} "
+                            f"page {p}", key=key, page=p)
+                    a, b = p * ps, min((p + 1) * ps, rows)
+                    arr[:, a:b] = np.frombuffer(chunk, dtype).reshape(
+                        (shape[0], b - a) + tuple(shape[2:]))
+                st[name] = arr
+            states[key] = st
+        trailer, = struct.unpack("<I", take(4))
+        if (zlib.crc32(buf[:pos[0] - 4]) & 0xFFFFFFFF) != trailer:
+            raise HandoffError("handoff payload checksum mismatch "
+                               "(corrupted framing)")
+        if pos[0] != len(buf):
+            raise HandoffError("torn handoff payload: trailing bytes")
+        return states
+    except HandoffError:
+        raise
+    except Exception as e:  # struct.error, reshape/frombuffer mismatches
+        raise HandoffError(f"torn handoff payload: {e}") from None

@@ -111,6 +111,7 @@ class PreemptionGuard:
         self.requested = False
         if install_handlers:  # not in tests — pytest owns signals
             signal.signal(signal.SIGTERM, self._handler)
+            signal.signal(signal.SIGINT, self._handler)
 
     def _handler(self, signum, frame):  # pragma: no cover
         self.requested = True

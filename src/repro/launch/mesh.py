@@ -51,3 +51,21 @@ def axis_size(mesh, *names) -> int:
         if nm in mesh.axis_names:
             n *= mesh.shape[nm]
     return n
+
+
+def replica_devices(index: int, n_replicas: int, devices=None) -> tuple:
+    """Devices backing data-parallel serving replica ``index`` (0-based)
+    of ``n_replicas``: an even partition of the local device list in
+    enumeration order, so replicas never contend for a chip. On hosts
+    with fewer devices than replicas (CPU / single-chip dev boxes) the
+    replicas share round-robin — the serving router's correctness
+    depends only on the Transport boundary, never on physical isolation,
+    so the degenerate placement is still a faithful fleet."""
+    if not 0 <= index < n_replicas:
+        raise ValueError(
+            f"replica index {index} out of range [0, {n_replicas})")
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < n_replicas:
+        return (devs[index % len(devs)],)
+    per = len(devs) // n_replicas
+    return tuple(devs[index * per:(index + 1) * per])

@@ -15,11 +15,25 @@ Public API
 :class:`~repro.serving.scheduler.SlotScheduler`
     Host-side control plane: bounded claim-ordered queue, slot table,
     pad-free admission grouping, retirement, preemption victim policy.
+:class:`~repro.serving.router.Router` /
+:class:`~repro.serving.replica.Replica`
+    Fault-tolerant data-parallel fleet: N engine replicas (BitROM's
+    immutable packed-ternary weights make replica state KV-pages-only)
+    behind least-loaded placement, backoff retries, heartbeat/straggler
+    health checks, and bit-exact failover — cold recompute-from-prefix
+    after a kill, checksummed fp8 KV handoff (warm migration) off a
+    draining replica (docs/serving.md, "Multi-replica serving").
 :class:`~repro.serving.chaos.ChaosInjector` /
 :func:`~repro.serving.chaos.check_serving_invariants`
     Seeded serving-plane fault injection (pool exhaustion, stragglers,
     mid-flight cancellation) and the machine-checked page-refcount
     protocol invariants, wired in via ``serve(on_iteration=...)``.
+:class:`~repro.serving.chaos.FleetChaosInjector` /
+:func:`~repro.serving.chaos.check_fleet_invariants`
+    The replica-level adversary (kills, stalls, handoff corruption on
+    independent seeded streams) and the fleet-wide audit: every accepted
+    request in exactly one place, no page owned by two replicas, router
+    counters reconciled — run after every router tick.
 
 Overload degrades instead of failing: page pressure triggers LRU prefix
 eviction then preemption-with-recompute (bit-exact for greedy),
@@ -40,14 +54,21 @@ prompts into the freed rows — admission happens mid-decode, while the
 remaining slots keep generating.
 """
 
+from repro.core.kv_cache import HandoffError
 from repro.serving.chaos import (ChaosConfig, ChaosInjector,
+                                 FleetChaosConfig, FleetChaosInjector,
                                  InvariantViolation,
+                                 check_fleet_invariants,
                                  check_serving_invariants)
 from repro.serving.engine import (DecodeState, Engine, GenerationResult,
                                   ServeStats)
 from repro.serving.paging import PagePool, PagePoolError, PrefixCache
+from repro.serving.replica import (LocalTransport, Replica, ReplicaDead,
+                                   Transport)
+from repro.serving.router import Router, RouterStats
 from repro.serving.scheduler import (FinishedRequest, Request,
-                                     SchedulerError, SlotScheduler)
+                                     SchedulerError, SlotScheduler,
+                                     terminal_record)
 
 __all__ = [
     "ChaosConfig",
@@ -55,14 +76,25 @@ __all__ = [
     "DecodeState",
     "Engine",
     "FinishedRequest",
+    "FleetChaosConfig",
+    "FleetChaosInjector",
     "GenerationResult",
+    "HandoffError",
     "InvariantViolation",
+    "LocalTransport",
     "PagePool",
     "PagePoolError",
     "PrefixCache",
+    "Replica",
+    "ReplicaDead",
     "Request",
+    "Router",
+    "RouterStats",
     "SchedulerError",
     "ServeStats",
     "SlotScheduler",
+    "Transport",
+    "check_fleet_invariants",
     "check_serving_invariants",
+    "terminal_record",
 ]

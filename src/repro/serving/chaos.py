@@ -256,3 +256,147 @@ class ChaosInjector:
         for _, pages in self.held:
             ctx.pool.decref(pages)
         self.held = []
+
+
+# ---------------------------------------------------------------------------
+# fleet-level chaos: replica kills / stalls / handoff corruption against the
+# data-parallel Router (serving/router.py), plus the fleet-wide invariant
+# checker the acceptance criteria pin after every router tick
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetChaosConfig:
+    """Replica-level injection rates (probability per router tick). Kill,
+    stall and corruption draw from independent seeded streams
+    (``seed``, ``seed+1``, ``seed+2``) so enabling one class never
+    shifts another's injection points — same determinism contract as
+    :class:`ChaosConfig`."""
+
+    seed: int = 0
+    kill_rate: float = 0.0  # kill a live replica (device state lost)
+    stall_rate: float = 0.0  # make one iteration a real straggler...
+    stall_seconds: float = 0.25  # ...this slow
+    corrupt_rate: float = 0.0  # flip a byte in the next warm handoff
+    max_kills: int = 2  # total kill budget for the run
+    min_survivors: int = 1  # never kill below this many live replicas
+    check_invariants: bool = True
+
+
+class FleetChaosInjector:
+    """Deterministic fleet adversary for ``Router.serve(on_tick=...)``.
+
+    Usage::
+
+        chaos = FleetChaosInjector(FleetChaosConfig(seed=0, kill_rate=.1))
+        finished = router.serve(reqs, on_tick=chaos.on_tick)
+
+    Every fault goes through a public surface — ``Replica.kill()`` /
+    ``Replica.stall()`` / ``Transport.corrupt_next()`` — so anything
+    that breaks is a protocol hole, not a test artifact. When
+    ``check_invariants`` is on, :func:`check_fleet_invariants` runs
+    after every injection round."""
+
+    def __init__(self, config: FleetChaosConfig):
+        self.cfg = config
+        self._kill = FaultSchedule(config.seed, config.kill_rate)
+        self._stall = FaultSchedule(config.seed + 1, config.stall_rate)
+        self._corrupt = FaultSchedule(config.seed + 2, config.corrupt_rate)
+        self.kills: List[Tuple[int, str]] = []  # (tick, replica)
+        self.stalls: List[Tuple[int, str]] = []
+        self.corruptions: List[int] = []
+
+    def on_tick(self, router) -> None:
+        tick = router.stats.ticks
+        live = [r for r in router.replicas.values() if not r.dead]
+        if (self._kill.fires(tick) and len(self.kills) < self.cfg.max_kills
+                and len(live) > self.cfg.min_survivors):
+            victim = self._kill.pick(live)
+            victim.kill()
+            self.kills.append((tick, victim.name))
+            live = [r for r in live if r.name != victim.name]
+        if self._stall.fires(tick) and live:
+            target = self._stall.pick(live)
+            target.stall(self.cfg.stall_seconds)
+            self.stalls.append((tick, target.name))
+        if self._corrupt.fires(tick):
+            corrupt = getattr(router.transport, "corrupt_next", None)
+            if corrupt is not None:
+                corrupt()
+                self.corruptions.append(tick)
+        if self.cfg.check_invariants:
+            check_fleet_invariants(router)
+
+
+def check_fleet_invariants(router) -> None:
+    """Fleet-wide protocol audit, valid at tick boundaries. Checks:
+
+      1. **exactly-one-place**: every accepted rid is in exactly one
+         location — terminal records, the router's pending list, or ONE
+         live replica's queue/slots. In particular no rid is live on two
+         replicas, and no rid has two terminal outcomes;
+      2. the router's ``assigned`` map agrees with where requests
+         actually are;
+      3. every live replica session passes the single-engine
+         :func:`check_serving_invariants` (a KILLED replica is exempt —
+         its session was abandoned and its pool reconciled at harvest);
+      4. no two replicas share a :class:`PagePool` (the in-process
+         analog of "no page referenced by two replicas" — WITHIN a pool
+         the strict refcount census of check 3 already pins every
+         reader);
+      5. counter reconciliation: router retries equal the per-request
+         dispatch surplus, and every terminal outcome the router holds
+         is consistent with its accepted set.
+    """
+    locations: Dict[int, List[str]] = {}
+
+    def seen(rid: int, where: str) -> None:
+        locations.setdefault(rid, []).append(where)
+
+    for fin in router.finished:
+        seen(fin.rid, f"terminal:{fin.outcome}")
+    for p in router.pending:
+        seen(p.req.rid, "router:pending")
+    live = [r for r in router.replicas.values()
+            if not r.dead and r.ctx is not None]
+    # a freshly killed replica's session is a legitimate (transient)
+    # location until the router harvests it next tick: its requests live
+    # on in host bookkeeping even though the device is gone
+    holding = [r for r in router.replicas.values() if r.ctx is not None]
+    for rep in holding:
+        tag = rep.name if not rep.dead else f"{rep.name}(dead)"
+        for req in rep.ctx.sched.queue:
+            seen(req.rid, f"{tag}:queued")
+        for s, req in enumerate(rep.ctx.sched.slot_req):
+            if req is not None:
+                seen(req.rid, f"{tag}:slot{s}")
+    for rid in router.accepted:
+        where = locations.get(rid, [])
+        if len(where) != 1:
+            raise InvariantViolation(
+                f"rid {rid} is in {len(where)} places: {where or 'NOWHERE'}")
+    for rid, name in router.assigned.items():
+        where = locations[rid][0]
+        if not (where.startswith(f"{name}:")
+                or where.startswith(f"{name}(dead):")):
+            raise InvariantViolation(
+                f"rid {rid} assigned to {name} but found at {where}")
+    for rep in live:
+        check_serving_invariants(rep.ctx)
+    pools = [id(rep.ctx.pool) for rep in live if rep.ctx.pool is not None]
+    if len(set(pools)) != len(pools):
+        raise InvariantViolation("two replicas share one PagePool")
+    surplus = sum(max(n - 1, 0) for n in router.attempts.values())
+    if router.stats.retries != surplus:
+        raise InvariantViolation(
+            f"router retries {router.stats.retries} != dispatch surplus "
+            f"{surplus}")
+    for fin in router.finished:
+        if fin.rid not in router.accepted:
+            raise InvariantViolation(
+                f"terminal record for never-accepted rid {fin.rid}")
+    n_failed = sum(1 for f in router.finished if f.outcome == "failed")
+    if n_failed != router.stats.failed:
+        raise InvariantViolation(
+            f"failed terminals {n_failed} != stats.failed "
+            f"{router.stats.failed}")

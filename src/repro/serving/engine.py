@@ -122,12 +122,15 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import dr_edram, kv_cache
+from repro.core.kv_cache import HandoffError
+from repro.distributed.fault import PreemptionGuard, StragglerMonitor
 from repro.models import pack as pack_lib
 from repro.models import transformer as T
 from repro.serving import speculative as spec_lib
 from repro.serving.paging import (PagePool, PagePoolError, PrefixCache,
                                   PrefixMatch, pages_needed)
-from repro.serving.scheduler import FinishedRequest, Request, SlotScheduler
+from repro.serving.scheduler import (FinishedRequest, Request, SlotScheduler,
+                                     terminal_record)
 
 TRAFFIC_KEYS = kv_cache.TRAFFIC_KEYS
 
@@ -197,6 +200,14 @@ class ServeStats:
     recompute_tokens: int = 0
     grown_pages: int = 0
     iterations: int = 0
+    # per-iteration wall time (seconds), fed live into the session's
+    # StragglerMonitor (distributed/fault.py): p50/max over the whole
+    # call plus how many iterations the monitor flagged as stragglers
+    # (> factor x window median). The router's health checks consume the
+    # same monitor through Replica.straggler_flags().
+    iter_p50: float = 0.0
+    iter_max: float = 0.0
+    straggler_flags: int = 0
     # speculative decoding ledger (0 on non-speculative engines): draft
     # proposals scored by the target vs proposals accepted. Per request
     # the identity `emitted == accepted + rounds` holds (each verify
@@ -242,6 +253,17 @@ class _ServeCtx:
     spec: bool = False
     hot_cap: int = 0
     page_size: int = 0
+    # session plumbing (start_session/run_iteration): the jitted step for
+    # this session's (out_cap, stop_token), the sync chunk width, the
+    # per-iteration hook, the wall-time straggler monitor, the stall-
+    # guard counter, and — after drain_session — the folded requests
+    # that were evacuated instead of finished
+    step_fn: Any = None
+    chunk: int = 8
+    on_iteration: Optional[Callable[["_ServeCtx"], None]] = None
+    monitor: Optional[StragglerMonitor] = None
+    stall: int = 0
+    drained: Optional[List[Request]] = None
 
 
 class Engine:
@@ -283,6 +305,7 @@ class Engine:
         draft_params=None,
         spec_k: int = 0,
         spec_force: Optional[str] = None,
+        guard: Optional[PreemptionGuard] = None,
     ):
         self.cfg = cfg
         # Freeze to ROM form once (packed trits + fused wqkv/wgu/w_dqkv/w_gu
@@ -387,6 +410,15 @@ class Engine:
         # clock so expiry is deterministic); deadlines are absolute times
         # on THIS clock
         self._clock = clock or time.monotonic
+        # cooperative preemption (distributed/fault.py): when the guard's
+        # flag is raised mid-serve (SIGTERM or an external drain request),
+        # the loop finishes the current chunk, folds every active slot's
+        # emitted tokens into its request (the PR 7 preemption trick) and
+        # returns — the evacuated requests land in `last_drained`, ready
+        # to resubmit here or on another replica with bit-exact greedy
+        # continuation.
+        self.guard = guard
+        self.last_drained: Optional[List[Request]] = None
         self._cancel_requested: Set[int] = set()
         self.last_stats: Optional[ServeStats] = None  # of the last serve()
         self.weight_loads = 0  # host->device weight transfers after init
@@ -994,7 +1026,8 @@ class Engine:
         ctx.remaining[s] = 0
         ctx.seq_mirror[s] = 0
         ctx.sched.requeue(s)
-        ctx.state = self._release_slot_state(ctx.state, s)
+        ctx.state = self._release_slot_state(
+            ctx.state, s, truncate=ctx.chunked)
 
     def _paged_alloc(self, ctx: _ServeCtx, n: int, beneficiary: Request,
                      exclude: Sequence[int] = ()) -> Optional[List[int]]:
@@ -1223,25 +1256,9 @@ class Engine:
 
     def _finish_queued(self, req: Request, outcome: str) -> FinishedRequest:
         """Terminal record for a request that never held a slot at the
-        end (rejected / cancelled / expired while queued). A preempted-
-        then-shed request still surfaces the tokens its earlier attempts
-        emitted and the work they cost."""
-        if req.orig_prompt_len is not None:
-            tokens = np.asarray(req.tokens, np.int32)[req.orig_prompt_len:]
-            prompt_len = req.orig_prompt_len
-        else:
-            tokens = np.zeros((0,), np.int32)
-            prompt_len = req.prompt_len
-        traffic = (dict(req.carry_traffic) if req.carry_traffic
-                   else {k: 0 for k in TRAFFIC_KEYS})
-        return FinishedRequest(
-            rid=req.rid, prompt_len=prompt_len, tokens=tokens,
-            seq_len=prompt_len + len(tokens), steps=len(tokens),
-            traffic=traffic, prefix_tokens_reused=req.carry_reused,
-            outcome=outcome, n_preemptions=req.n_preemptions,
-            drafted_tokens=req.carry_drafted,
-            accepted_tokens=req.carry_accepted,
-        )
+        end (rejected / cancelled / expired while queued) — shared with
+        the router via ``scheduler.terminal_record``."""
+        return terminal_record(req, outcome)
 
     def _cancel_slot(self, ctx: _ServeCtx, s: int, outcome: str) -> None:
         """Terminate an active slot mid-flight (cancel / deadline):
@@ -1443,10 +1460,48 @@ class Engine:
         )
 
     # ------------------------------------------------------------------
-    # the serving loop
+    # the serving loop — a resumable session: start_session() builds the
+    # context, run_iteration() advances it by exactly one loop iteration,
+    # finish_session() seals the stats. serve() composes the three; the
+    # data-parallel router (serving/router.py) drives them directly so N
+    # replica sessions interleave in one process.
     # ------------------------------------------------------------------
 
-    def serve(
+    def _validate_request(self, r: Request, n_slots: int) -> None:
+        need = r.prompt_len + (
+            self.cfg.n_patches if r.patches is not None else 0)
+        if need == 0:
+            # an empty prompt has no last-token logits to sample the
+            # first generated token from — under chunked admission it
+            # would silently sample from a zero-valid chunk's garbage
+            # logits row
+            raise ValueError(
+                f"request {r.rid}: empty prompt (at least one prompt "
+                "token is required to sample the first output token)"
+            )
+        if need + r.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {r.rid}: prompt {need} + max_new "
+                f"{r.max_new_tokens} exceeds max_len {self.max_len}"
+            )
+        if self.paged:
+            # feasibility, not headroom: with lazy growth plus
+            # preemption, any request whose PEAK page set fits the
+            # pool will eventually complete (the strongest claim can
+            # reclaim every other page); one that cannot fit alone
+            # can never be served and must be refused up front
+            peak = pages_needed(
+                min(need + r.max_new_tokens, self.max_len),
+                self.hot_cap, self._page_size)
+            if peak > self._pool_pages(n_slots):
+                raise ValueError(
+                    f"request {r.rid}: needs {peak} cold pages at its "
+                    f"peak but the pool holds "
+                    f"{self._pool_pages(n_slots)} — unservable even "
+                    "with every other slot preempted; raise n_pages"
+                )
+
+    def start_session(
         self,
         requests: Sequence[Request],
         slots: Optional[int] = None,
@@ -1454,65 +1509,23 @@ class Engine:
         sync_every: Optional[int] = None,
         max_queue: Optional[int] = None,
         on_iteration: Optional[Callable[[_ServeCtx], None]] = None,
-    ) -> List[FinishedRequest]:
-        """Serve ``requests`` through continuous batching; returns one
-        terminal :class:`FinishedRequest` PER submitted request, in
-        completion order (sort by ``rid`` if you need submission order).
-        ``FinishedRequest.outcome`` distinguishes normal completion from
-        cancellation, deadline expiry and backpressure shedding.
-
-        The decode hot loop issues exactly one jitted dispatch per token
-        and never reads device memory; host synchronization happens only
-        every ``sync_every`` steps, to retire finished slots and admit
-        queued prompts into the freed rows. With ``prefill_chunk`` set
-        (and a capable arch), admission streams fixed-size prompt chunks
-        into the freed slots instead of whole same-length groups — one
-        prefill compilation total, mixed lengths admit immediately.
-
-        Under paged serving, page-pool pressure degrades instead of
-        failing: admission and mid-decode growth reclaim pages by LRU
-        tree eviction, then by preempting strictly weaker slots
-        (recompute-from-prefix; see the module docstring). ``max_queue``
-        bounds the admission queue (overflow is shed as ``rejected``);
-        ``on_iteration(ctx)`` runs after every loop iteration — the
-        fault-injection/invariant hook (``serving/chaos.py``)."""
+    ) -> _ServeCtx:
+        """Validate ``requests`` and build a live serving session — the
+        :class:`_ServeCtx` that ``run_iteration`` advances. ``serve()``
+        is ``start_session`` + a ``run_iteration`` loop +
+        ``finish_session``; the router holds one open session per
+        replica and feeds it via ``submit_to_session``."""
         n_slots = slots or self.slots
         chunk = sync_every or self.sync_every
         chunked = self.prefill_chunk > 0 and self._chunked_capable()
         if max_queue is None:
             max_queue = self.max_queue
         for r in requests:
-            need = r.prompt_len + (self.cfg.n_patches if r.patches is not None else 0)
-            if need == 0:
-                # an empty prompt has no last-token logits to sample the
-                # first generated token from — under chunked admission it
-                # would silently sample from a zero-valid chunk's garbage
-                # logits row
-                raise ValueError(
-                    f"request {r.rid}: empty prompt (at least one prompt "
-                    "token is required to sample the first output token)"
-                )
-            if need + r.max_new_tokens > self.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt {need} + max_new "
-                    f"{r.max_new_tokens} exceeds max_len {self.max_len}"
-                )
-            if self.paged:
-                # feasibility, not headroom: with lazy growth plus
-                # preemption, any request whose PEAK page set fits the
-                # pool will eventually complete (the strongest claim can
-                # reclaim every other page); one that cannot fit alone
-                # can never be served and must be refused up front
-                peak = pages_needed(
-                    min(need + r.max_new_tokens, self.max_len),
-                    self.hot_cap, self._page_size)
-                if peak > self._pool_pages(n_slots):
-                    raise ValueError(
-                        f"request {r.rid}: needs {peak} cold pages at its "
-                        f"peak but the pool holds "
-                        f"{self._pool_pages(n_slots)} — unservable even "
-                        "with every other slot preempted; raise n_pages"
-                    )
+            self._validate_request(r, n_slots)
+        # a fresh session owes nothing to rids of earlier sessions: a
+        # stale cancel mark must not shoot down an unrelated request that
+        # happens to reuse the rid (replica restarts reuse the engine)
+        self._cancel_requested.clear()
         # output buffer sized by max_len (which already bounds any budget),
         # NOT by this batch's max budget — the buffer shape is baked into
         # the jitted step, and a varying out_cap would recompile the whole
@@ -1555,6 +1568,13 @@ class Engine:
             slot_pages=[[] for _ in range(n_slots)],
             spec=self.spec,
             hot_cap=self.hot_cap,
+            step_fn=step,
+            chunk=chunk,
+            on_iteration=on_iteration,
+            # per-iteration wall time feeds the same StragglerMonitor
+            # vocabulary the training plane uses; ServeStats summarizes
+            # it at finish_session and the router polls `flagged` live
+            monitor=StragglerMonitor(window=16, factor=4.0),
         )
         if self.paged:
             ctx.page_size = self._page_size
@@ -1565,183 +1585,416 @@ class Engine:
             # ledger and prefix tree of the most recent serve() call
             self._last_pool, self._last_ptree = ctx.pool, ctx.ptree
         self._last_ctx = ctx
+        return ctx
 
-        stall = 0
-        while not sched.idle():
-            progress = self._sweep_cancel_expire(ctx) > 0
-            # -- admission: fill every free slot we can ----------------
-            if chunked:
-                fills = sched.next_fills()
+    def submit_to_session(self, ctx: _ServeCtx, req: Request) -> bool:
+        """Dynamic admission into a live session (the router's entry
+        point): same validation as ``start_session``, same backpressure
+        contract — False means the bounded queue shed the request and
+        the CALLER owns its terminal outcome."""
+        self._validate_request(req, len(ctx.sched.slot_req))
+        return ctx.sched.submit(req)
+
+    def run_iteration(self, ctx: _ServeCtx) -> bool:
+        """One serving-loop iteration: sweep cancellations/expiries,
+        admit into free slots, fund page growth, run one decode chunk,
+        harvest finished slots, fire the hook, count the stall guard.
+        Returns True when the iteration made progress. Call only while
+        ``not ctx.sched.idle()``."""
+        t0 = time.perf_counter()
+        sched, chunk, step = ctx.sched, ctx.chunk, ctx.step_fn
+        n_slots = len(sched.slot_req)
+        progress = self._sweep_cancel_expire(ctx) > 0
+        # -- admission: fill every free slot we can ----------------
+        if ctx.chunked:
+            fills = sched.next_fills()
+            for s, req in fills:
+                ctx.remaining[s] = req.max_new_tokens
+            if self.paged and fills:
+                progress |= self._admit_paged(ctx, fills)
+            elif fills:
                 for s, req in fills:
-                    ctx.remaining[s] = req.max_new_tokens
-                if self.paged and fills:
-                    progress |= self._admit_paged(ctx, fills)
-                elif fills:
-                    for s, req in fills:
-                        ctx.prefilling[s] = [req, 0]
-                        ctx.seq_mirror[s] = req.prompt_len
-                    progress = True
-                on_last = None
-                if self.prefix_sharing:
-                    on_last = lambda st, s, r: self._record_prefix(  # noqa: E731
-                        st, s, r, ctx.ptree, ctx.host_table
-                    )
-                if self.spec:
-                    # every freshly admitted slot also prefills the draft
-                    # cache, always from offset 0 (the draft never shares
-                    # prefixes — it is private per-slot scratch)
-                    for s, (req, _off) in ctx.prefilling.items():
-                        if s not in ctx.draft_prefilling:
-                            ctx.draft_prefilling[s] = [req, 0]
-                progress |= bool(ctx.prefilling) or bool(ctx.draft_prefilling)
-                ctx.state = self._stream_chunks(
-                    ctx.state, n_slots, ctx.prefilling,
-                    max_waves=chunk, on_last=on_last,
-                    draft_prefilling=(ctx.draft_prefilling
-                                      if self.spec else None),
-                )
-            else:
-                while True:
-                    slots_idx, group = sched.next_group()
-                    if not group:
-                        break
-                    ctx.state = self._admit(ctx.state, slots_idx, group)
-                    for s, req in zip(slots_idx, group):
-                        ctx.remaining[s] = req.max_new_tokens
-                        ctx.seq_mirror[s] = self._attempt_prompt_len(req)
-                    progress = True
-            # -- fund mid-decode cold growth (may preempt) -------------
-            if self.paged:
-                # a speculative round transiently appends up to K rows
-                # before rollback, so fund the worst-case advance — the
-                # trailing decref below returns what rollback strands
-                self._ensure_pages(
-                    ctx, chunk * self.spec_k if self.spec else chunk)
-            # -- decode chunk: no host syncs inside --------------------
-            # clip the chunk so no dispatch runs past the earliest
-            # budget-exhaustion among decoding slots (those steps would be
-            # pure waste: the finished slot idles until the next sync);
-            # slots still mid-prefill neither bound the chunk nor burn
-            # budget — they ride through the decode dispatches inactive.
-            # if every decoding slot has exhausted its budget mirror (e.g.
-            # max_new_tokens=0 admissions) skip straight to harvest
-            decoding = [
-                s for s in sched.active_slots()
-                if s not in ctx.prefilling and s not in ctx.draft_prefilling
-            ]
-            budgets = [ctx.remaining[s] for s in decoding
-                       if ctx.remaining[s] > 0]
-            n_steps = min([chunk] + budgets) if budgets else 0
-            for _ in range(n_steps):
-                ctx.state = (step(self.params, self.draft_params, ctx.state)
-                             if self.spec else step(self.params, ctx.state))
-            if self.spec and n_steps:
-                # a speculative round emits a data-dependent 1..K tokens,
-                # so the deterministic host mirrors no longer hold —
-                # refresh them from the device at the sync point (the
-                # harvest below reads `done` anyway), then return the
-                # pages the rollback stranded past each slot's real
-                # length so pool occupancy tracks acceptance, not the
-                # funded worst case
-                n_gen_dev = np.asarray(ctx.state.n_gen)
-                seq_dev = np.asarray(ctx.state.seq_len)
-                for s in decoding:
-                    req = sched.slot_req[s]
-                    if req is None:
-                        continue
-                    ctx.remaining[s] = max(
-                        int(req.max_new_tokens) - int(n_gen_dev[s]), 0)
-                    ctx.seq_mirror[s] = int(seq_dev[s])
-                    if not self.paged or not ctx.slot_pages[s]:
-                        continue
-                    keep = pages_needed(
-                        ctx.seq_mirror[s], self.hot_cap, self._page_size)
-                    extra = ctx.slot_pages[s][keep:]
-                    if extra:
-                        ctx.pool.decref(extra)
-                        del ctx.slot_pages[s][keep:]
-                        # unused table entries must hold a VALID page
-                        # index (PagedKVCache convention); the device
-                        # copy may keep stale entries — safe, because
-                        # any row a future round writes there is re-
-                        # funded and re-installed by _ensure_pages first
-                        ctx.host_table[s, keep:] = 0
-            else:
-                for s in decoding:
-                    ctx.remaining[s] = max(ctx.remaining[s] - n_steps, 0)
-                    ctx.seq_mirror[s] = min(
-                        ctx.seq_mirror[s] + n_steps, self.max_len)
-            progress |= n_steps > 0
-            # -- sync point: harvest finished slots --------------------
-            # (the slot table mirrors `allocated`, so only the small
-            # `done` mask crosses the device boundary here)
-            done = np.asarray(ctx.state.done)
-            ripe = [s for s in decoding if done[s]]
-            if ripe:
+                    ctx.prefilling[s] = [req, 0]
+                    ctx.seq_mirror[s] = req.prompt_len
                 progress = True
-                n_gen = np.asarray(ctx.state.n_gen)
-                seq_len = np.asarray(ctx.state.seq_len)
-                out = np.asarray(ctx.state.out)
-                ledger = {k: np.asarray(ctx.state.ledger[k])
-                          for k in TRAFFIC_KEYS}
-                drafted_dev = (np.asarray(ctx.state.drafted)
-                               if self.spec else None)
-                accepted_dev = (np.asarray(ctx.state.accepted)
-                                if self.spec else None)
-                for s in ripe:
-                    req = sched.retire(s)
-                    spec_kw = (
-                        dict(drafted=int(drafted_dev[s]),
-                             accepted=int(accepted_dev[s]))
-                        if self.spec else {}
-                    )
-                    fin = self._build_finished(
-                        req, out[s, : n_gen[s]].copy(), int(seq_len[s]),
-                        {k: ledger[k][s] for k in TRAFFIC_KEYS},
-                        self._attempt_prompt_len(req), ctx.prefix_used[s],
-                        "finished", ctx.token_bytes, **spec_kw,
-                    )
-                    finished.append(fin)
-                    stats.record_spec(fin)
-                    self._cancel_requested.discard(req.rid)
-                    ctx.prefix_used[s] = 0
-                    ctx.remaining[s] = 0
-                    ctx.seq_mirror[s] = 0
-                    if self.paged:
-                        # pages free exactly when their last reader leaves
-                        ctx.pool.decref(ctx.slot_pages[s])
-                        ctx.slot_pages[s] = []
-                idx = jnp.asarray(ripe, jnp.int32)
-                ctx.state = ctx.state._replace(
-                    allocated=ctx.state.allocated.at[idx].set(False)
+            on_last = None
+            if self.prefix_sharing:
+                on_last = lambda st, s, r: self._record_prefix(  # noqa: E731
+                    st, s, r, ctx.ptree, ctx.host_table
                 )
-            # the hook sees the 0-based index of the iteration that just
-            # completed (chaos schedules / tests key off it)
-            if on_iteration is not None:
-                on_iteration(ctx)
-            stats.iterations += 1
-            ctx.iteration += 1
-            # -- stall guard -------------------------------------------
-            # nothing prefilled, decoded, admitted, harvested or swept
-            # for many consecutive iterations: the queue head cannot be
-            # funded even with the pool fully reclaimed (with the
-            # feasibility check above this is unreachable unless an
-            # external actor — e.g. a chaos hold — pins pages for good;
-            # a bounded hold just rides through the tolerance window)
-            stall = 0 if progress else stall + 1
-            if stall >= _STALL_LIMIT and not sched.idle():
-                head = (min(sched.queue, key=lambda r: r.claim)
-                        if sched.queue else None)
-                raise PagePoolError(
-                    "page pool exhausted and unreclaimable: "
-                    f"{len(sched.queue)} queued "
-                    f"(head rid={getattr(head, 'rid', None)}), "
-                    f"{ctx.pool.available() if ctx.pool else 0} pages "
-                    f"free of {ctx.pool.n_pages if ctx.pool else 0} — "
-                    "raise n_pages"
+            if self.spec:
+                # every freshly admitted slot also prefills the draft
+                # cache, always from offset 0 (the draft never shares
+                # prefixes — it is private per-slot scratch)
+                for s, (req, _off) in ctx.prefilling.items():
+                    if s not in ctx.draft_prefilling:
+                        ctx.draft_prefilling[s] = [req, 0]
+            progress |= bool(ctx.prefilling) or bool(ctx.draft_prefilling)
+            ctx.state = self._stream_chunks(
+                ctx.state, n_slots, ctx.prefilling,
+                max_waves=chunk, on_last=on_last,
+                draft_prefilling=(ctx.draft_prefilling
+                                  if self.spec else None),
+            )
+        else:
+            while True:
+                slots_idx, group = sched.next_group()
+                if not group:
+                    break
+                ctx.state = self._admit(ctx.state, slots_idx, group)
+                for s, req in zip(slots_idx, group):
+                    ctx.remaining[s] = req.max_new_tokens
+                    ctx.seq_mirror[s] = self._attempt_prompt_len(req)
+                progress = True
+        # -- fund mid-decode cold growth (may preempt) -------------
+        if self.paged:
+            # a speculative round transiently appends up to K rows
+            # before rollback, so fund the worst-case advance — the
+            # trailing decref below returns what rollback strands
+            self._ensure_pages(
+                ctx, chunk * self.spec_k if self.spec else chunk)
+        # -- decode chunk: no host syncs inside --------------------
+        # clip the chunk so no dispatch runs past the earliest
+        # budget-exhaustion among decoding slots (those steps would be
+        # pure waste: the finished slot idles until the next sync);
+        # slots still mid-prefill neither bound the chunk nor burn
+        # budget — they ride through the decode dispatches inactive.
+        # if every decoding slot has exhausted its budget mirror (e.g.
+        # max_new_tokens=0 admissions) skip straight to harvest
+        decoding = [
+            s for s in sched.active_slots()
+            if s not in ctx.prefilling and s not in ctx.draft_prefilling
+        ]
+        budgets = [ctx.remaining[s] for s in decoding
+                   if ctx.remaining[s] > 0]
+        n_steps = min([chunk] + budgets) if budgets else 0
+        for _ in range(n_steps):
+            ctx.state = (step(self.params, self.draft_params, ctx.state)
+                         if self.spec else step(self.params, ctx.state))
+        if self.spec and n_steps:
+            # a speculative round emits a data-dependent 1..K tokens,
+            # so the deterministic host mirrors no longer hold —
+            # refresh them from the device at the sync point (the
+            # harvest below reads `done` anyway), then return the
+            # pages the rollback stranded past each slot's real
+            # length so pool occupancy tracks acceptance, not the
+            # funded worst case
+            n_gen_dev = np.asarray(ctx.state.n_gen)
+            seq_dev = np.asarray(ctx.state.seq_len)
+            for s in decoding:
+                req = sched.slot_req[s]
+                if req is None:
+                    continue
+                ctx.remaining[s] = max(
+                    int(req.max_new_tokens) - int(n_gen_dev[s]), 0)
+                ctx.seq_mirror[s] = int(seq_dev[s])
+                if not self.paged or not ctx.slot_pages[s]:
+                    continue
+                keep = pages_needed(
+                    ctx.seq_mirror[s], self.hot_cap, self._page_size)
+                extra = ctx.slot_pages[s][keep:]
+                if extra:
+                    ctx.pool.decref(extra)
+                    del ctx.slot_pages[s][keep:]
+                    # unused table entries must hold a VALID page
+                    # index (PagedKVCache convention); the device
+                    # copy may keep stale entries — safe, because
+                    # any row a future round writes there is re-
+                    # funded and re-installed by _ensure_pages first
+                    ctx.host_table[s, keep:] = 0
+        else:
+            for s in decoding:
+                ctx.remaining[s] = max(ctx.remaining[s] - n_steps, 0)
+                ctx.seq_mirror[s] = min(
+                    ctx.seq_mirror[s] + n_steps, self.max_len)
+        progress |= n_steps > 0
+        # -- sync point: harvest finished slots --------------------
+        # (the slot table mirrors `allocated`, so only the small
+        # `done` mask crosses the device boundary here)
+        done = np.asarray(ctx.state.done)
+        ripe = [s for s in decoding if done[s]]
+        if ripe:
+            progress = True
+            n_gen = np.asarray(ctx.state.n_gen)
+            seq_len = np.asarray(ctx.state.seq_len)
+            out = np.asarray(ctx.state.out)
+            ledger = {k: np.asarray(ctx.state.ledger[k])
+                      for k in TRAFFIC_KEYS}
+            drafted_dev = (np.asarray(ctx.state.drafted)
+                           if self.spec else None)
+            accepted_dev = (np.asarray(ctx.state.accepted)
+                            if self.spec else None)
+            for s in ripe:
+                req = sched.retire(s)
+                spec_kw = (
+                    dict(drafted=int(drafted_dev[s]),
+                         accepted=int(accepted_dev[s]))
+                    if self.spec else {}
                 )
-        self.last_stats = stats
-        return finished
+                fin = self._build_finished(
+                    req, out[s, : n_gen[s]].copy(), int(seq_len[s]),
+                    {k: ledger[k][s] for k in TRAFFIC_KEYS},
+                    self._attempt_prompt_len(req), ctx.prefix_used[s],
+                    "finished", ctx.token_bytes, **spec_kw,
+                )
+                ctx.finished.append(fin)
+                ctx.stats.record_spec(fin)
+                self._cancel_requested.discard(req.rid)
+                ctx.prefix_used[s] = 0
+                ctx.remaining[s] = 0
+                ctx.seq_mirror[s] = 0
+                if self.paged:
+                    # pages free exactly when their last reader leaves
+                    ctx.pool.decref(ctx.slot_pages[s])
+                    ctx.slot_pages[s] = []
+            idx = jnp.asarray(ripe, jnp.int32)
+            ctx.state = ctx.state._replace(
+                allocated=ctx.state.allocated.at[idx].set(False)
+            )
+        # the hook sees the 0-based index of the iteration that just
+        # completed (chaos schedules / tests key off it)
+        if ctx.on_iteration is not None:
+            ctx.on_iteration(ctx)
+        ctx.stats.iterations += 1
+        ctx.iteration += 1
+        # chaos sleeps injected through the hook count into the iteration
+        # time on purpose — that IS the straggler signal
+        ctx.monitor.record(ctx.iteration - 1, time.perf_counter() - t0)
+        # -- stall guard -------------------------------------------
+        # nothing prefilled, decoded, admitted, harvested or swept
+        # for many consecutive iterations: the queue head cannot be
+        # funded even with the pool fully reclaimed (with the
+        # feasibility check above this is unreachable unless an
+        # external actor — e.g. a chaos hold — pins pages for good;
+        # a bounded hold just rides through the tolerance window)
+        ctx.stall = 0 if progress else ctx.stall + 1
+        if ctx.stall >= _STALL_LIMIT and not sched.idle():
+            head = (min(sched.queue, key=lambda r: r.claim)
+                    if sched.queue else None)
+            raise PagePoolError(
+                "page pool exhausted and unreclaimable: "
+                f"{len(sched.queue)} queued "
+                f"(head rid={getattr(head, 'rid', None)}), "
+                f"{ctx.pool.available() if ctx.pool else 0} pages "
+                f"free of {ctx.pool.n_pages if ctx.pool else 0} — "
+                "raise n_pages"
+            )
+        return progress
+
+    def finish_session(self, ctx: _ServeCtx) -> List[FinishedRequest]:
+        """Seal a session: summarize the iteration-time distribution into
+        its :class:`ServeStats` and publish them as ``last_stats``.
+        Returns the session's terminal records."""
+        if ctx.monitor is not None and ctx.monitor.times:
+            ctx.stats.iter_p50 = float(np.median(ctx.monitor.times))
+            ctx.stats.iter_max = float(max(ctx.monitor.times))
+            ctx.stats.straggler_flags = len(ctx.monitor.flagged)
+        self.last_stats = ctx.stats
+        return ctx.finished
+
+    def serve(
+        self,
+        requests: Sequence[Request],
+        slots: Optional[int] = None,
+        stop_token: Optional[int] = None,
+        sync_every: Optional[int] = None,
+        max_queue: Optional[int] = None,
+        on_iteration: Optional[Callable[[_ServeCtx], None]] = None,
+    ) -> List[FinishedRequest]:
+        """Serve ``requests`` through continuous batching; returns one
+        terminal :class:`FinishedRequest` PER submitted request, in
+        completion order (sort by ``rid`` if you need submission order).
+        ``FinishedRequest.outcome`` distinguishes normal completion from
+        cancellation, deadline expiry and backpressure shedding.
+
+        The decode hot loop issues exactly one jitted dispatch per token
+        and never reads device memory; host synchronization happens only
+        every ``sync_every`` steps, to retire finished slots and admit
+        queued prompts into the freed rows. With ``prefill_chunk`` set
+        (and a capable arch), admission streams fixed-size prompt chunks
+        into the freed slots instead of whole same-length groups — one
+        prefill compilation total, mixed lengths admit immediately.
+
+        Under paged serving, page-pool pressure degrades instead of
+        failing: admission and mid-decode growth reclaim pages by LRU
+        tree eviction, then by preempting strictly weaker slots
+        (recompute-from-prefix; see the module docstring). ``max_queue``
+        bounds the admission queue (overflow is shed as ``rejected``);
+        ``on_iteration(ctx)`` runs after every loop iteration — the
+        fault-injection/invariant hook (``serving/chaos.py``).
+
+        With a :class:`PreemptionGuard` attached (``Engine(guard=...)``),
+        a raised flag drains gracefully: the loop finishes its current
+        iteration, folds every active slot's emitted tokens into its
+        request (bit-exact recompute-from-prefix on re-submission) and
+        returns early; the evacuated requests are in ``last_drained``
+        and do NOT get terminal records from this call."""
+        ctx = self.start_session(
+            requests, slots=slots, stop_token=stop_token,
+            sync_every=sync_every, max_queue=max_queue,
+            on_iteration=on_iteration,
+        )
+        self.last_drained = None
+        while not ctx.sched.idle():
+            self.run_iteration(ctx)
+            if self.guard is not None and self.guard.requested:
+                self.last_drained, _ = self.drain_session(ctx)
+                self.guard.requested = False  # consumed: drained once
+                break
+        return self.finish_session(ctx)
+
+    # ------------------------------------------------------------------
+    # session evacuation: drain (cooperative) / abandon (after a crash)
+    # — the migration primitives serving/replica.py + router.py build on
+    # ------------------------------------------------------------------
+
+    def drain_session(
+        self, ctx: _ServeCtx, with_handoffs: bool = False,
+    ) -> "tuple[List[Request], Dict[int, bytes]]":
+        """Evacuate a LIVE session: every active slot is preempted
+        through the PR 7 fold-in path (emitted tokens fold into the
+        prompt, ``orig_prompt_len`` marks the seam, pages decref), then
+        the queue is emptied. Returns the evacuated requests in claim
+        order — resubmitting them (here or on another replica) continues
+        generation bit-exactly for greedy sampling.
+
+        With ``with_handoffs=True`` on a paged engine, each decoding
+        slot's KV rows are additionally serialized
+        (``kv_cache.pack_slot_state``, storage dtype + checksums) BEFORE
+        the fold, keyed by rid — the warm-migration payload a receiving
+        replica can seed its prefix cache from (``import_handoff``) so
+        only the post-prefix suffix recomputes. Mid-prefill slots carry
+        no handoff (they migrate cold; they lose at most one chunk)."""
+        handoffs: Dict[int, bytes] = {}
+        for s in list(ctx.sched.active_slots()):
+            req = ctx.sched.slot_req[s]
+            if (with_handoffs and self.paged and s not in ctx.prefilling
+                    and s not in ctx.draft_prefilling):
+                handoffs[req.rid] = self.export_slot(ctx, s)
+            self._preempt_slot(ctx, s)
+        drained = sorted(ctx.sched.queue, key=lambda r: r.claim)
+        ctx.sched.queue.clear()
+        ctx.drained = drained
+        return drained, handoffs
+
+    def abandon_session(self, ctx: _ServeCtx) -> List[Request]:
+        """Host-side teardown of a DEAD session (the device state is
+        lost — a killed replica): release every slot's page claims and
+        the queue, returning the orphaned requests in claim order. No
+        device dispatch and no token folding happens — emitted tokens
+        must come from the router's journal (Replica.journal), not from
+        a dead device. After this the session's pool reconciles to
+        tree-only references and ``ctx.sched`` is idle."""
+        orphans: List[Request] = []
+        for s in list(ctx.sched.active_slots()):
+            req = ctx.sched.retire(s)
+            ctx.prefilling.pop(s, None)
+            ctx.draft_prefilling.pop(s, None)
+            if ctx.slot_pages[s]:
+                ctx.pool.decref(ctx.slot_pages[s])
+                ctx.slot_pages[s] = []
+            ctx.prefix_used[s] = 0
+            ctx.remaining[s] = 0
+            ctx.seq_mirror[s] = 0
+            orphans.append(req)
+        orphans.sort(key=lambda r: r.claim)
+        orphans += sorted(ctx.sched.queue, key=lambda r: r.claim)
+        ctx.sched.queue.clear()
+        return orphans
+
+    def export_slot(self, ctx: _ServeCtx, s: int) -> bytes:
+        """Serialize slot ``s``'s KV rows across every cache stack into
+        one checksummed payload (``kv_cache.pack_slot_state``) — the
+        warm-migration wire format. Rows ship in the tier storage dtype:
+        with ``kv_fp8`` on, one byte per element."""
+        states = {
+            k: kv_cache.export_slot_state(c, s)
+            for k, c in ctx.state.cache.items()
+        }
+        return kv_cache.pack_slot_state(states, self._page_size)
+
+    def import_handoff(self, ctx: _ServeCtx, tokens, blob: bytes) -> int:
+        """Receiver side of warm migration: verify + unpack a serialized
+        slot state and seed this session's prefix cache with it, so the
+        follow-up ``submit_to_session`` of the folded request prefix-
+        matches instead of recomputing. Returns the number of prompt
+        tokens seeded (0 = nothing usable — caller proceeds cold, which
+        is always correct, just slower).
+
+        The full hot tier plus every FULL cold page of the payload is
+        adopted: cold rows are written into freshly allocated pool pages
+        and the tree's ``insert`` adopts them by id; the hot rows are
+        written through the same ``save_hot`` page layout a local
+        snapshot would use. The partial trailing page (if any) is NOT
+        seeded — the prefix match is capped at ``len(tokens) - 1``
+        anyway, and chunked prefill recomputes the tail bit-exactly.
+        Raises :class:`HandoffError` when the payload fails verification
+        (corrupted/torn transfer) — the caller falls back to cold."""
+        if not (self.paged and self.prefix_sharing and ctx.ptree):
+            return 0
+        states = kv_cache.unpack_slot_state(blob)
+        if set(states) != set(ctx.state.cache):
+            raise HandoffError(
+                f"handoff cache keys {sorted(states)} do not match this "
+                f"engine's {sorted(ctx.state.cache)}")
+        toks = np.asarray(tokens, np.int32)
+        hc, ps = self.hot_cap, self._page_size
+        length = min(st["length"] for st in states.values())
+        if length < len(toks):
+            raise HandoffError(
+                f"handoff covers {length} tokens but the folded request "
+                f"carries {len(toks)} — torn capture")
+        if len(toks) <= hc:
+            return 0  # nothing past the hot tier: cold re-prefill is cheap
+        kf = (len(toks) - hc) // ps  # full cold pages only
+        ctx.ptree.evict_for(kf)
+        pages = ctx.pool.alloc(kf) if kf else []
+        if pages is None:
+            return 0  # pool too tight to host the handoff: go cold
+        new_cache = {}
+        for key, st in states.items():
+            cache = ctx.state.cache[key]
+            if kf:
+                ck, cv = st["cold_k"], st["cold_v"]
+                tail = ck.shape[2:]
+                kp = ck[:, : kf * ps].reshape(
+                    (ck.shape[0], kf, ps) + tail)
+                vp = cv[:, : kf * ps].reshape(
+                    (cv.shape[0], kf, ps) + tail)
+                cache = kv_cache.write_pool_pages(cache, pages, kp, vp)
+            new_cache[key] = cache
+        ctx.state = ctx.state._replace(cache=new_cache)
+
+        def save(ids):
+            # hot payload lands in the tree's snapshot pages using the
+            # exact save_hot layout: hot row i -> page ids[i // ps],
+            # row i % ps — so a later admission restores it the same
+            # way it restores a locally saved snapshot
+            arr = np.full((max(ctx.ptree.n_hot_pages, 1),), -1, np.int32)
+            arr[: len(ids)] = ids
+            cache2 = {}
+            for key, st in states.items():
+                hk, hv = st["hot_k"], st["hot_v"]
+                tail = hk.shape[2:]
+                nhp = len(ids)
+                pad = nhp * ps - hk.shape[1]
+                if pad:
+                    z = np.zeros((hk.shape[0], pad) + tail, hk.dtype)
+                    hk = np.concatenate([hk, z], axis=1)
+                    hv = np.concatenate([hv, z], axis=1)
+                kp = hk.reshape((hk.shape[0], nhp, ps) + tail)
+                vp = hv.reshape((hv.shape[0], nhp, ps) + tail)
+                cache2[key] = kv_cache.write_pool_pages(
+                    ctx.state.cache[key], np.asarray(ids, np.int32), kp, vp)
+            ctx.state = ctx.state._replace(cache=cache2)
+
+        ok = ctx.ptree.insert(toks, np.asarray(pages, np.int32), save)
+        # the tree holds its own refs on whatever it adopted; our
+        # allocation refs retire either way (failed/duplicate inserts
+        # free the pages right here)
+        if pages:
+            ctx.pool.decref(pages)
+        return hc + kf * ps if ok else 0
 
     # ------------------------------------------------------------------
     # aligned-batch convenience API (launchers / examples / benchmarks)

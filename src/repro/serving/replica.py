@@ -1,0 +1,300 @@
+"""One data-parallel serving replica: an :class:`Engine` session plus the
+control-plane surface the router drives it through.
+
+BitROM's weight-reload-free premise makes replication unusually cheap:
+every replica shares the same immutable packed-ternary weights (ROM), so
+replica state is ONLY mutable KV pages plus host-side request
+bookkeeping — exactly the state PR 6/7 made refcounted, serializable and
+recomputable-from-prefix. A :class:`Replica` therefore wraps one engine's
+resumable session (``start_session`` / ``run_iteration``) and adds:
+
+  * a **token journal** — after every step, a host copy of each decoding
+    slot's emitted-so-far tokens, keyed by rid. When the replica dies
+    (device state lost), the router folds the journal into each orphan's
+    prompt (``orig_prompt_len``, the PR 7 preemption trick) and re-admits
+    on a survivor: greedy decode recomputes from the folded prompt
+    bit-exactly. Queued / mid-prefill requests carry NO journal entry on
+    purpose — after an engine-internal preemption their emitted tokens
+    are already folded into ``req.tokens``, and a stale journal entry
+    would fold them twice;
+  * **heartbeats** — a liveness timestamp stamped when a step begins, so
+    a wedged step is visible as a growing ``heartbeat_age``;
+  * **straggler visibility** — the session's per-iteration
+    :class:`~repro.distributed.fault.StragglerMonitor` flags, which the
+    router's health sweep polls;
+  * **fault hooks** — ``kill()`` (next step raises :class:`ReplicaDead`:
+    the device is gone, only host bookkeeping survives), ``stall(s)``
+    (the next iteration sleeps inside the monitored window — a real
+    straggler, not a simulated flag), and a ``restart_faults`` injector
+    that makes ``restart()`` itself fail deterministically (exercising
+    ``run_with_recovery``);
+  * **evacuation** — ``drain()`` (cooperative: fold + optional KV
+    handoff payloads, see ``Engine.drain_session``) and ``abandon()``
+    (post-mortem: host-only page release, journal is the only token
+    source).
+
+:class:`Transport` abstracts the byte channel handoff payloads cross
+replicas on. The in-process :class:`LocalTransport` is a byte copy with
+a deterministic corruption hook (``corrupt_next``) so chaos tests can
+prove the checksum path; a real multi-host backend (RDMA, TCP, object
+store) slots in behind the same two-method surface.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.distributed.fault import FaultInjector
+from repro.serving.engine import Engine, FinishedRequest, ServeStats
+from repro.serving.scheduler import Request
+
+
+class ReplicaDead(RuntimeError):
+    """The replica's device state is gone (crash / kill). Only host-side
+    bookkeeping (journal, scheduler mirrors) survives; the router must
+    ``abandon()`` the session and cold-migrate its requests."""
+
+    def __init__(self, name: str):
+        super().__init__(f"replica {name} is dead")
+        self.name = name
+
+
+class Transport:
+    """Abstract byte channel for inter-replica KV handoffs. ``send``
+    returns what the receiver observes — implementations may corrupt,
+    truncate or drop; the checksummed wire format
+    (``kv_cache.pack_slot_state``) is what makes that survivable."""
+
+    def send(self, payload: bytes) -> bytes:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class LocalTransport(Transport):
+    """In-process transport: a byte copy, plus a deterministic fault
+    hook — ``corrupt_next()`` arms a single-byte flip in the middle of
+    the next payload (lands inside a page chunk, so the per-page crc
+    catches it), ``truncate_next()`` arms a torn transfer."""
+
+    def __init__(self):
+        self.sent = 0
+        self.corrupted = 0
+        self._corrupt_armed = False
+        self._truncate_armed = False
+
+    def corrupt_next(self) -> None:
+        self._corrupt_armed = True
+
+    def truncate_next(self) -> None:
+        self._truncate_armed = True
+
+    def send(self, payload: bytes) -> bytes:
+        self.sent += 1
+        if self._corrupt_armed:
+            self._corrupt_armed = False
+            self.corrupted += 1
+            buf = bytearray(payload)
+            buf[len(buf) // 2] ^= 0xFF
+            return bytes(buf)
+        if self._truncate_armed:
+            self._truncate_armed = False
+            self.corrupted += 1
+            return payload[: max(len(payload) // 2, 1)]
+        return bytes(payload)
+
+
+class Replica:
+    """One engine behind the router. All device work happens inside
+    ``step()`` (one engine loop iteration); everything else is host-side
+    control plane. The wrapped engine may be rebuilt-free restarted any
+    number of times — its jitted step functions persist across sessions,
+    so a restart costs no recompilation."""
+
+    def __init__(self, name: str, engine: Engine,
+                 clock: Optional[Callable[[], float]] = None):
+        self.name = name
+        self.engine = engine
+        self._clock = clock or time.monotonic
+        self.ctx = None  # live session, None once dead
+        self.dead = False
+        # rid -> emitted tokens (int32 host copy) as of the LAST completed
+        # iteration; rebuilt fresh every step (see module docstring)
+        self.journal: Dict[int, np.ndarray] = {}
+        self.heartbeat = self._clock()
+        self._stall_s = 0.0
+        self._user_hook: Optional[Callable] = None
+        # deterministic restart failures (chaos: prove run_with_recovery
+        # actually retries); checked once per restart() call
+        self.restart_faults: Optional[FaultInjector] = None
+        self._restart_no = 0
+        self.restarts = 0
+        # sealed ServeStats of every previous session (drained/abandoned/
+        # restarted) — fleet accounting sums these plus the live session
+        self.past_stats: List[ServeStats] = []
+
+    # -- session lifecycle ----------------------------------------------
+    def start(self, stop_token: Optional[int] = None,
+              on_iteration: Optional[Callable] = None) -> None:
+        """Open an (initially empty) serving session. ``on_iteration``
+        composes AFTER the replica's own stall hook, so injected stalls
+        land inside the monitored window the hook observes."""
+        self._user_hook = on_iteration
+        self.ctx = self.engine.start_session(
+            [], stop_token=stop_token, on_iteration=self._on_iteration)
+        self.dead = False
+        self.journal = {}
+        self.heartbeat = self._clock()
+
+    def _on_iteration(self, ctx) -> None:
+        if self._stall_s > 0.0:
+            # a REAL slow iteration: the sleep is inside the span
+            # run_iteration hands to the StragglerMonitor
+            time.sleep(self._stall_s)
+            self._stall_s = 0.0
+        if self._user_hook is not None:
+            self._user_hook(ctx)
+
+    def submit(self, req: Request) -> bool:
+        if self.dead or self.ctx is None:
+            raise ReplicaDead(self.name)
+        return self.engine.submit_to_session(self.ctx, req)
+
+    def busy(self) -> bool:
+        return (self.ctx is not None and not self.dead
+                and not self.ctx.sched.idle())
+
+    def load(self) -> Tuple[int, int]:
+        """Least-loaded ordering key: (requests in flight, -free pages).
+        Fewer live requests wins; free page headroom breaks ties (a
+        replica whose pool is fuller is the worse target even at equal
+        occupancy)."""
+        if self.ctx is None or self.dead:
+            return (1 << 30, 0)
+        sched = self.ctx.sched
+        n = len(sched.queue) + len(sched.active_slots())
+        free = self.ctx.pool.available() if self.ctx.pool is not None else 0
+        return (n, -free)
+
+    def step(self) -> bool:
+        """Advance the session one engine iteration. Raises
+        :class:`ReplicaDead` if the replica was killed (the router
+        harvests via ``abandon``); any exception out of the engine
+        (``PagePoolError``, injected faults) propagates for the router
+        to classify. Refreshes the journal and heartbeat on success."""
+        if self.dead:
+            raise ReplicaDead(self.name)
+        if self.ctx is None or self.ctx.sched.idle():
+            return False
+        self.heartbeat = self._clock()  # checked in: a step began
+        progress = self.engine.run_iteration(self.ctx)
+        self._refresh_journal()
+        return progress
+
+    def _refresh_journal(self) -> None:
+        """Rebuild the rid -> emitted-tokens journal from the device's
+        sync-point state. ONLY decoding slots get entries: a queued or
+        mid-prefill request's emitted tokens (if any) are already folded
+        into its ``tokens`` by the engine's own preemption path."""
+        ctx = self.ctx
+        self.journal = {}
+        decoding = [
+            s for s in ctx.sched.active_slots()
+            if s not in ctx.prefilling and s not in ctx.draft_prefilling
+        ]
+        if not decoding:
+            return
+        n_gen = np.asarray(ctx.state.n_gen)
+        out = np.asarray(ctx.state.out)
+        for s in decoding:
+            req = ctx.sched.slot_req[s]
+            self.journal[req.rid] = out[s, : int(n_gen[s])].astype(
+                np.int32, copy=True)
+
+    def take_finished(self) -> List[FinishedRequest]:
+        """Drain terminal records accumulated since the last call."""
+        if self.ctx is None:
+            return []
+        out = list(self.ctx.finished)
+        self.ctx.finished.clear()
+        return out
+
+    # -- health signals --------------------------------------------------
+    def straggler_flags(self) -> int:
+        if self.ctx is None or self.ctx.monitor is None:
+            return 0
+        return len(self.ctx.monitor.flagged)
+
+    def heartbeat_age(self) -> float:
+        return self._clock() - self.heartbeat
+
+    # -- fault hooks -----------------------------------------------------
+    def kill(self) -> None:
+        """Simulate a crash: the device state is lost. The journal keeps
+        its last-sync snapshot — that IS what a monitoring plane would
+        know about a dead worker."""
+        self.dead = True
+
+    def stall(self, seconds: float) -> None:
+        """Make the next iteration a real straggler (sleep inside the
+        monitored window)."""
+        self._stall_s = float(seconds)
+
+    # -- evacuation ------------------------------------------------------
+    def drain(self, with_handoffs: bool = False
+              ) -> Tuple[List[Request], Dict[int, bytes]]:
+        """Cooperatively evacuate a LIVE session (warm migration): every
+        request comes back folded (bit-exact resume elsewhere), decoding
+        slots optionally ship their KV rows as checksummed handoff
+        payloads. The session stays open and idle — the replica can
+        keep serving new admissions afterwards."""
+        if self.dead or self.ctx is None:
+            raise ReplicaDead(self.name)
+        drained, handoffs = self.engine.drain_session(
+            self.ctx, with_handoffs=with_handoffs)
+        self.journal = {}
+        return drained, handoffs
+
+    def abandon(self) -> List[Request]:
+        """Post-mortem harvest of a DEAD replica's host bookkeeping:
+        returns the orphaned requests (tokens NOT folded — the device is
+        gone; the router folds from the journal) and releases every page
+        the session's slots held, so the pool reconciles even though no
+        device op will ever run again."""
+        if self.ctx is None:
+            return []
+        orphans = self.engine.abandon_session(self.ctx)
+        self.engine.finish_session(self.ctx)
+        self.past_stats.append(self.ctx.stats)
+        self.ctx = None
+        return orphans
+
+    def seal(self) -> None:
+        """Close an idle live session, keeping its stats for accounting."""
+        if self.ctx is not None:
+            self.engine.finish_session(self.ctx)
+            self.past_stats.append(self.ctx.stats)
+            self.ctx = None
+
+    def restart(self, stop_token: Optional[int] = None) -> "Replica":
+        """Bring a dead replica back with a FRESH session (same engine,
+        same jit caches — BitROM weights never reload). A configured
+        ``restart_faults`` injector may deterministically fail the
+        attempt (``InjectedFault``), which ``run_with_recovery`` turns
+        into bounded retries at the router."""
+        self._restart_no += 1
+        if self.restart_faults is not None:
+            self.restart_faults.check(self._restart_no)
+        self.start(stop_token=stop_token, on_iteration=self._user_hook)
+        self.restarts += 1
+        return self
+
+    # -- warm-migration receive side -------------------------------------
+    def import_handoff(self, tokens, blob: bytes) -> int:
+        """Seed this replica's prefix cache from a handoff payload;
+        returns tokens seeded (0 = cold). Raises ``HandoffError`` on a
+        corrupted/torn payload — the caller decides the fallback."""
+        if self.dead or self.ctx is None:
+            raise ReplicaDead(self.name)
+        return self.engine.import_handoff(self.ctx, tokens, blob)

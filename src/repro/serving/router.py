@@ -1,0 +1,417 @@
+"""Data-parallel router over N engine replicas: load balancing, health
+checks, retries, and bit-exact failover.
+
+The router is the fleet's single control plane. It owns admission
+(least-loaded placement over live replicas), per-request retry with
+exponential backoff + jitter, health checks (heartbeat age plus the
+per-iteration :class:`~repro.distributed.fault.StragglerMonitor` each
+session already runs), and migration when a replica fails or degrades:
+
+  * **cold migration** (replica died): harvest the orphans from the dead
+    replica's host bookkeeping (``Replica.abandon`` — pages decref, no
+    device ops), fold each orphan's journaled emitted tokens into its
+    prompt (``orig_prompt_len``, the PR 7 preemption trick) and re-admit
+    on a survivor. Greedy outputs stay bit-identical to a faultless run
+    by construction: re-prefilling prompt‖emitted re-samples the pending
+    token from the same logits, and the prefix cache bounds the
+    recompute to the un-cached suffix;
+  * **warm migration** (replica alive but unhealthy — straggler flags or
+    a stale heartbeat): ``Replica.drain(with_handoffs=True)`` folds
+    every in-flight request AND ships each decoding slot's KV rows in
+    the tier storage dtype (fp8 when enabled) with per-page checksums.
+    The payload crosses the :class:`Transport`; the receiver verifies
+    and seeds its prefix cache so only post-prefix tokens recompute. A
+    corrupted or torn payload raises ``HandoffError`` → the router
+    counts it and falls back to cold recompute-from-prefix rather than
+    ever serving unverified KV bits.
+
+Replica restarts route through the training plane's
+``run_with_recovery`` (bounded retries, same supervisor the training
+loop uses), so a deterministically failing restart is retried — and a
+replica that exhausts its budget is left dead, its load spread over the
+survivors.
+
+Every accepted request ends in EXACTLY ONE terminal
+:class:`FinishedRequest` across the fleet — including cancels that land
+in the middle of a migration (the rid is tombstoned router-side, so the
+re-admit path refuses to resurrect it) and requests whose retry budget
+runs out (terminal outcome ``"failed"``). ``serving/chaos.py``'s
+``check_fleet_invariants`` re-derives this plus page-ownership and
+counter reconciliation after every tick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.kv_cache import HandoffError
+from repro.distributed.fault import InjectedFault, run_with_recovery
+from repro.serving.engine import FinishedRequest, PagePoolError
+from repro.serving.replica import LocalTransport, Replica, ReplicaDead, Transport
+from repro.serving.scheduler import Request, terminal_record
+
+
+@dataclasses.dataclass
+class RouterStats:
+    """Fleet-level counters, reconciled against per-replica ``ServeStats``
+    by ``check_fleet_invariants``."""
+
+    ticks: int = 0
+    admitted: int = 0  # dispatches onto a replica (re-admissions count)
+    retries: int = 0  # dispatch attempts beyond each request's first
+    cold_migrations: int = 0  # re-admissions after a replica death
+    warm_migrations: int = 0  # drain-with-handoff evacuations
+    handoffs_imported: int = 0  # payloads that seeded the receiver's cache
+    handoff_corruptions: int = 0  # detected (HandoffError) → cold fallback
+    replica_failures: int = 0
+    restarts: int = 0
+    drains: int = 0
+    failed: int = 0  # retry budget exhausted → outcome "failed"
+    sheds: int = 0  # replica queue bounced an admission (re-dispatched)
+
+
+@dataclasses.dataclass
+class _Pending:
+    """A request the router owns but no replica currently holds."""
+
+    req: Request
+    attempts: int = 0
+    retry_at: float = 0.0
+    handoff: Optional[bytes] = None  # warm-migration payload in transit
+    avoid: Optional[str] = None  # don't re-land on the replica just left
+
+
+class Router:
+    """Load-balancing, health-checking, failure-migrating front door over
+    ``replicas``. Single-process cooperative scheduling: each ``tick``
+    dispatches pending requests, advances every busy replica by one
+    engine iteration, health-sweeps, and restarts the dead. A real
+    multi-host deployment replaces the tick loop with per-host threads
+    and the :class:`Transport` with a network — the policies here are
+    host-count agnostic."""
+
+    def __init__(
+        self,
+        replicas: Sequence[Replica],
+        seed: int = 0,
+        retry_limit: int = 4,
+        backoff_base: float = 0.02,
+        backoff_cap: float = 0.5,
+        backoff_jitter: float = 0.5,
+        heartbeat_timeout: Optional[float] = None,
+        straggler_drain: bool = True,
+        max_restarts: int = 2,
+        transport: Optional[Transport] = None,
+        clock: Optional[Callable[[], float]] = None,
+        sleep: Optional[Callable[[float], None]] = None,
+    ):
+        if not replicas:
+            raise ValueError("router needs at least one replica")
+        names = [r.name for r in replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate replica names: {names}")
+        self.replicas: Dict[str, Replica] = {r.name: r for r in replicas}
+        self.retry_limit = retry_limit
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.backoff_jitter = backoff_jitter
+        self.heartbeat_timeout = heartbeat_timeout
+        self.straggler_drain = straggler_drain
+        self.max_restarts = max_restarts
+        self.transport = transport or LocalTransport()
+        self._clock = clock or time.monotonic
+        self._sleep = sleep or time.sleep
+        self._rng = random.Random(seed)
+        self.stats = RouterStats()
+        self.accepted: Dict[int, Request] = {}
+        self.pending: List[_Pending] = []
+        self.assigned: Dict[int, str] = {}  # rid -> replica holding it
+        self.attempts: Dict[int, int] = {}  # rid -> dispatches so far
+        self.finished: List[FinishedRequest] = []
+        self._done: set = set()
+        self._cancel: set = set()  # tombstones: cancel-before-terminal
+        self._retired: set = set()  # replicas whose restart budget is spent
+        self._stop_token: Optional[int] = None
+        # straggler flags already acted on, per replica (health sweep
+        # reacts to NEW flags only)
+        self._flags_seen: Dict[str, int] = {n: 0 for n in self.replicas}
+
+    # -- client surface --------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Accept a request into the fleet. Claim order (priority,
+        submission order) governs dispatch; the router stamps arrival so
+        claims are fleet-global, not per-replica."""
+        if req.rid in self.accepted:
+            raise ValueError(f"duplicate rid {req.rid}")
+        if req.arrival is None:
+            req.arrival = len(self.accepted)
+        self.accepted[req.rid] = req
+        self.pending.append(_Pending(req))
+
+    def cancel(self, rid: int) -> None:
+        """Cancel ``rid`` wherever it is — queued at the router, live on
+        a replica, or mid-migration between the two. The tombstone
+        guarantees exactly one ``cancelled`` terminal even when the
+        owning replica dies in the same tick (the migration re-admit
+        path checks it before resurrecting the request)."""
+        if rid in self._done:
+            return
+        self._cancel.add(rid)
+        name = self.assigned.get(rid)
+        if name is not None:
+            rep = self.replicas[name]
+            if not rep.dead and rep.ctx is not None:
+                rep.engine.cancel(rid)
+
+    def serve(
+        self,
+        requests: Sequence[Request],
+        stop_token: Optional[int] = None,
+        on_tick: Optional[Callable[["Router"], None]] = None,
+        max_ticks: int = 100_000,
+    ) -> List[FinishedRequest]:
+        """Serve ``requests`` across the fleet to completion; returns one
+        terminal record per accepted request. ``on_tick(router)`` runs
+        after every tick — the fleet chaos/invariant hook."""
+        self._stop_token = stop_token
+        for rep in self.replicas.values():
+            if rep.ctx is None and not rep.dead:
+                rep.start(stop_token=stop_token)
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_ticks):
+            if not self.tick(on_tick=on_tick):
+                break
+        else:
+            raise RuntimeError(
+                f"router did not converge in {max_ticks} ticks: "
+                f"{len(self.pending)} pending, "
+                f"{sorted(self.assigned)} assigned")
+        return sorted(self.finished, key=lambda f: f.rid)
+
+    # -- the tick --------------------------------------------------------
+    def tick(self, on_tick: Optional[Callable[["Router"], None]] = None
+             ) -> bool:
+        """One control-plane round. Returns True while work remains."""
+        # health first: react to the PREVIOUS tick's signals (straggler
+        # flags, stale heartbeats) before this tick's steps refresh them
+        self._health_sweep()
+        self._dispatch()
+        stepped = False
+        for name in list(self.replicas):
+            rep = self.replicas[name]
+            if rep.dead:
+                if rep.ctx is not None:
+                    # killed from outside a step (chaos, operator):
+                    # harvest its host bookkeeping before any restart
+                    # can replace the session
+                    self._on_replica_failure(rep)
+                continue
+            if not rep.busy():
+                continue
+            try:
+                rep.step()
+                stepped = True
+            except (ReplicaDead, InjectedFault, PagePoolError):
+                self._on_replica_failure(rep)
+                continue
+            self._collect(rep)
+        self._restart_dead()
+        self.stats.ticks += 1
+        if on_tick is not None:
+            on_tick(self)
+        live_work = any(rep.busy() for rep in self.replicas.values())
+        more = bool(self.pending) or bool(self.assigned) or live_work
+        if more and not stepped:
+            # everything is backing off — yield instead of spinning
+            self._sleep(0.001)
+        return more
+
+    # -- placement -------------------------------------------------------
+    def _live(self) -> List[Replica]:
+        return [r for r in self.replicas.values()
+                if not r.dead and r.ctx is not None]
+
+    def _backoff(self, attempts: int) -> float:
+        base = min(self.backoff_cap,
+                   self.backoff_base * (2 ** max(attempts - 1, 0)))
+        return base * (1.0 + self.backoff_jitter * self._rng.random())
+
+    def _dispatch(self) -> None:
+        """Place pending requests on the least-loaded live replica, in
+        fleet claim order. Honors per-request backoff windows, consumes
+        cancel tombstones and deadlines BEFORE placement (a dead rid
+        must not be resurrected onto a survivor), and imports any
+        in-transit warm handoff on the chosen target."""
+        if not self.pending:
+            return
+        now = self._clock()
+        self.pending.sort(key=lambda p: p.req.claim)
+        remaining: List[_Pending] = []
+        for p in self.pending:
+            rid = p.req.rid
+            if rid in self._cancel:
+                self._terminal(terminal_record(p.req, "cancelled"))
+                continue
+            if p.req.deadline is not None and now >= p.req.deadline:
+                self._terminal(terminal_record(p.req, "expired"))
+                continue
+            if p.retry_at > now:
+                remaining.append(p)
+                continue
+            cands = [r for r in self._live() if r.name != p.avoid]
+            if not cands:
+                cands = self._live()
+            if not cands:
+                remaining.append(p)
+                continue
+            target = min(cands, key=lambda r: (r.load(), r.name))
+            if p.handoff is not None:
+                self._import_handoff(target, p)
+            if not target.submit(p.req):
+                # bounded replica queue shed us: try again after backoff,
+                # preferably elsewhere
+                self.stats.sheds += 1
+                p.avoid = target.name
+                p.retry_at = now + self._backoff(p.attempts + 1)
+                remaining.append(p)
+                continue
+            p.attempts += 1
+            self.attempts[rid] = self.attempts.get(rid, 0) + 1
+            if self.attempts[rid] > 1:
+                self.stats.retries += 1
+            self.stats.admitted += 1
+            self.assigned[rid] = target.name
+        self.pending = remaining
+
+    def _import_handoff(self, target: Replica, p: _Pending) -> None:
+        """Warm-migration receive: ship the payload over the transport,
+        verify + seed the target's prefix cache. Detected corruption is
+        counted and silently degrades to cold recompute — wrong KV bits
+        never reach a decode."""
+        blob, p.handoff = p.handoff, None
+        try:
+            wire = self.transport.send(blob)
+            seeded = target.import_handoff(
+                np.asarray(p.req.tokens, np.int32), wire)
+        except HandoffError:
+            self.stats.handoff_corruptions += 1
+            return
+        if seeded:
+            self.stats.handoffs_imported += 1
+
+    # -- failure handling ------------------------------------------------
+    def _fold_journal(self, req: Request, emitted: np.ndarray) -> None:
+        """The PR 7 fold, host-only: splice the dead replica's journaled
+        tokens into the prompt so re-admission resumes bit-exactly."""
+        if emitted.size == 0:
+            return
+        if req.orig_prompt_len is None:
+            req.orig_prompt_len = req.prompt_len
+        req.tokens = np.concatenate(
+            [np.asarray(req.tokens, np.int32), emitted])
+        req.max_new_tokens -= int(emitted.size)
+        req.n_preemptions += 1
+
+    def _requeue(self, req: Request, avoid: Optional[str],
+                 handoff: Optional[bytes] = None, backoff: bool = True
+                 ) -> None:
+        """Return a harvested request to router ownership — unless its
+        retry budget is spent, in which case it fails terminally (the
+        caller has already folded whatever tokens are recoverable, so
+        even a failed request surfaces them)."""
+        rid = req.rid
+        self.assigned.pop(rid, None)
+        if self.attempts.get(rid, 0) >= self.retry_limit:
+            self.stats.failed += 1
+            self._terminal(terminal_record(req, "failed"))
+            return
+        p = _Pending(req, attempts=self.attempts.get(rid, 0),
+                     handoff=handoff, avoid=avoid)
+        if backoff:
+            p.retry_at = self._clock() + self._backoff(p.attempts)
+        self.pending.append(p)
+
+    def _on_replica_failure(self, rep: Replica) -> None:
+        """A step raised: the replica is dead. Harvest terminals it
+        produced before dying, then cold-migrate every orphan — fold the
+        journal snapshot (the last sync point's emitted tokens; the
+        device is gone) and hand the request back to dispatch."""
+        self.stats.replica_failures += 1
+        rep.kill()
+        self._collect(rep)  # terminals finished before the crash stand
+        journal = dict(rep.journal)
+        orphans = rep.abandon()
+        for req in orphans:
+            emitted = journal.get(req.rid)
+            if emitted is not None:
+                self._fold_journal(req, emitted)
+            self.stats.cold_migrations += 1
+            self._requeue(req, avoid=rep.name)
+
+    def _drain_replica(self, rep: Replica, reason: str) -> None:
+        """Warm migration off a live-but-unhealthy replica: the engine
+        folds every in-flight request and exports each decoding slot's
+        KV rows; survivors import what verifies and recompute the rest."""
+        del reason  # recorded by callers in stats; kept for readability
+        self.stats.drains += 1
+        drained, handoffs = rep.drain(with_handoffs=True)
+        self._collect(rep)
+        for req in drained:
+            self.assigned.pop(req.rid, None)
+            blob = handoffs.get(req.rid)
+            if blob is not None:
+                self.stats.warm_migrations += 1
+            self._requeue(req, avoid=rep.name, handoff=blob, backoff=False)
+
+    def _health_sweep(self) -> None:
+        """React to degradation signals: NEW straggler flags from the
+        session monitor, or a heartbeat older than the timeout. Either
+        drains the replica (warm migration) — it stays live and may
+        receive fresh work once healthy iterations resume."""
+        for rep in self._live():
+            flags = rep.straggler_flags()
+            fresh = flags - self._flags_seen.get(rep.name, 0)
+            self._flags_seen[rep.name] = flags
+            unhealthy = self.straggler_drain and fresh > 0
+            if (not unhealthy and self.heartbeat_timeout is not None
+                    and rep.busy()
+                    and rep.heartbeat_age() > self.heartbeat_timeout):
+                unhealthy = True
+            if unhealthy and rep.busy():
+                self._drain_replica(rep, "unhealthy")
+
+    def _restart_dead(self) -> None:
+        """Bring dead replicas back through ``run_with_recovery`` (the
+        training plane's supervisor): a deterministically failing
+        restart is retried up to ``max_restarts`` times; a replica that
+        exhausts the budget stays dead and the fleet serves without it."""
+        for rep in self.replicas.values():
+            if not rep.dead or rep.name in self._retired:
+                continue
+            try:
+                run_with_recovery(
+                    lambda _resume, rep=rep: rep.restart(self._stop_token),
+                    max_restarts=self.max_restarts,
+                )
+            except Exception:  # noqa: BLE001 — budget spent: stays dead
+                self._retired.add(rep.name)
+                continue
+            self._flags_seen[rep.name] = 0
+            self.stats.restarts += 1
+
+    # -- terminal accounting ---------------------------------------------
+    def _collect(self, rep: Replica) -> None:
+        for fin in rep.take_finished():
+            self.assigned.pop(fin.rid, None)
+            self._terminal(fin)
+
+    def _terminal(self, fin: FinishedRequest) -> None:
+        self._cancel.discard(fin.rid)
+        self._done.add(fin.rid)
+        self.finished.append(fin)

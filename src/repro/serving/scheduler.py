@@ -135,11 +135,13 @@ class FinishedRequest:
     the device actually did, not the unconstrained closed form.)
 
     ``outcome`` is the terminal state: ``finished`` (full budget or stop
-    token), ``cancelled`` (``Engine.cancel``), ``expired`` (deadline),
-    or ``rejected`` (shed by the bounded queue before any work ran).
-    Non-``finished`` outcomes still surface any tokens emitted before
-    termination. ``n_preemptions`` counts how many times the request was
-    evicted mid-flight and recomputed-from-prefix.
+    token), ``cancelled`` (``Engine.cancel`` / ``Router.cancel``),
+    ``expired`` (deadline), ``rejected`` (shed by the bounded queue
+    before any work ran), or ``failed`` (router-level: the per-request
+    retry budget was exhausted across replica failures — single-engine
+    serving never emits it). Non-``finished`` outcomes still surface any
+    tokens emitted before termination. ``n_preemptions`` counts how many
+    times the request was evicted mid-flight and recomputed-from-prefix.
     """
 
     rid: int
@@ -176,6 +178,36 @@ class FinishedRequest:
         from repro.core.kv_cache import external_reduction
 
         return external_reduction(self.traffic)
+
+
+def terminal_record(req: Request, outcome: str) -> FinishedRequest:
+    """Terminal record for a request that holds no slot (rejected /
+    cancelled / expired while queued, or failed at the router after its
+    retry budget ran out). A preempted-then-terminated request still
+    surfaces the tokens its earlier attempts emitted (folded into
+    ``tokens`` past ``orig_prompt_len``) and the work they cost
+    (``carry_traffic``). Pure host bookkeeping — both the engine's
+    queue sweep and the router's fleet-level terminations route through
+    this one constructor so the two layers can never disagree on what a
+    slotless terminal looks like."""
+    from repro.core.kv_cache import TRAFFIC_KEYS
+
+    if req.orig_prompt_len is not None:
+        tokens = np.asarray(req.tokens, np.int32)[req.orig_prompt_len:]
+        prompt_len = req.orig_prompt_len
+    else:
+        tokens = np.zeros((0,), np.int32)
+        prompt_len = req.prompt_len
+    traffic = (dict(req.carry_traffic) if req.carry_traffic
+               else {k: 0 for k in TRAFFIC_KEYS})
+    return FinishedRequest(
+        rid=req.rid, prompt_len=prompt_len, tokens=tokens,
+        seq_len=prompt_len + len(tokens), steps=len(tokens),
+        traffic=traffic, prefix_tokens_reused=req.carry_reused,
+        outcome=outcome, n_preemptions=req.n_preemptions,
+        drafted_tokens=req.carry_drafted,
+        accepted_tokens=req.carry_accepted,
+    )
 
 
 class SlotScheduler:

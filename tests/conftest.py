@@ -1,14 +1,25 @@
-"""Test-suite bootstrap: make ``hypothesis`` optional.
+"""Test-suite bootstrap: make ``hypothesis`` optional, bound jit-cache
+memory mappings.
 
 The property tests in test_kernels / test_packing / test_ternary use
 hypothesis when it is installed (``pip install -e .[property]``). On bare
 environments this shim installs a stub module so those files still
 *collect* and their plain unit tests run; only the ``@given`` property
 tests are skipped, with a clear reason.
+
+The module-scoped autouse fixture below releases jax's global
+compilation caches between test modules. Without it the suite's
+hundreds of Engine builds accumulate XLA executables (each one holds
+several ``mmap`` regions even after the engine is garbage-collected —
+the global jit caches pin them) until the process hits the kernel's
+``vm.max_map_count`` (65530 by default) and the next compile segfaults
+inside XLA. Clearing per module keeps the map count bounded by the
+heaviest single module instead of the whole suite.
 """
 
 from __future__ import annotations
 
+import gc
 import sys
 import types
 
@@ -67,3 +78,16 @@ def _install_hypothesis_stub() -> None:
 
 if not HAVE_HYPOTHESIS:
     _install_hypothesis_stub()
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_jit_executables():
+    """Drop jax's global compilation caches after every test module (see
+    module docstring: unreleased XLA executables exhaust
+    ``vm.max_map_count`` over a full tier-1 run). Costs cross-module
+    cache reuse, which is small — modules compile their own shapes."""
+    yield
+    import jax
+
+    jax.clear_caches()
+    gc.collect()

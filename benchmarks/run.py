@@ -69,6 +69,7 @@ def main() -> None:
         ("serving/overload", serving_bench.overload),
         ("serving/speculative", serving_bench.speculative_sweep),
         ("serving/router", serving_bench.router_failover),
+        ("serving/sdc", serving_bench.sdc_resilience),
     ]
     if not args.fast:
         sections.append(("fig6a", paper_tables.fig6a))

@@ -47,6 +47,14 @@ class PackedLinear:
     scale: jax.Array  # () f32 absmean
     k: int = dataclasses.field(metadata=dict(static=True))
     codec: str = dataclasses.field(metadata=dict(static=True))
+    # SDC integrity metadata (optional; stamped by models/pack.py when
+    # cfg.bitnet.integrity): wsum is the (K,) scale-weighted ABFT column
+    # checksum (kernels/ternary_matmul.abft_wsum), crc the pack-time
+    # crc32 of the packed words (core/packing.packed_crc32). None on
+    # trees packed without integrity — every consumer must tolerate it.
+    wsum: Optional[jax.Array] = None  # f32 (K,) (+ leading stack dims)
+    crc: Optional[int] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
 
 @jax.tree_util.register_dataclass
@@ -67,6 +75,12 @@ class FusedPackedLinear:
     k: int = dataclasses.field(metadata=dict(static=True))
     codec: str = dataclasses.field(metadata=dict(static=True))
     splits: tuple = dataclasses.field(metadata=dict(static=True))
+    # SDC integrity metadata — see PackedLinear; the fused wsum is the
+    # SUM of the segments' wsum vectors (each already scale-weighted, so
+    # the per-segment row-sums add), the crc covers the fused words.
+    wsum: Optional[jax.Array] = None  # f32 (K,) (+ leading stack dims)
+    crc: Optional[int] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
 
 @jax.tree_util.register_dataclass
@@ -164,6 +178,81 @@ def packed_matmul(
         xq.xq, pw.packed, xq.scale, scale,
         k=pw.k, codec=pw.codec, impl=impl,
     )
+
+
+# ---------------------------------------------------------------------------
+# ABFT-checked matmul (SDC detection — docs/kernels.md "ABFT checksums")
+# ---------------------------------------------------------------------------
+
+# Tolerance model for the f32 row-sum comparison: both sides reassociate
+# sums of ~K (prediction GEMV) and ~N (output row-sum) f32 terms, so the
+# rounding error is bounded by a small multiple of eps times the
+# POSITIVE-TERM magnitude of those sums; a single flipped trit shifts the
+# row-sum by ±|xq[r, k]| * s (±2x for a -1<->+1 flip), far outside that
+# envelope whenever the row's activation quant is nonzero.
+ABFT_ATOL = 1e-4
+ABFT_EPS_FACTOR = 64.0
+
+
+class AbftError(ValueError):
+    """An ABFT row-sum check failed: the packed weights disagree with
+    their pack-time checksum — a weight (or checksum) bit flipped since
+    pack time. Carries the worst offending row index."""
+
+    def __init__(self, msg: str, row: Optional[int] = None):
+        super().__init__(msg)
+        self.row = row
+
+
+def abft_check(pw, x, act_bits: int = 8, impl: str = "xla"):
+    """Run the packed matmul WITH the ABFT row-sum check (jittable).
+
+    Quantizes ``x`` once, computes ``y = packed_matmul(pw, xq)``, then
+    predicts every output row-sum from the pack-time checksum vector:
+
+        pred[r] = (xq[r, :] @ pw.wsum) / x_scale[r]
+
+    (one GEMV — a factor-N cheaper than the matmul it guards). Returns
+    ``(y, residual, tol)`` where ``residual[r] = |sum_n y[r, n] -
+    pred[r]|`` and ``tol`` is the dtype-derived bound above; a sound
+    check is ``residual <= tol``. Callers that want an exception use
+    :func:`packed_matmul_checked`. Leaf must be 2-D (slice stacked
+    leaves per layer first) and carry ``wsum`` (pack with integrity).
+    """
+    from repro.kernels import ops  # lazy: kernels depend on core.packing
+
+    if pw.wsum is None:
+        raise AbftError(
+            "packed leaf carries no ABFT checksum — repack with "
+            "models.pack.pack_params(..., integrity=True) or stamp via "
+            "models.pack.add_integrity")
+    xq = x if isinstance(x, QuantizedActivation) else act_quant(
+        x, bits=act_bits)
+    scale = jnp.asarray(pw.scale, jnp.float32)
+    if impl == "pallas":  # same broadcast discipline as packed_matmul
+        scale = jnp.broadcast_to(scale.reshape(-1), (pw.packed.shape[-1],))
+    return ops.ternary_matmul_abft(
+        xq.xq, pw.packed, xq.scale, scale, jnp.asarray(pw.wsum, jnp.float32),
+        k=pw.k, codec=pw.codec, impl=impl,
+        atol=ABFT_ATOL, eps_factor=ABFT_EPS_FACTOR,
+    )
+
+
+def packed_matmul_checked(pw, x, act_bits: int = 8, impl: str = "xla"):
+    """Host-level ABFT-checked matmul: returns ``y`` or raises
+    :class:`AbftError` naming the worst offending row. The residual
+    comparison syncs to host — use at scrub points and in tests, not
+    inside the jitted decode graph."""
+    y, residual, tol = abft_check(pw, x, act_bits=act_bits, impl=impl)
+    bad = jnp.asarray(residual > tol)
+    if bool(bad.any()):
+        r = int(jnp.argmax(residual - tol))
+        raise AbftError(
+            f"ABFT row-sum mismatch on {int(bad.sum())} row(s): worst "
+            f"row {r} residual {float(residual[r]):.3e} > tol "
+            f"{float(tol[r]):.3e} — packed words disagree with their "
+            "pack-time checksum (weight SDC)", row=r)
+    return y
 
 
 def expert_packed_matmul(

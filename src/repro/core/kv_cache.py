@@ -468,7 +468,10 @@ def _tier_partial(q, k, v, valid, scale):
     rep = h // g
     qg = q.reshape(b, g, rep, d).astype(jnp.float32)
     kf = _upcast(k)
-    vf = _upcast(v)
+    # invalid rows get p = 0, but 0 * NaN = NaN: a non-finite value in a
+    # masked row (stale bytes, an aliased padding page) must contribute
+    # nothing, so zero it like the flash kernel's v_safe does
+    vf = jnp.where(valid[:, :, None, None], _upcast(v), 0.0)
     logits = jnp.einsum(
         "bgrd,bsgd->bgrs", qg.astype(kf.dtype), kf, preferred_element_type=jnp.float32
     ) * scale
@@ -549,7 +552,9 @@ def tiered_decode_attention_latent(
         m = jnp.max(logits, axis=-1)  # (b, h)
         p = jnp.exp(logits - m[..., None]) * valid[:, None, :]
         denom = jnp.sum(p, axis=-1)
-        num = jnp.einsum("bhs,bsv->bhv", p, kf[..., :value_dim])
+        # p is 0 at invalid rows but 0 * NaN = NaN — zero the latent too
+        lat = jnp.where(valid[:, :, None], kf[..., :value_dim], 0.0)
+        num = jnp.einsum("bhs,bsv->bhv", p, lat)
         return num, denom, m
 
     n1, d1, m1 = partial(cache.hot_k, hot_valid)
@@ -678,7 +683,9 @@ def tiered_chunk_attention(
                 jnp.full((b, g, rep, C), neg),
             )
         kf = _upcast(kbuf)
-        vf = _upcast(vbuf)
+        # causally-masked rows hold real (finite) tokens, so per-row
+        # kvalid zeroing suffices to keep NaN out of 0 * v products
+        vf = jnp.where(kvalid[:, :, None, None], _upcast(vbuf), 0.0)
         logits = jnp.einsum(
             "bgrcd,bsgd->bgrcs", qg.astype(kf.dtype), kf,
             preferred_element_type=jnp.float32,
@@ -1198,6 +1205,47 @@ def write_pool_pages(cache: PagedKVCache, page_ids,
                               pool_v=cache.pool_v.at[:, ids].set(vp))
     return cache._replace(pool_k=cache.pool_k.at[ids].set(kp[0]),
                           pool_v=cache.pool_v.at[ids].set(vp[0]))
+
+
+def gather_pool_pages(cache: PagedKVCache, page_ids):
+    """Read whole pages out of the shared pool: the read mirror of
+    :func:`write_pool_pages`. Returns ``(k_pages, v_pages)`` as numpy
+    arrays of shape (layers, n, page_size, ...) in the storage dtype —
+    layers is 1 for an unstacked cache. One device pull per tensor."""
+    ids = np.asarray(page_ids, np.int32)
+    stacked = np.asarray(cache.lengths).ndim == 2
+    if stacked:
+        return (np.asarray(cache.pool_k[:, ids]),
+                np.asarray(cache.pool_v[:, ids]))
+    return (np.asarray(cache.pool_k[ids])[None],
+            np.asarray(cache.pool_v[ids])[None])
+
+
+def pool_page_crcs(caches: dict, pages) -> dict:
+    """crc32 of each pool page's bytes across every cache stack: the
+    DR-eDRAM retention stamp the serving scrub verifies. ``caches`` is
+    the engine's ``{key: PagedKVCache}`` dict; the per-page digest
+    chains K then V bytes of every stack in sorted-key order, so any
+    single bit flip anywhere in the page's storage changes it. Returns
+    ``{page_id: crc}``; two device pulls per stack regardless of page
+    count."""
+    import zlib
+
+    ids = sorted(int(p) for p in pages)
+    if not ids:
+        return {}
+    crcs = {p: 0 for p in ids}
+    for key in sorted(caches):
+        cache = caches[key]
+        if not hasattr(cache, "page_table"):
+            continue
+        kp, vp = gather_pool_pages(cache, ids)
+        for i, p in enumerate(ids):
+            crcs[p] = zlib.crc32(
+                np.ascontiguousarray(kp[:, i]).tobytes(), crcs[p])
+            crcs[p] = zlib.crc32(
+                np.ascontiguousarray(vp[:, i]).tobytes(), crcs[p])
+    return {p: c & 0xFFFFFFFF for p, c in crcs.items()}
 
 
 def pack_slot_state(states: dict, page_size: int) -> bytes:

@@ -20,6 +20,8 @@ multiple of the group size (4 or 5); ``pad_k`` handles that with zeros
 
 from __future__ import annotations
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -149,3 +151,19 @@ def packed_bytes(n_weights: int, codec: str) -> int:
     if codec == "pack243":
         return (n_weights + PACK243_GROUP - 1) // PACK243_GROUP
     raise ValueError(f"unknown codec {codec!r}")
+
+
+# ---------------------------------------------------------------------------
+# Integrity (serving/sdc.py scrub path)
+# ---------------------------------------------------------------------------
+
+
+def packed_crc32(packed) -> int:
+    """crc32 over a packed trit array's bytes — the ROM integrity stamp.
+
+    Computed once at pack time (the "fab" checksum of the ROM contents)
+    and re-verified by the serving scrub: any bit flip in the packed
+    words — including flips ABFT cannot see because the matching
+    activations were zero — changes the crc. Device arrays are pulled to
+    host; uint8 packed words have no endianness ambiguity."""
+    return zlib.crc32(np.asarray(packed).tobytes()) & 0xFFFFFFFF

@@ -22,6 +22,7 @@ DRAM access energy uses LPDDR-class 20 pJ/bit.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core import dr_edram
 
@@ -145,6 +146,51 @@ def system_efficiency_gain(n_active_params: int, seq_len: int,
         hot_tokens=32, act_bits=act_bits, weight_reload=False,
     )["total_uj"]
     return reload / bitrom
+
+
+# ---------------------------------------------------------------------------
+# DR-eDRAM retention: refresh interval vs failure rate
+# ---------------------------------------------------------------------------
+# The decay-aware eDRAM holds KV state in leaky 1T cells: a cell read
+# after its retention time has decayed. Refreshing more often burns
+# energy; refreshing less often raises the per-bit failure probability —
+# the residual failures are exactly what the serving layer's KV scrub
+# (serving/sdc.py, RetentionInjector) detects and repairs. Retention
+# times follow an exponential tail model: a cell refreshed every t ms
+# fails with p = 1 - exp(-t / tau).
+
+EDRAM_RETENTION_TAU_MS = 100.0  # characteristic retention time, 1T eDRAM
+EDRAM_REFRESH_PJ_PER_BIT = EDRAM_PJ_PER_BIT  # refresh = read + restore
+
+
+def retention_failure_prob(refresh_interval_ms: float,
+                           tau_ms: float = EDRAM_RETENTION_TAU_MS) -> float:
+    """Per-bit probability of decay within one refresh interval:
+    ``p = 1 - exp(-t/tau)``. Monotone increasing in the interval, -> 0
+    as the interval -> 0 and -> 1 as it grows past the retention tail."""
+    if refresh_interval_ms < 0:
+        raise ValueError("refresh interval must be non-negative")
+    return 1.0 - math.exp(-refresh_interval_ms / tau_ms)
+
+
+def refresh_tradeoff(nbytes: int, refresh_interval_ms: float,
+                     tau_ms: float = EDRAM_RETENTION_TAU_MS) -> dict:
+    """The refresh-power / failure-rate frontier for an eDRAM of
+    ``nbytes``: refresh power falls as 1/interval while the expected
+    bit failures per interval rise as ``1 - exp(-t/tau)``. The serving
+    stack picks a scrub cadence against exactly this residual rate."""
+    nbits = nbytes * 8
+    p = retention_failure_prob(refresh_interval_ms, tau_ms)
+    interval_s = refresh_interval_ms * 1e-3
+    # pJ per refresh pass, spread over the interval -> average microwatts
+    refresh_uw = (nbits * EDRAM_REFRESH_PJ_PER_BIT / interval_s * 1e-6
+                  if interval_s > 0 else float("inf"))
+    return {
+        "refresh_interval_ms": refresh_interval_ms,
+        "p_fail_per_bit": p,
+        "expected_bit_failures": nbits * p,
+        "refresh_power_uw": refresh_uw,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -381,6 +381,50 @@ def ternary_matmul_fused(
     return out[:m, :n].reshape(lead + (n,))
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "codec", "impl", "atol", "eps_factor"),
+)
+def ternary_matmul_abft(
+    xq: jax.Array,
+    packed: jax.Array,
+    x_scale: jax.Array,
+    col_scale: jax.Array,
+    wsum: jax.Array,
+    *,
+    k: int,
+    codec: str = "pack2",
+    impl: str = "xla",
+    atol: float = 1e-4,
+    eps_factor: float = 64.0,
+):
+    """Epilogue-fused ternary matmul PLUS the ABFT row-sum check, one
+    jitted dispatch (docs/kernels.md "ABFT checksums").
+
+    ``wsum`` is the pack-time scale-weighted column checksum
+    (``ternary_matmul.abft_wsum``); the predicted output row-sum is the
+    GEMV ``(xq @ wsum) / x_scale`` — factor-N cheaper than the matmul it
+    guards. Returns ``(y, residual, tol)``: a sound result has
+    ``residual <= tol`` everywhere, where ``tol = atol + eps_factor *
+    eps_f32 * mag`` bounds the f32 reassociation error of the two sums
+    by their positive-term magnitude ``mag``. A flipped trit at row k
+    shifts the row-sum by ``±|xq[r, k]| * scale`` — outside ``tol``
+    whenever the row's activation quant at k is nonzero (zero-quant rows
+    are the blind spot the exact crc scrub covers).
+    """
+    y = ternary_matmul_fused(
+        xq, packed, x_scale, col_scale, k=k, codec=codec, impl=impl)
+    xqf = xq.astype(jnp.float32)
+    xs = x_scale[..., 0]
+    wsum = wsum.astype(jnp.float32)
+    pred = (xqf @ wsum) / xs
+    residual = jnp.abs(jnp.sum(y, axis=-1) - pred)
+    mag = ((jnp.abs(xqf) @ jnp.abs(wsum)) / jnp.abs(xs)
+           + jnp.sum(jnp.abs(y), axis=-1))
+    tol = atol + eps_factor * jnp.finfo(jnp.float32).eps * mag
+    return y, residual, tol
+
+
 def _actq_xla(x, packed, col_scale, k, codec, act_bits, out_dtype):
     """Quantize-then-matmul reference path: separate act-quant + dot +
     rescale, numerically identical ops to the fused prologue."""

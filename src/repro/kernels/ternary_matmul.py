@@ -448,3 +448,47 @@ def ternary_matmul_actq_pallas(
         ],
         interpret=interpret,
     )(x, packed, col_scale.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# ABFT weight checksums (serving SDC detection — docs/kernels.md)
+# ---------------------------------------------------------------------------
+
+
+def abft_wsum(packed: jax.Array, k: int, codec: str,
+              scale: jax.Array) -> jax.Array:
+    """Scale-weighted per-row (contraction-axis) ABFT checksum vector.
+
+    For a packed ternary weight ``W`` of logical shape (K, N) with
+    per-column scale ``s`` (a scalar broadcasts), returns the (K,)
+    float32 vector ``wsum[k] = sum_n trit[k, n] * s[n]``. Leading stack
+    dims (layer scan, experts) are vmapped through.
+
+    This is the classic algorithm-based fault-tolerance column checksum
+    specialized to the ternary pipeline: because
+    ``y = (x_q @ trits) * s / x_scale``, the predicted output row-sum is
+    ``sum_n y[r, n] = (x_q[r, :] @ wsum) / x_scale[r]`` — one GEMV per
+    check, a factor-N cheaper than the matmul it guards. A flipped trit
+    at row ``k`` shifts the prediction by ``±x_q[r, k] * s`` (±2 for a
+    −1↔+1 flip), so any activation with a nonzero quant at that row
+    exposes the fault; rows where every activation quantizes to zero are
+    the checksum's blind spot, covered by the exact crc scrub
+    (``core/packing.packed_crc32``).
+
+    Computed once at pack time (models/pack.py) from the SAME packed
+    words the kernels decode, so a post-pack flip is a disagreement
+    between checksum and weight — exactly what the check detects.
+    """
+    unpack = packing.unpack2 if codec == "pack2" else packing.unpack243
+
+    def one(p2, s):
+        trits = unpack(p2)[:k].astype(jnp.float32)
+        sv = jnp.asarray(s, jnp.float32)
+        if sv.ndim == 0:
+            return jnp.sum(trits, axis=-1) * sv
+        return trits @ sv
+
+    fn = one
+    for _ in range(packed.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(packed, scale)

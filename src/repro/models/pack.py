@@ -40,7 +40,8 @@ Not fused (and why):
 
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Iterator, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -113,8 +114,18 @@ def fuse_packed(pws: Sequence[PackedLinear]) -> FusedPackedLinear:
         s = jnp.asarray(pw.scale, jnp.float32)
         cols.append(jnp.broadcast_to(s[..., None], s.shape + (w,)))
     scale = jnp.concatenate(cols, axis=-1)
-    return FusedPackedLinear(packed=packed, scale=scale, k=k, codec=codec,
-                             splits=splits)
+    fused = FusedPackedLinear(packed=packed, scale=scale, k=k, codec=codec,
+                              splits=splits)
+    if all(pw.wsum is not None for pw in pws):
+        # per-segment wsum vectors are already scale-weighted row-sums,
+        # so the fused checksum is their plain sum; the crc re-covers
+        # the concatenated words (segment crcs don't compose)
+        fused = dataclasses.replace(
+            fused,
+            wsum=sum(jnp.asarray(pw.wsum, jnp.float32) for pw in pws),
+            crc=packing.packed_crc32(packed),
+        )
+    return fused
 
 
 def _fuse_tree(tree):
@@ -137,7 +148,7 @@ def _fuse_tree(tree):
 
 
 def pack_params(params, cfg: ModelConfig, codec: str | None = None,
-                fuse: bool | None = None):
+                fuse: bool | None = None, integrity: bool = False):
     """Convert a QAT parameter tree to the packed-inference tree.
 
     Inputs: a (possibly nested) dict tree whose quantizable projection
@@ -155,6 +166,12 @@ def pack_params(params, cfg: ModelConfig, codec: str | None = None,
     kernel would block GSPMD propagation — sharded lowering runs the XLA
     impl over unfused leaves. Do not flip that default without mirroring
     the fused names into the sharding-rule table.
+
+    ``integrity=True`` additionally stamps every packed leaf with ABFT
+    wsum + crc32 metadata (see ``add_integrity``) — what the serving
+    SDC scrub verifies against. Off by default: the metadata adds a
+    pytree leaf, and structure-sensitive consumers (sharding-rule
+    zips) that predate it should opt in explicitly.
     """
     from repro.core.bitlinear import quantize_int8
 
@@ -166,7 +183,8 @@ def pack_params(params, cfg: ModelConfig, codec: str | None = None,
             if set(tree.keys()) == {"w"} and path and str(path[-1]) in PACK_KEYS:
                 if not cfg.bitnet.enabled:
                     return tree
-                return _pack_weight(tree["w"], codec)
+                pw = _pack_weight(tree["w"], codec)
+                return _stamp_integrity(pw) if integrity else pw
             if (
                 cfg.bitnet.embed_int8
                 and set(tree.keys()) == {"w"}
@@ -183,6 +201,69 @@ def pack_params(params, cfg: ModelConfig, codec: str | None = None,
     if fuse and cfg.bitnet.enabled:
         packed = _fuse_tree(packed)
     return packed
+
+
+# ---------------------------------------------------------------------------
+# SDC integrity metadata (serving/sdc.py — docs/serving.md "Fault model")
+# ---------------------------------------------------------------------------
+
+
+def _stamp_integrity(pw):
+    """Return ``pw`` with ABFT wsum + crc32 metadata computed from its
+    OWN packed words (the "fab" reference the serving scrub re-verifies
+    against). Idempotent in effect: re-stamping a clean leaf reproduces
+    the same metadata."""
+    from repro.kernels.ternary_matmul import abft_wsum
+
+    return dataclasses.replace(
+        pw,
+        wsum=abft_wsum(pw.packed, pw.k, pw.codec,
+                       jnp.asarray(pw.scale, jnp.float32)),
+        crc=packing.packed_crc32(pw.packed),
+    )
+
+
+def iter_packed_leaves(packed_tree) -> Iterator[Tuple[str, object]]:
+    """Yield ``(dotted_path, leaf)`` for every Packed/FusedPackedLinear
+    in the tree, in deterministic (sorted-key) order — the enumeration
+    the fault injectors and the weight scrub share, so "leaf i" means
+    the same tensor to both."""
+
+    def walk(tree, path):
+        if isinstance(tree, (PackedLinear, FusedPackedLinear)):
+            yield ".".join(path), tree
+        elif isinstance(tree, dict):
+            for key in sorted(tree):
+                yield from walk(tree[key], path + (str(key),))
+
+    yield from walk(packed_tree, ())
+
+
+def add_integrity(packed_tree):
+    """Stamp ABFT wsum + crc32 metadata onto every packed leaf that
+    lacks it (leaves already stamped pass through). Structure-preserving
+    for everything else; use on trees packed with ``integrity=False``
+    (e.g. before handing them to ``Engine(integrity=...)``)."""
+    if isinstance(packed_tree, (PackedLinear, FusedPackedLinear)):
+        if packed_tree.crc is None:
+            return _stamp_integrity(packed_tree)
+        return packed_tree
+    if isinstance(packed_tree, dict):
+        return {k: add_integrity(v) for k, v in packed_tree.items()}
+    return packed_tree
+
+
+def verify_packed(packed_tree) -> List[str]:
+    """Re-crc every stamped packed leaf against its pack-time crc32 and
+    return the dotted paths that mismatch (empty list = clean). This is
+    the EXACT weight-integrity check — it catches flips the ABFT
+    row-sum check cannot see (rows whose activations quantize to zero).
+    Leaves without a crc stamp are skipped, not failed."""
+    bad = []
+    for path, pw in iter_packed_leaves(packed_tree):
+        if pw.crc is not None and packing.packed_crc32(pw.packed) != pw.crc:
+            bad.append(path)
+    return bad
 
 
 def packed_param_bytes(packed_tree) -> dict:

@@ -40,7 +40,8 @@ class InvariantViolation(RuntimeError):
     """A serving-plane protocol invariant failed under test."""
 
 
-def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None
+def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None,
+                             sdc_budget: Optional[Dict[str, int]] = None
                              ) -> None:
     """Validate the page-pool refcount protocol against ``ctx`` (the
     engine's ``_ServeCtx``), raising :class:`InvariantViolation` on the
@@ -49,8 +50,11 @@ def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None
       1. no refcount is negative;
       2. the free list has no duplicates and only in-range pages;
       3. free pages have refcount 0 and referenced pages are not free —
-         free ∪ referenced partitions the pool;
-      4. ``pool.used()`` reconciles with the free-list length;
+         free ∪ referenced ∪ quarantined partitions the pool (a
+         quarantined page — SDC scrub found its bytes corrupted — is
+         neither free nor, once its readers drained, referenced);
+      4. ``pool.used()`` reconciles with the free-list length and the
+         quarantine set;
       5. every page's refcount equals its KNOWN readers: prefix-tree
          nodes + live slots' page lists + ``extra_refs`` (pages the
          chaos injector is deliberately holding). This is strict
@@ -66,7 +70,20 @@ def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None
          every decoding slot's page list holds EXACTLY the pages its
          mirrored length needs (``paging.pages_needed``) — i.e. the
          rollback's trailing decref returned every page the rejected
-         suffix transiently occupied, leaving none stranded.
+         suffix transiently occupied, leaving none stranded;
+      8. quarantined pages are DEAD: never on the free list, never in
+         the prefix tree, never in a live slot's page list (and hence
+         never in a host-table live row, by check 6) — the SDC repair
+         ladder's "never served again" guarantee;
+      9. (with ``sdc_budget``, the chaos injector's own injection
+         totals) the SDC counters reconcile with the fault schedule:
+         the scrub cannot detect faults nobody injected —
+         ``weight_reloads <= weight_asserts``, ``|quarantined| <=
+         page_flips``, ``slots_quarantined <= nan_pokes``, and
+         ``sdc_detected`` is bounded by the grand total. Detections
+         legitimately LAG injections (scrub cadence), so these are
+         inequalities per tick; the e2e tests pin exact equality at
+         end of run.
 
     A non-paged ctx (``ctx.pool is None``) passes the page checks
     vacuously (the speculation ledger check still runs).
@@ -76,6 +93,7 @@ def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None
     pool = ctx.pool
     if pool is None:
         return
+    quarantined = getattr(pool, "quarantined", set())
     if (pool.refs < 0).any():
         bad = int((pool.refs < 0).argmax())
         raise InvariantViolation(
@@ -95,13 +113,13 @@ def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None
         if pool.refs[p] > 0 and p in free_set:
             raise InvariantViolation(
                 f"page {p} is referenced ({int(pool.refs[p])}) AND free")
-        if pool.refs[p] == 0 and p not in free_set:
+        if pool.refs[p] == 0 and p not in free_set and p not in quarantined:
             raise InvariantViolation(
                 f"page {p} has no readers but is not on the free list")
-    if pool.used() != pool.n_pages - len(free):
+    if pool.used() != pool.n_pages - len(free) - len(quarantined):
         raise InvariantViolation(
-            f"used() = {pool.used()} but pool has {len(free)} free "
-            f"of {pool.n_pages}")
+            f"used() = {pool.used()} but pool has {len(free)} free and "
+            f"{len(quarantined)} quarantined of {pool.n_pages}")
     expected: Counter = Counter()
     if ctx.ptree is not None:
         expected.update(ctx.ptree.tree_pages())
@@ -127,6 +145,50 @@ def check_serving_invariants(ctx, extra_refs: Optional[Dict[int, int]] = None
                 raise InvariantViolation(
                     f"slot {s} host-table row {row} != page list "
                     f"{ctx.slot_pages[s]}")
+    # 8. quarantined pages are dead to every reader
+    for p in sorted(quarantined):
+        if p in free_set:
+            raise InvariantViolation(f"quarantined page {p} is on the "
+                                     "free list")
+        if ctx.ptree is not None and p in set(ctx.ptree.tree_pages()):
+            raise InvariantViolation(f"quarantined page {p} is still in "
+                                     "the prefix tree")
+        for s in live:
+            if p in ctx.slot_pages[s]:
+                raise InvariantViolation(
+                    f"quarantined page {p} is still mapped by slot {s}")
+    if sdc_budget is not None:
+        _check_sdc_counters(ctx, sdc_budget)
+
+
+def _check_sdc_counters(ctx, budget: Dict[str, int]) -> None:
+    """Check 9: per-tick reconciliation of the SDC ladder counters
+    against the chaos injectors' own totals (``budget`` keys:
+    ``weight_asserts`` / ``page_flips`` / ``nan_pokes``). Detection may
+    lag injection (scrub cadence) but can never exceed it — a repair
+    counter above its injection budget means the scrub is inventing
+    faults (or a test is faking counters, which the falsifiability
+    suite does on purpose)."""
+    st = ctx.stats
+    w = int(budget.get("weight_asserts", 0))
+    p = int(budget.get("page_flips", 0))
+    n = int(budget.get("nan_pokes", 0))
+    if st.weight_reloads > w:
+        raise InvariantViolation(
+            f"weight_reloads {st.weight_reloads} exceeds injected weight "
+            f"asserts {w}")
+    n_quar = len(getattr(ctx.pool, "quarantined", set()) or ())
+    if n_quar > p:
+        raise InvariantViolation(
+            f"{n_quar} quarantined pages exceed injected page flips {p}")
+    if st.slots_quarantined > n:
+        raise InvariantViolation(
+            f"slots_quarantined {st.slots_quarantined} exceeds injected "
+            f"NaN pokes {n}")
+    if st.sdc_detected > w + p + n:
+        raise InvariantViolation(
+            f"sdc_detected {st.sdc_detected} exceeds total injected "
+            f"faults {w + p + n}")
 
 
 def _check_speculation(ctx) -> None:
@@ -172,6 +234,12 @@ class ChaosConfig:
     straggle_rate: float = 0.0  # sleep inside the serve loop...
     straggle_seconds: float = 0.02  # ...this long (a 'slow decode chunk')
     cancel_rate: float = 0.0  # cancel a live request mid-flight
+    # SDC fault classes (serving/sdc.py; need Engine(integrity=...) for
+    # the engine to fight back) — independent streams at seed+3/+4/+5:
+    weight_flip_rate: float = 0.0  # mint a stuck ROM bit address
+    weight_reassert: Optional[int] = 1  # re-asserts per address (None=∞)
+    page_decay_rate: float = 0.0  # per-iteration retention decay rate
+    nan_rate: float = 0.0  # poke NaN into a decoding slot's hot KV
     check_invariants: bool = True
 
 
@@ -192,11 +260,22 @@ class ChaosInjector:
     """
 
     def __init__(self, engine, config: ChaosConfig):
+        from repro.serving import sdc
+
         self.engine = engine
         self.cfg = config
         self._exhaust = FaultSchedule(config.seed, config.exhaust_rate)
         self._straggle = FaultSchedule(config.seed + 1, config.straggle_rate)
         self._cancel = FaultSchedule(config.seed + 2, config.cancel_rate)
+        # SDC adversaries ride their own streams so enabling them never
+        # shifts the classic injection points (same contract as above)
+        self.rom = sdc.RomFaultInjector(
+            config.seed + 3, config.weight_flip_rate,
+            reassert=config.weight_reassert)
+        self.retention = sdc.RetentionInjector(
+            config.seed + 4, config.page_decay_rate)
+        self._nan = FaultSchedule(config.seed + 5, config.nan_rate)
+        self.nan_pokes = 0
         self.monitor = StragglerMonitor(window=20, factor=3.0)
         self.held: List[Tuple[int, List[int]]] = []  # (release_at, pages)
         self.cancelled: List[int] = []
@@ -240,8 +319,33 @@ class ChaosInjector:
                 rid = self._cancel.pick(cands)
                 self.engine.cancel(rid)
                 self.cancelled.append(rid)
+        # SDC planes: stuck ROM bits (persistent, re-asserted after
+        # repair), retention decay of stamped KV pages, transient NaN
+        # upsets in a decoding slot's hot tier
+        self.rom.on_iteration(self.engine, ctx)
+        self.retention.on_iteration(self.engine, ctx)
+        if self._nan.fires(it):
+            from repro.serving import sdc
+
+            decoding = [s for s in ctx.sched.active_slots()
+                        if s not in ctx.prefilling
+                        and s not in ctx.draft_prefilling]
+            if decoding and sdc.inject_activation_nan(
+                    ctx, self._nan.pick(decoding)):
+                self.nan_pokes += 1
         if self.cfg.check_invariants:
-            check_serving_invariants(ctx, extra_refs=self._held_counts())
+            check_serving_invariants(
+                ctx, extra_refs=self._held_counts(),
+                sdc_budget=self.sdc_budget())
+
+    def sdc_budget(self) -> Dict[str, int]:
+        """The injected-fault totals the counter-reconciliation check
+        (check 9) bounds the engine's detections against."""
+        return {
+            "weight_asserts": self.rom.injected,
+            "page_flips": self.retention.injected,
+            "nan_pokes": self.nan_pokes,
+        }
 
     # -- teardown -------------------------------------------------------
     def _held_counts(self) -> Counter:
@@ -280,6 +384,14 @@ class FleetChaosConfig:
     corrupt_rate: float = 0.0  # flip a byte in the next warm handoff
     max_kills: int = 2  # total kill budget for the run
     min_survivors: int = 1  # never kill below this many live replicas
+    # SDC planes, per replica per tick (engines must be built with an
+    # IntegrityConfig or the faults go undetected by design). Each
+    # replica gets its own stream family at seed + 3*(index+1) in sorted
+    # replica-name order, so fleets of different sizes never alias.
+    weight_flip_rate: float = 0.0  # mint a stuck ROM bit on one replica
+    weight_reassert: Optional[int] = 1  # re-asserts per address (None=forever)
+    page_decay_rate: float = 0.0  # per-page-per-tick retention decay
+    nan_rate: float = 0.0  # transient NaN upset in a decoding slot
     check_invariants: bool = True
 
 
@@ -305,6 +417,54 @@ class FleetChaosInjector:
         self.kills: List[Tuple[int, str]] = []  # (tick, replica)
         self.stalls: List[Tuple[int, str]] = []
         self.corruptions: List[int] = []
+        # per-replica SDC adversaries, created lazily on first sight of a
+        # replica name; stream family is a function of the name's rank in
+        # the fleet (see FleetChaosConfig) so runs are reproducible
+        self._sdc: Dict[str, tuple] = {}
+        self.nan_pokes = 0
+
+    def _sdc_for(self, name: str, rank: int):
+        if name not in self._sdc:
+            from repro.serving import sdc
+
+            base = self.cfg.seed + 3 * (rank + 1)
+            self._sdc[name] = (
+                sdc.RomFaultInjector(base, self.cfg.weight_flip_rate,
+                                     reassert=self.cfg.weight_reassert),
+                sdc.RetentionInjector(base + 1, self.cfg.page_decay_rate),
+                FaultSchedule(base + 2, self.cfg.nan_rate),
+            )
+        return self._sdc[name]
+
+    def _inject_sdc(self, router) -> None:
+        from repro.serving import sdc
+
+        tick = router.stats.ticks
+        for rank, name in enumerate(sorted(router.replicas)):
+            rep = router.replicas[name]
+            if rep.dead or rep.ctx is None:
+                continue
+            rom, retention, nan = self._sdc_for(name, rank)
+            rom.on_iteration(rep.engine, rep.ctx)
+            retention.on_iteration(rep.engine, rep.ctx)
+            if nan.fires(tick):
+                ctx = rep.ctx
+                decoding = [s for s in ctx.sched.active_slots()
+                            if s not in ctx.prefilling
+                            and s not in ctx.draft_prefilling]
+                if decoding and sdc.inject_activation_nan(
+                        ctx, nan.pick(decoding)):
+                    self.nan_pokes += 1
+
+    def sdc_budget(self) -> Dict[str, int]:
+        """Fleet-wide injected-fault totals (summed over replicas)."""
+        roms = [v[0] for v in self._sdc.values()]
+        rets = [v[1] for v in self._sdc.values()]
+        return {
+            "weight_asserts": sum(r.injected for r in roms),
+            "page_flips": sum(r.injected for r in rets),
+            "nan_pokes": self.nan_pokes,
+        }
 
     def on_tick(self, router) -> None:
         tick = router.stats.ticks
@@ -324,6 +484,7 @@ class FleetChaosInjector:
             if corrupt is not None:
                 corrupt()
                 self.corruptions.append(tick)
+        self._inject_sdc(router)
         if self.cfg.check_invariants:
             check_fleet_invariants(router)
 
@@ -346,7 +507,12 @@ def check_fleet_invariants(router) -> None:
          reader);
       5. counter reconciliation: router retries equal the per-request
          dispatch surplus, and every terminal outcome the router holds
-         is consistent with its accepted set.
+         is consistent with its accepted set;
+      6. SDC retirement accounting: ``stats.sdc_retirements`` equals the
+         router's SDC-retired set, and every replica in that set is
+         permanently gone — dead, barred from restart, with its engine
+         still flagged ``unhealthy`` (nothing quietly resurrected a
+         replica whose ROM plane struck out).
     """
     locations: Dict[int, List[str]] = {}
 
@@ -400,3 +566,16 @@ def check_fleet_invariants(router) -> None:
         raise InvariantViolation(
             f"failed terminals {n_failed} != stats.failed "
             f"{router.stats.failed}")
+    sdc_retired = getattr(router, "_sdc_retired", set())
+    if router.stats.sdc_retirements != len(sdc_retired):
+        raise InvariantViolation(
+            f"sdc_retirements {router.stats.sdc_retirements} != retired "
+            f"set {sorted(sdc_retired)}")
+    for name in sdc_retired:
+        rep = router.replicas[name]
+        if (not rep.dead or name not in router._retired
+                or not getattr(rep.engine, "unhealthy", False)):
+            raise InvariantViolation(
+                f"SDC-retired replica {name} is not permanently dead "
+                f"(dead={rep.dead}, retired={name in router._retired}, "
+                f"unhealthy={getattr(rep.engine, 'unhealthy', False)})")

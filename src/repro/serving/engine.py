@@ -126,6 +126,7 @@ from repro.core.kv_cache import HandoffError
 from repro.distributed.fault import PreemptionGuard, StragglerMonitor
 from repro.models import pack as pack_lib
 from repro.models import transformer as T
+from repro.serving import sdc as sdc_lib
 from repro.serving import speculative as spec_lib
 from repro.serving.paging import (PagePool, PagePoolError, PrefixCache,
                                   PrefixMatch, pages_needed)
@@ -166,6 +167,10 @@ class DecodeState(NamedTuple):
     draft_cache: Any = None  # draft model's per-slot tiered KV cache
     drafted: Any = None  # (slots,) int32 — draft proposals scored so far
     accepted: Any = None  # (slots,) int32 — proposals the target accepted
+    # SDC sentinel: latches (slots,) True when a step's logits go
+    # non-finite for an active slot — folded ON DEVICE every dispatch,
+    # read only at scrub sync points (serving/sdc.py)
+    numerics_bad: Any = None
 
 
 @dataclasses.dataclass
@@ -214,6 +219,14 @@ class ServeStats:
     # round always emits its pending token on top of the accepted run).
     drafted_tokens: int = 0
     accepted_tokens: int = 0
+    # SDC ladder counters (0 unless Engine(integrity=...) is set): faults
+    # the scrub detected, full KV pages crc-verified, packed leaves
+    # reloaded from their golden copy, and slots contained for
+    # non-finite logits (outcome "numerics")
+    sdc_detected: int = 0
+    pages_scrubbed: int = 0
+    weight_reloads: int = 0
+    slots_quarantined: int = 0
 
     def record_spec(self, fin: FinishedRequest) -> None:
         self.drafted_tokens += fin.drafted_tokens
@@ -264,6 +277,15 @@ class _ServeCtx:
     monitor: Optional[StragglerMonitor] = None
     stall: int = 0
     drained: Optional[List[Request]] = None
+    # SDC scrub state (Engine(integrity=...)): crc stamps over FULL cold
+    # pages keyed page -> (born, crc32) — `born` names the page's
+    # current life (PagePool.born), so stale stamps can never follow a
+    # reallocated id; per-slot count of tokens verified at the last
+    # clean scrub (the rollback target for detected corruption); and
+    # the iteration of the last scrub (cadence bookkeeping)
+    page_crc: Dict[int, tuple] = dataclasses.field(default_factory=dict)
+    verified_len: Optional[List[int]] = None
+    last_scrub: int = -1
 
 
 class Engine:
@@ -306,6 +328,7 @@ class Engine:
         spec_k: int = 0,
         spec_force: Optional[str] = None,
         guard: Optional[PreemptionGuard] = None,
+        integrity: Optional[sdc_lib.IntegrityConfig] = None,
     ):
         self.cfg = cfg
         # Freeze to ROM form once (packed trits + fused wqkv/wgu/w_dqkv/w_gu
@@ -418,6 +441,26 @@ class Engine:
         # to resubmit here or on another replica with bit-exact greedy
         # continuation.
         self.guard = guard
+        # SDC integrity plane (serving/sdc.py; docs/serving.md "Fault
+        # model & SDC ladder"): stamp every packed leaf with ABFT wsum +
+        # crc32, verify the stamps at load (a corrupt ROM image refuses
+        # to come up), and keep a HOST-side golden copy of the packed
+        # words — the repair ladder's reload source. The serve loop then
+        # scrubs on the cadence in `integrity` (engine._scrub).
+        self.integrity = integrity
+        self._golden: Optional[Dict[str, np.ndarray]] = None
+        self.weight_fault_strikes = 0  # distinct scrubs that found faults
+        self.unhealthy = False  # strikes >= max_weight_strikes
+        if integrity is not None:
+            self.params = pack_lib.add_integrity(self.params)
+            bad = pack_lib.verify_packed(self.params)
+            if bad:
+                raise sdc_lib.WeightFaultError(
+                    f"packed weights failed crc32 at load: {bad}")
+            self._golden = {
+                path: np.asarray(pw.packed).copy()
+                for path, pw in pack_lib.iter_packed_leaves(self.params)
+            }
         self.last_drained: Optional[List[Request]] = None
         self._cancel_requested: Set[int] = set()
         self.last_stats: Optional[ServeStats] = None  # of the last serve()
@@ -529,6 +572,7 @@ class Engine:
             draft_cache=draft_cache,
             drafted=z(),
             accepted=z(),
+            numerics_bad=jnp.zeros((n_slots,), bool),
         )
 
     def _cache_batch_axes(self):
@@ -609,12 +653,16 @@ class Engine:
             done = state.done | (active & (n_gen >= state.max_new))
             if stop_token is not None:
                 done = done | (active & (tok == stop_token))
+            # SDC sentinel: latch non-finite logits per active slot, on
+            # device — the scrub reads it at the next sync point
+            numerics_bad = state.numerics_bad | (
+                active & ~jnp.isfinite(logits).all(axis=-1))
             return DecodeState(
                 cache=cache, tok=tok, key=key_next, allocated=state.allocated,
                 done=done, seq_len=seq_len, n_gen=n_gen,
                 max_new=state.max_new, out=out, ledger=ledger,
                 draft_cache=state.draft_cache, drafted=state.drafted,
-                accepted=state.accepted,
+                accepted=state.accepted, numerics_bad=numerics_bad,
             )
 
         fn = jax.jit(step, donate_argnums=(1,))
@@ -652,6 +700,7 @@ class Engine:
                 draft_cache=state.draft_cache,
                 drafted=state.drafted.at[idx].set(0),
                 accepted=state.accepted.at[idx].set(0),
+                numerics_bad=state.numerics_bad.at[idx].set(False),
             )
 
         self._admit_fn = jax.jit(admit, donate_argnums=(0,))
@@ -711,6 +760,7 @@ class Engine:
                 draft_cache=state.draft_cache,
                 drafted=jnp.where(is_first, 0, state.drafted),
                 accepted=jnp.where(is_first, 0, state.accepted),
+                numerics_bad=jnp.where(is_first, False, state.numerics_bad),
             )
 
         self._chunk_step_fn = jax.jit(chunk_step, donate_argnums=(1,))
@@ -844,6 +894,9 @@ class Engine:
             ledger = {
                 kk: state.ledger[kk] + tr[kk] * act32 for kk in TRAFFIC_KEYS
             }
+            # SDC sentinel over the verify logits (slots, K, vocab)
+            numerics_bad = state.numerics_bad | (
+                active & ~jnp.isfinite(logits).all(axis=(-2, -1)))
             return DecodeState(
                 cache=cache, tok=tok, key=state.key,
                 allocated=state.allocated, done=done, seq_len=seq_len,
@@ -851,6 +904,7 @@ class Engine:
                 draft_cache=dcache,
                 drafted=state.drafted + jnp.maximum(chunk_valid - 1, 0),
                 accepted=state.accepted + jnp.maximum(n_emit - 1, 0),
+                numerics_bad=numerics_bad,
             )
 
         fn = jax.jit(spec_step, donate_argnums=(2,))
@@ -898,6 +952,7 @@ class Engine:
                 draft_cache=state.draft_cache,
                 drafted=jnp.where(reset, 0, state.drafted),
                 accepted=jnp.where(reset, 0, state.accepted),
+                numerics_bad=jnp.where(reset, False, state.numerics_bad),
             )
 
         self._paged_admit_fn = jax.jit(admit, donate_argnums=(0,))
@@ -968,11 +1023,14 @@ class Engine:
                     k: kv_cache.release_slots(c, mj)
                     for k, c in state.draft_cache.items()
                 }
+        if state.numerics_bad is not None:
+            kw["numerics_bad"] = state.numerics_bad & ~mj
         return state._replace(
             allocated=state.allocated & ~mj, done=state.done & ~mj, **kw
         )
 
-    def _preempt_slot(self, ctx: _ServeCtx, s: int) -> None:
+    def _preempt_slot(self, ctx: _ServeCtx, s: int,
+                      n_fold: Optional[int] = None) -> None:
         """Evict slot ``s`` mid-flight to reclaim its pages: fold the
         tokens it already emitted into the request's prompt, release its
         pages and device row, and requeue the request (its arrival stamp
@@ -981,7 +1039,14 @@ class Engine:
         but neither emitted nor cached, so re-prefilling
         prompt ‖ t_0..t_{k-1} deterministically re-samples t_k from the
         same last-position logits — and the prefix cache means only the
-        suffix past the longest shared prefix is actually recomputed."""
+        suffix past the longest shared prefix is actually recomputed.
+
+        ``n_fold`` caps how many emitted tokens fold into the prompt —
+        the SDC repair ladder passes the slot's last scrub-verified
+        count, so tokens emitted after a detected corruption are
+        DISCARDED and regenerated from the clean prefix instead of
+        poisoning the re-admission (the traffic ledger still charges
+        the full attempt: the device really did that work)."""
         req = ctx.sched.slot_req[s]
         tb = ctx.token_bytes
         carry = (dict(req.carry_traffic) if req.carry_traffic
@@ -997,6 +1062,8 @@ class Engine:
             st = ctx.state
             p_attempt = req.prompt_len
             n_gen = int(np.asarray(st.n_gen[s]))
+            if n_fold is not None:
+                n_gen = min(n_fold, n_gen)
             if n_gen:
                 out_row = np.asarray(st.out[s, :n_gen], np.int32)
                 if req.orig_prompt_len is None:
@@ -1025,6 +1092,8 @@ class Engine:
         ctx.prefix_used[s] = 0
         ctx.remaining[s] = 0
         ctx.seq_mirror[s] = 0
+        if ctx.verified_len is not None:
+            ctx.verified_len[s] = 0
         ctx.sched.requeue(s)
         ctx.state = self._release_slot_state(
             ctx.state, s, truncate=ctx.chunked)
@@ -1300,6 +1369,8 @@ class Engine:
         ctx.prefix_used[s] = 0
         ctx.remaining[s] = 0
         ctx.seq_mirror[s] = 0
+        if ctx.verified_len is not None:
+            ctx.verified_len[s] = 0
         ctx.state = self._release_slot_state(
             ctx.state, s, truncate=ctx.chunked)
 
@@ -1329,6 +1400,155 @@ class Engine:
                         getattr(ctx.stats, outcome) + 1)
                 events += 1
         return events
+
+    # ------------------------------------------------------------------
+    # SDC scrub: the detect -> contain -> repair ladder
+    # (serving/sdc.py; docs/serving.md "Fault model & SDC ladder")
+    # ------------------------------------------------------------------
+
+    def _scrub(self, ctx: _ServeCtx) -> None:
+        """One scrub pass, run inside ``run_iteration`` BEFORE harvest:
+
+          1. weights — re-crc every packed leaf (exact) and optionally
+             ABFT-probe it; a mismatch reloads the leaf from its golden
+             host copy, flushes the prefix tree, rolls every live slot
+             back to its verified frontier and counts a strike
+             (``max_weight_strikes`` strikes -> ``unhealthy``, the
+             Router's retirement signal);
+          2. KV pages — crc-stamp newly FULL cold pages and re-verify
+             existing stamps; a mismatch quarantines the page for good,
+             evicts the damaged subtree from the prefix tree and rolls
+             the owning slots back to their verified frontier;
+          3. numerics — read the device ``numerics_bad`` sentinel;
+             a latched slot is contained (terminal outcome
+             ``"numerics"``) or raised as :class:`sdc.NumericsError`,
+             per ``IntegrityConfig.on_numerics``.
+
+        Runs every ``scrub_every`` iterations AND whenever a decoding
+        slot is ripe for harvest — harvest gating: no request retires
+        with an unverified tail, which is what makes the ladder's
+        recompute-from-prefix produce bit-identical greedy outputs.
+        Slots that come through clean advance ``ctx.verified_len`` to
+        their current emitted count — the rollback target is therefore
+        always from a scrub that PRECEDES any later-detected fault."""
+        ic = self.integrity
+        done = np.asarray(ctx.state.done)
+        ripe = any(
+            done[s] for s in ctx.sched.active_slots()
+            if s not in ctx.prefilling
+        )
+        if not (ripe or ctx.iteration - ctx.last_scrub >= ic.scrub_every):
+            return
+        ctx.last_scrub = ctx.iteration
+        weight_hit = ic.scrub_weights and self._scrub_weights(ctx)
+        if not weight_hit and ic.scrub_pages and self.paged:
+            self._scrub_pages(ctx)
+        self._check_numerics(ctx)
+        # surviving decoding slots advance their verified frontier
+        n_gen = np.asarray(ctx.state.n_gen)
+        for s in ctx.sched.active_slots():
+            if s in ctx.prefilling or s in ctx.draft_prefilling:
+                continue
+            ctx.verified_len[s] = int(n_gen[s])
+
+    def _scrub_weights(self, ctx: _ServeCtx) -> bool:
+        """Detect + repair packed-weight corruption. Returns True when a
+        fault was found (the caller then skips the page scrub: every
+        page crc stamp was just invalidated anyway)."""
+        bad = set(pack_lib.verify_packed(self.params))
+        if self.integrity.abft_probe:
+            bad |= set(sdc_lib.abft_verify_tree(self.params))
+        if not bad:
+            return False
+        ctx.stats.sdc_detected += len(bad)
+        for path in sorted(bad):
+            gold = (self._golden or {}).get(path)
+            if gold is None:
+                continue  # unrepairable leaf: strike below still counts
+            leaf = sdc_lib.get_leaf(self.params, path)
+            self.params = sdc_lib.set_leaf(
+                self.params, path,
+                dataclasses.replace(leaf, packed=jnp.asarray(gold)))
+            self.weight_loads += 1
+            ctx.stats.weight_reloads += 1
+        self.weight_fault_strikes += 1
+        if self.weight_fault_strikes >= self.integrity.max_weight_strikes:
+            # repeated faults = a genuinely bad ROM bank, not a cosmic
+            # ray; the Router health sweep drains + retires the replica
+            self.unhealthy = True
+        # containment: everything computed since the fault window opened
+        # is suspect — cached prefixes, page stamps, unverified tails
+        if ctx.ptree is not None:
+            ctx.ptree.flush()
+        ctx.page_crc.clear()
+        for s in list(ctx.sched.active_slots()):
+            self._preempt_slot(ctx, s, n_fold=ctx.verified_len[s])
+        return True
+
+    def _scrub_pages(self, ctx: _ServeCtx) -> None:
+        """Detect + contain KV-page corruption: stamp newly full pages,
+        re-verify stamped ones, quarantine mismatches and roll their
+        readers back. Only FULL cold pages behind each slot's frontier
+        (plus all tree-held pages) are covered — full pages are
+        append-frozen, so their bytes are content-addressable; the hot
+        tier and the partial frontier page mutate legitimately and are
+        covered by the numerics sentinel only (docs/serving.md)."""
+        pool, ptree = ctx.pool, ctx.ptree
+        hc, ps = self.hot_cap, self._page_size
+        seq_dev = np.asarray(ctx.state.seq_len)
+        want = set(ptree.tree_pages()) if ptree is not None else set()
+        for s in ctx.sched.active_slots():
+            nf = max(0, int(seq_dev[s]) - hc) // ps
+            want.update(ctx.slot_pages[s][:nf])
+        # retire stamps whose page left the stamped set or was re-
+        # allocated to a new life (born advanced) since stamping
+        for p in list(ctx.page_crc):
+            if p not in want or ctx.page_crc[p][0] != int(pool.born[p]):
+                del ctx.page_crc[p]
+        check = sorted(ctx.page_crc)
+        fresh = sorted(want - set(check))
+        crcs = kv_cache.pool_page_crcs(ctx.state.cache, check + fresh)
+        bad = [p for p in check if crcs[p] != ctx.page_crc[p][1]]
+        for p in fresh:
+            ctx.page_crc[p] = (int(pool.born[p]), crcs[p])
+        ctx.stats.pages_scrubbed += len(check)
+        if not bad:
+            return
+        ctx.stats.sdc_detected += len(bad)
+        # quarantine FIRST so the eviction/preemption decrefs park the
+        # damaged pages instead of returning them to the free list
+        for p in bad:
+            pool.quarantine(p)
+            del ctx.page_crc[p]
+        if ptree is not None:
+            ptree.evict_pages(bad)
+        bad_set = set(bad)
+        for s in list(ctx.sched.active_slots()):
+            if bad_set & set(ctx.slot_pages[s]):
+                self._preempt_slot(ctx, s, n_fold=ctx.verified_len[s])
+
+    def _check_numerics(self, ctx: _ServeCtx) -> None:
+        """Read the latched non-finite-logits sentinel and contain (or
+        raise on) every flagged slot. Containment surfaces the request
+        with terminal outcome ``"numerics"`` — its partial output is
+        suspect by construction and must not be silently retried."""
+        if ctx.state.numerics_bad is None:
+            return
+        flagged = np.asarray(ctx.state.numerics_bad)
+        for s in list(ctx.sched.active_slots()):
+            if not flagged[s]:
+                continue
+            ctx.stats.sdc_detected += 1
+            if self.integrity.on_numerics == "raise":
+                req = ctx.sched.slot_req[s]
+                raise sdc_lib.NumericsError(
+                    f"non-finite logits in slot {s} "
+                    f"(rid={getattr(req, 'rid', None)})", slot=s)
+            # repair the transient plane before the slot is re-tenanted:
+            # the poison bytes outlive the cancelled request otherwise
+            sdc_lib.clear_hot_slot(ctx, s)
+            self._cancel_slot(ctx, s, "numerics")
+            ctx.stats.slots_quarantined += 1
 
     def _record_prefix(self, state: DecodeState, s: int, req: Request,
                        ptree: PrefixCache,
@@ -1566,6 +1786,7 @@ class Engine:
             # cached
             prefilling={},
             slot_pages=[[] for _ in range(n_slots)],
+            verified_len=[0] * n_slots,
             spec=self.spec,
             hot_cap=self.hot_cap,
             step_fn=step,
@@ -1708,6 +1929,11 @@ class Engine:
                 ctx.seq_mirror[s] = min(
                     ctx.seq_mirror[s] + n_steps, self.max_len)
         progress |= n_steps > 0
+        # -- SDC scrub: detect -> contain -> repair, BEFORE harvest —
+        # a ripe slot forces a scrub, so no request ever retires with
+        # an unverified tail (engine._scrub, "harvest gating")
+        if self.integrity is not None:
+            self._scrub(ctx)
         # -- sync point: harvest finished slots --------------------
         # (the slot table mirrors `allocated`, so only the small
         # `done` mask crosses the device boundary here)

@@ -71,18 +71,43 @@ class PagePoolError(RuntimeError):
 
 
 class PagePool:
-    """Free list + per-page reader counts for the physical page pool."""
+    """Free list + per-page reader counts for the physical page pool.
+
+    Quarantine (SDC repair ladder): a page whose stored bytes were found
+    corrupted (serving scrub crc mismatch) is permanently retired —
+    ``quarantine`` pulls it off the free list (or marks it so the next
+    ``decref`` to zero doesn't return it), and ``alloc`` never hands it
+    out again. The pool census becomes free ∪ referenced ∪ quarantined,
+    pairwise disjoint (``chaos.check_serving_invariants``)."""
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         self.refs = np.zeros(n_pages, np.int32)
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.quarantined: set = set()
+        # per-page birth counter, bumped on every alloc: a (page, born)
+        # pair names one LIFE of a physical page. The SDC scrub keys its
+        # crc stamps on it, so a page freed and re-allocated between
+        # scrubs can never false-positive against a stale stamp.
+        self.born = np.zeros(n_pages, np.int64)
+        self._alloc_seq = 0
 
     def available(self) -> int:
         return len(self._free)
 
     def used(self) -> int:
-        return self.n_pages - len(self._free)
+        return self.n_pages - len(self._free) - len(self.quarantined)
+
+    def quarantine(self, page: int) -> None:
+        """Retire ``page`` for good. Legal on a free page (removed from
+        the free list immediately) or a referenced one (readers drain
+        normally; the final decref parks it instead of freeing it)."""
+        p = int(page)
+        if p in self.quarantined:
+            return
+        self.quarantined.add(p)
+        if self.refs[p] == 0:
+            self._free.remove(p)
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Take ``n`` free pages (each born with one reader); None if the
@@ -92,6 +117,8 @@ class PagePool:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self.refs[p] = 1
+            self._alloc_seq += 1
+            self.born[p] = self._alloc_seq
         return pages
 
     def incref(self, pages: Sequence[int]) -> None:
@@ -104,14 +131,15 @@ class PagePool:
 
     def decref(self, pages: Sequence[int]) -> None:
         """Drop one reader per page; a page frees exactly when its count
-        hits zero. Counts never go negative (PagePoolError)."""
+        hits zero — unless it is quarantined, in which case it parks
+        (never reallocated). Counts never go negative (PagePoolError)."""
         for p in pages:
             if self.refs[p] <= 0:
                 raise PagePoolError(
                     "decref on free page", page=int(p),
                     refcount=int(self.refs[p]))
             self.refs[p] -= 1
-            if self.refs[p] == 0:
+            if self.refs[p] == 0 and int(p) not in self.quarantined:
                 self._free.append(int(p))
 
 
@@ -267,6 +295,45 @@ class PrefixCache:
         if not self.evict_for(n):
             return None
         return self.pool.alloc(n)
+
+    def evict_pages(self, pages: Sequence[int]) -> int:
+        """Force-evict every node referencing any of ``pages`` AND its
+        whole subtree (descendants extend a prefix that ran through the
+        damaged page — their cached rows are downstream of the fault and
+        must not be served). The tree's reader refs drop; the caller
+        quarantines the damaged pages themselves. Returns the number of
+        nodes removed. Part of the SDC repair ladder (docs/serving.md)."""
+        bad = {int(p) for p in pages}
+        victims = []
+        stack = list(self._root.children.values())
+        while stack:
+            node = stack.pop()
+            if any(int(p) in bad for p in node.pages):
+                victims.append(node)  # highest damaged node wins the cut
+            else:
+                stack.extend(node.children.values())
+        removed = 0
+        for v in victims:
+            sub = [v]
+            while sub:
+                node = sub.pop()
+                self.pool.decref(node.pages)
+                removed += 1
+                sub.extend(node.children.values())
+            v.parent.children.pop(v.key, None)
+        return removed
+
+    def flush(self) -> int:
+        """Drop the ENTIRE tree, decrefing every tree-held page: the
+        weight-fault response — every cached row was computed by a
+        possibly-corrupted matmul, so nothing in the tree can be trusted
+        after a weight reload. Returns the number of nodes removed."""
+        removed = 0
+        for node in self._nodes():
+            self.pool.decref(node.pages)
+            removed += 1
+        self._root.children.clear()
+        return removed
 
     def evict_for(self, n: int) -> bool:
         """Peel LRU childless nodes whose pages have no reader but the

@@ -73,6 +73,7 @@ class RouterStats:
     drains: int = 0
     failed: int = 0  # retry budget exhausted → outcome "failed"
     sheds: int = 0  # replica queue bounced an admission (re-dispatched)
+    sdc_retirements: int = 0  # replicas retired for repeated weight faults
 
 
 @dataclasses.dataclass
@@ -136,6 +137,7 @@ class Router:
         self._done: set = set()
         self._cancel: set = set()  # tombstones: cancel-before-terminal
         self._retired: set = set()  # replicas whose restart budget is spent
+        self._sdc_retired: set = set()  # retired for weight-fault strikes
         self._stop_token: Optional[int] = None
         # straggler flags already acted on, per replica (health sweep
         # reacts to NEW flags only)
@@ -370,11 +372,17 @@ class Router:
             self._requeue(req, avoid=rep.name, handoff=blob, backoff=False)
 
     def _health_sweep(self) -> None:
-        """React to degradation signals: NEW straggler flags from the
-        session monitor, or a heartbeat older than the timeout. Either
-        drains the replica (warm migration) — it stays live and may
-        receive fresh work once healthy iterations resume."""
+        """React to degradation signals: an engine that struck out on
+        repeated weight faults (``Engine.unhealthy`` — the ROM plane is
+        untrustworthy, see the SDC ladder in ``engine._scrub_weights``)
+        is permanently retired; NEW straggler flags from the session
+        monitor or a heartbeat older than the timeout drain the replica
+        (warm migration) — it stays live and may receive fresh work
+        once healthy iterations resume."""
         for rep in self._live():
+            if getattr(rep.engine, "unhealthy", False):
+                self._retire_sdc(rep)
+                continue
             flags = rep.straggler_flags()
             fresh = flags - self._flags_seen.get(rep.name, 0)
             self._flags_seen[rep.name] = flags
@@ -385,6 +393,24 @@ class Router:
                 unhealthy = True
             if unhealthy and rep.busy():
                 self._drain_replica(rep, "unhealthy")
+
+    def _retire_sdc(self, rep: Replica) -> None:
+        """Permanently retire a replica whose engine declared itself
+        ``unhealthy`` (weight-fault strike budget spent). Unlike a
+        straggler drain, the replica does NOT come back: its weight
+        storage keeps re-corrupting, so restarting it would only feed
+        the fleet more faults. The session is still live and its last
+        scrub verified every surviving slot, so in-flight work warm
+        migrates off with handoff payloads before the kill."""
+        self.stats.sdc_retirements += 1
+        if rep.busy():
+            self._drain_replica(rep, "sdc")
+        else:
+            self._collect(rep)
+        rep.seal()  # close the (now idle) session, keep its stats
+        rep.kill()
+        self._retired.add(rep.name)
+        self._sdc_retired.add(rep.name)
 
     def _restart_dead(self) -> None:
         """Bring dead replicas back through ``run_with_recovery`` (the

@@ -1,0 +1,393 @@
+"""Silent-data-corruption (SDC) fault model + the serving integrity knobs.
+
+BitROM's storage planes fail differently, and this module gives each
+plane a seeded, deterministic injector plus the typed errors and config
+the engine's detect -> contain -> repair ladder (engine._scrub,
+docs/serving.md "Fault model & SDC ladder") is built around:
+
+  * **ROM stuck-at faults** (:class:`RomFaultInjector`) — a fabricated
+    CiROM cell that reads wrong does so *persistently*: the same packed
+    word returns the same flipped bit on every access. The injector
+    draws (leaf, byte, bit) addresses from a seeded stream and
+    re-asserts each stuck bit after the engine repairs the leaf from
+    its golden copy, which is what makes "repeated faults at the same
+    address -> replica unhealthy -> Router retires it" a testable
+    ladder rung rather than a story.
+  * **DR-eDRAM retention decay** (:class:`RetentionInjector`) — KV
+    pages live in dynamic cells whose flip probability grows with time
+    since refresh (hwmodel.retention_failure_rate). The injector ages
+    every crc-stamped full page and flips a bit with probability
+    ``1 - (1 - rate)^age``, modelling a page that outlived its
+    retention window.
+  * **transient activation flips** (:func:`inject_activation_nan`) — a
+    one-shot NaN poked into a slot's hot-tier KV, the undetectable-by-
+    checksum case the NaN/Inf logit sentinel exists for.
+
+All injectors are *seeded and replayable*: same seed, same serve call,
+same fault schedule — the property CI's fixed-seed chaos lane pins.
+They mutate state only through public surfaces (host rebuild of packed
+leaves, ``write_pool_pages``, device ``.at[].set``) so every detection
+is of a real corruption, not a monkey-patched flag.
+
+Detection lives elsewhere, by design: crc32 + ABFT verification in
+models/pack.py + kernels/ops.py, the scrub loop in serving/engine.py.
+This module is only the adversary and the shared vocabulary
+(:class:`IntegrityConfig`, :class:`NumericsError`,
+:class:`WeightFaultError`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kv_cache
+from repro.models import pack as pack_lib
+
+
+class NumericsError(RuntimeError):
+    """Non-finite logits surfaced by the decode-step sentinel. Carries
+    the offending slot so the caller can map it back to a request."""
+
+    def __init__(self, msg: str, slot: Optional[int] = None):
+        super().__init__(msg)
+        self.slot = slot
+
+
+class WeightFaultError(RuntimeError):
+    """Packed weights failed their crc32 check at load time — the ROM
+    image is corrupt before serving even starts, so refusing to come up
+    beats serving garbage."""
+
+
+@dataclasses.dataclass
+class IntegrityConfig:
+    """Knobs for the engine's SDC scrub (``Engine(integrity=...)``).
+
+    ``scrub_every`` is the cadence in loop iterations; a scrub is
+    additionally FORCED whenever a slot is ripe for harvest, so no
+    request ever retires with unverified weights/KV behind it
+    ("harvest gating" — the bit-exactness guarantee leans on this).
+    """
+
+    scrub_every: int = 4  # iterations between scrubs (ripe slots force one)
+    scrub_weights: bool = True  # crc32 re-check of every packed leaf
+    scrub_pages: bool = True  # crc32 re-check of stamped full KV pages
+    abft_probe: bool = True  # ABFT checked-matmul probe per packed leaf
+    on_numerics: str = "contain"  # "contain" (retire slot) | "raise"
+    max_weight_strikes: int = 3  # repeated weight faults -> unhealthy
+
+
+# ---------------------------------------------------------------------------
+# dotted-path access into the packed tree (paths from iter_packed_leaves)
+# ---------------------------------------------------------------------------
+
+
+def get_leaf(tree, path: str):
+    """Fetch the packed leaf at a dotted path from ``iter_packed_leaves``."""
+    node = tree
+    for part in path.split("."):
+        node = _child(node, part)
+    return node
+
+
+def set_leaf(tree, path: str, leaf):
+    """Return a copy of ``tree`` with the leaf at ``path`` replaced.
+    Only the dicts along the path are rebuilt — sibling subtrees are
+    shared, so a repair does not churn unrelated device buffers."""
+    parts = path.split(".")
+
+    def rebuild(node, i):
+        if i == len(parts):
+            return leaf
+        key = _child_key(node, parts[i])
+        out = dict(node)
+        out[key] = rebuild(node[key], i + 1)
+        return out
+
+    return rebuild(tree, 0)
+
+
+def _child_key(node: dict, part: str):
+    for k in node:
+        if str(k) == part:
+            return k
+    raise KeyError(f"no child {part!r} in packed tree")
+
+
+def _child(node, part: str):
+    return node[_child_key(node, part)]
+
+
+# ---------------------------------------------------------------------------
+# ABFT probe: exercise the checked matmul against every packed leaf
+# ---------------------------------------------------------------------------
+
+
+def _leaf_slices(pw):
+    """Yield 2-D (K, N) views of a possibly layer/expert-stacked packed
+    leaf, metadata sliced in lock-step (scale, wsum)."""
+    if pw.packed.ndim == 2:
+        yield pw
+        return
+    for i in range(pw.packed.shape[0]):
+        sub = dataclasses.replace(
+            pw, packed=pw.packed[i], scale=pw.scale[i],
+            wsum=None if pw.wsum is None else pw.wsum[i])
+        yield from _leaf_slices(sub)
+
+
+def abft_verify_tree(params) -> List[str]:
+    """ABFT-probe every stamped packed leaf with the all-ones activation
+    and return the dotted paths whose checked matmul trips.
+
+    All-ones is the adversary's worst probe to hide from: every input
+    quantizes to qmax, so ANY trit change shifts the checked row-sum by
+    a full ``qmax * scale / x_scale`` — far above the float tolerance.
+    (The ABFT blind spot — rows whose activations quantize to zero —
+    cannot occur under this probe; in live traffic it is covered by the
+    exact crc32 check instead, see docs/kernels.md.)"""
+    from repro.core import bitlinear
+
+    bad = []
+    for path, pw in pack_lib.iter_packed_leaves(params):
+        if pw.wsum is None:
+            continue
+        for sub in _leaf_slices(pw):
+            x = jnp.ones((1, sub.k), jnp.float32)
+            try:
+                bitlinear.packed_matmul_checked(sub, x)
+            except bitlinear.AbftError:
+                bad.append(path)
+                break
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# ROM plane: persistent stuck-at faults in packed ternary words
+# ---------------------------------------------------------------------------
+
+
+def flip_packed_bit(params, path: str, index: int, bit: int):
+    """Flip one bit of one packed byte of the leaf at ``path`` (flat
+    ``index`` into the leaf's packed words) and return the rebuilt
+    tree. Host round-trip on purpose: the corrupted array has the same
+    aval as the original, so jitted step functions do NOT recompile —
+    exactly like a ROM cell silently reading wrong."""
+    pw = get_leaf(params, path)
+    words = np.asarray(pw.packed).copy()
+    flat = words.reshape(-1)
+    flat[index % flat.size] ^= np.uint8(1 << (bit % 8))
+    bad = dataclasses.replace(pw, packed=jnp.asarray(words))
+    return set_leaf(params, path, bad)
+
+
+class RomFaultInjector:
+    """Seeded stuck-at adversary over an engine's packed weights.
+
+    Each firing picks a fresh (leaf, byte, bit) address and flips it in
+    ``engine.params``. Addresses are *stuck*: after the engine's scrub
+    repairs the leaf from its golden copy, the next ``on_iteration``
+    re-asserts the flip (up to ``reassert`` times per address;
+    ``None`` = forever, which is what drives a replica to strike out
+    and get retired by the Router).
+    """
+
+    def __init__(self, seed: int, rate: float, reassert: Optional[int] = 1):
+        self._rng = np.random.default_rng(seed)
+        self.rate = rate
+        self.reassert = reassert
+        # live stuck addresses: (path, flat_index, bit, remaining asserts)
+        self.stuck: List[Tuple[str, int, int, Optional[int]]] = []
+        self.injected = 0  # total bit assertions applied
+        self.addresses = 0  # distinct stuck addresses minted
+
+    def on_iteration(self, engine, ctx) -> None:
+        del ctx
+        if self._rng.random() < self.rate:
+            leaves = list(pack_lib.iter_packed_leaves(engine.params))
+            if leaves:
+                path, pw = leaves[int(self._rng.integers(len(leaves)))]
+                n = int(np.asarray(pw.packed).size)
+                addr = (path, int(self._rng.integers(n)),
+                        int(self._rng.integers(8)), self.reassert)
+                self.stuck.append(addr)
+                self.addresses += 1
+        self._assert_stuck(engine)
+
+    def _assert_stuck(self, engine) -> None:
+        """(Re-)apply every live stuck bit whose leaf currently reads
+        clean — i.e. the engine repaired it, and the bad cell strikes
+        again. Leaves already failing crc are left alone so one address
+        is one fault per detection cycle."""
+        keep = []
+        for path, index, bit, remaining in self.stuck:
+            pw = get_leaf(engine.params, path)
+            from repro.core import packing
+
+            if pw.crc is not None and packing.packed_crc32(pw.packed) != pw.crc:
+                keep.append((path, index, bit, remaining))
+                continue  # still corrupt from a previous assert
+            if remaining is not None and remaining <= 0:
+                continue  # address burned out (bounded test mode)
+            engine.params = flip_packed_bit(engine.params, path, index, bit)
+            self.injected += 1
+            keep.append((path, index, bit,
+                         None if remaining is None else remaining - 1))
+        self.stuck = keep
+
+
+# ---------------------------------------------------------------------------
+# DR-eDRAM plane: retention decay of KV pages
+# ---------------------------------------------------------------------------
+
+
+class RetentionInjector:
+    """Seeded retention-decay adversary over stamped KV pool pages.
+
+    Tracks the age (iterations since stamping) of every page the
+    engine's scrub has crc-stamped, keyed by ``(page, born)`` so a
+    freed-and-reallocated page id starts a fresh life. Each iteration,
+    page P of age ``a`` flips one random bit with probability
+    ``1 - (1 - rate)^a`` — the discrete-time form of the retention
+    failure law in ``hwmodel.model.retention_failure_prob``.
+    """
+
+    def __init__(self, seed: int, rate: float):
+        self._rng = np.random.default_rng(seed)
+        self.rate = rate
+        self._age: Dict[Tuple[int, int], int] = {}
+        self.injected = 0  # total bit flips applied
+        self.pages_hit: set = set()  # distinct (page, born) lives corrupted
+
+    def on_iteration(self, engine, ctx) -> None:
+        del engine
+        stamped = getattr(ctx, "page_crc", None)
+        if not stamped or ctx.pool is None:
+            return
+        live = {(p, born) for p, (born, _) in stamped.items()}
+        self._age = {k: v + 1 for k, v in self._age.items() if k in live}
+        for key in sorted(live - set(self._age)):
+            self._age[key] = 0
+        victims = []
+        for key in sorted(self._age):
+            age = self._age[key]
+            p_fail = 1.0 - (1.0 - self.rate) ** max(age, 0)
+            if self._rng.random() < p_fail:
+                victims.append(key)
+        for key in victims:
+            p, born = key
+            # a stamp can be stale within one iteration (its page freed
+            # at harvest; the scrub drops it only next pass): decay of a
+            # dead page is unobservable, and its bytes may already
+            # belong to the page's next tenant — skip, don't count
+            if int(ctx.pool.born[p]) != born or ctx.pool.refs[p] <= 0:
+                del self._age[key]
+                continue
+            self._flip_page(ctx, p)
+            self.injected += 1
+            self.pages_hit.add(key)
+            del self._age[key]  # one decay event per page life
+
+    def _flip_page(self, ctx, page: int) -> None:
+        """Flip one bit somewhere in page ``page`` of one paged cache
+        stack, through the same gather/write surface the drain/restore
+        path uses — a real pool mutation, not a bookkeeping lie."""
+        caches = ctx.state.cache
+        keys = sorted(k for k in caches
+                      if hasattr(caches[k], "page_table"))
+        if not keys:
+            return
+        key = keys[int(self._rng.integers(len(keys)))]
+        cache = caches[key]
+        kp, vp = kv_cache.gather_pool_pages(cache, [page])
+        hit_k = bool(self._rng.random() < 0.5)
+        target = kp if hit_k else vp
+        raw = bytearray(np.ascontiguousarray(target).tobytes())
+        raw[int(self._rng.integers(len(raw)))] ^= 1 << int(
+            self._rng.integers(8))
+        flipped = np.frombuffer(bytes(raw), dtype=target.dtype
+                                ).reshape(target.shape)
+        kp, vp = (flipped, vp) if hit_k else (kp, flipped)
+        new_cache = kv_cache.write_pool_pages(cache, [page], kp, vp)
+        new_caches = dict(caches)
+        new_caches[key] = new_cache
+        ctx.state = ctx.state._replace(cache=new_caches)
+
+
+# ---------------------------------------------------------------------------
+# activation plane: transient non-finite values
+# ---------------------------------------------------------------------------
+
+
+def inject_activation_nan(ctx, slot: int) -> bool:
+    """Poison one live slot's hot-tier K with NaN — a transient compute
+    upset no checksum can catch (checksums cover *storage*). The decode
+    step's isfinite sentinel latches it into ``state.numerics_bad`` and
+    the scrub contains the slot. Returns True if a poke landed."""
+    caches = ctx.state.cache
+    keys = sorted(caches)
+    if not keys:
+        return False
+    cache = caches[keys[0]]
+    hot_k = getattr(cache, "hot_k", None)
+    if hot_k is None:
+        return False
+    if jnp.asarray(cache.lengths).ndim == 2:  # layer-stacked cache
+        poisoned = hot_k.at[:, slot].set(jnp.nan)
+    else:
+        poisoned = hot_k.at[slot].set(jnp.nan)
+    new_caches = dict(caches)
+    new_caches[keys[0]] = cache._replace(hot_k=poisoned)
+    ctx.state = ctx.state._replace(cache=new_caches)
+    return True
+
+
+def clear_hot_slot(ctx, slot: int) -> None:
+    """Zero one slot's poisonable KV storage — the repair step for the
+    transient plane. Containment alone is not enough: a NaN outlives
+    the cancelled request. Two leak paths are closed here:
+
+      * the hot tier — attention masking does not promise to ignore
+        stale rows, so the next tenant of the SLOT would latch the
+        sentinel with no new fault;
+      * the slot's sole-owned pool pages — the hot tier spills into the
+        cold frontier page as decode advances, and a freed page carries
+        its bytes to the next allocation, so the next tenant of the
+        PAGE would latch (or worse, read silently-wrong garbage).
+
+    Tree-shared pages (refcount > 1) are left alone: they are full,
+    append-frozen prompt pages written at prefill, before any transient
+    upset could reach them — and zeroing them would corrupt every other
+    reader of the shared prefix."""
+    caches = ctx.state.cache
+    own_pages = []
+    pool = getattr(ctx, "pool", None)
+    slot_pages = getattr(ctx, "slot_pages", None)
+    if pool is not None and slot_pages is not None:
+        own_pages = [p for p in slot_pages[slot] if pool.refs[p] == 1]
+    new_caches = dict(caches)
+    for key in sorted(caches):
+        cache = caches[key]
+        repl = {}
+        stacked = jnp.asarray(cache.lengths).ndim == 2
+        for field in ("hot_k", "hot_v"):
+            buf = getattr(cache, field, None)
+            if buf is None:
+                continue
+            repl[field] = (buf.at[:, slot].set(0) if stacked
+                           else buf.at[slot].set(0))
+        if own_pages:
+            idx = jnp.asarray(own_pages, jnp.int32)
+            for field in ("pool_k", "pool_v"):
+                buf = repl.get(field, getattr(cache, field, None))
+                if buf is None:
+                    continue
+                repl[field] = (buf.at[:, idx].set(0) if stacked
+                               else buf.at[idx].set(0))
+        if repl:
+            new_caches[key] = cache._replace(**repl)
+    ctx.state = ctx.state._replace(cache=new_caches)

@@ -64,3 +64,40 @@ def test_periphery_fraction():
     total = hw.macro_area_mm2(n)
     array = n * 1.58 / 1e3 / hw.BIT_DENSITY_KB_MM2
     assert (total - array) / total == pytest.approx(0.048, abs=1e-3)
+
+
+def test_retention_failure_prob_monotone_and_limits():
+    """DR-eDRAM retention: longer refresh intervals strictly raise the
+    per-bit failure probability, pinned to 0 at interval 0 and
+    saturating at 1 far beyond tau."""
+    assert hw.retention_failure_prob(0.0) == 0.0
+    probs = [hw.retention_failure_prob(t) for t in (1.0, 10.0, 100.0, 1000.0)]
+    assert all(b > a for a, b in zip(probs, probs[1:]))
+    assert all(0.0 < p < 1.0 for p in probs)
+    assert hw.retention_failure_prob(1e9) == pytest.approx(1.0)
+    assert hw.retention_failure_prob(hw.EDRAM_RETENTION_TAU_MS) == \
+        pytest.approx(1.0 - 2.718281828459045 ** -1.0)
+    with pytest.raises(ValueError):
+        hw.retention_failure_prob(-1.0)
+
+
+def test_refresh_tradeoff_power_vs_failures():
+    """The tradeoff the scrubber navigates: refresh power falls as 1/t
+    while expected bit failures rise — the two axes move in opposite
+    directions over the same interval sweep."""
+    nbytes = 13_500_000
+    rows = [hw.refresh_tradeoff(nbytes, t) for t in (5.0, 10.0, 50.0, 100.0)]
+    powers = [r["refresh_power_uw"] for r in rows]
+    fails = [r["expected_bit_failures"] for r in rows]
+    assert all(b < a for a, b in zip(powers, powers[1:]))
+    assert all(b > a for a, b in zip(fails, fails[1:]))
+    # halving the interval doubles refresh power exactly (energy per
+    # refresh pass is fixed; only the pass rate changes)
+    assert rows[0]["refresh_power_uw"] == pytest.approx(
+        2.0 * rows[1]["refresh_power_uw"])
+    assert rows[0]["expected_bit_failures"] == pytest.approx(
+        nbytes * 8 * hw.retention_failure_prob(5.0))
+    # interval 0: failure-free but unbounded refresh power
+    zero = hw.refresh_tradeoff(nbytes, 0.0)
+    assert zero["p_fail_per_bit"] == 0.0
+    assert zero["refresh_power_uw"] == float("inf")
